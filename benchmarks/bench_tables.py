@@ -1,0 +1,205 @@
+"""Paper-table benchmarks: Table II, Table III, Figs 4-9, prior-work deltas.
+
+One function per paper artifact; each returns a list of CSV rows
+(name, us_per_call, derived) — us_per_call is NaN for purely analytic
+artifacts (no kernel timed), and `derived` carries the reproduced value
+next to the paper's value where the paper states one.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel
+from repro.core.divider import VARIANTS, posit_divide
+from repro.core.posit import PositFormat
+
+
+def table2_rows():
+    """Table II: iterations + pipelined latency, exact reproduction."""
+    rows = []
+    ours = costmodel.table2()
+    for fmtname, vals in ours.items():
+        ref = costmodel.PAPER_TABLE2[fmtname]
+        ok = vals == ref
+        rows.append((f"table2/{fmtname}", float("nan"),
+                     f"r2_it={vals['r2_iterations']} r4_it={vals['r4_iterations']} "
+                     f"r2_lat={vals['r2_latency']} r4_lat={vals['r4_latency']} "
+                     f"match_paper={ok}"))
+    return rows
+
+
+def table3_rows():
+    """Table III: Posit10 worked termination/rounding examples, bit-exact."""
+    fmt = PositFormat(10)
+    X = int("0011010111", 2)
+    cases = [(X, int("0001001100", 2), int("0110011111", 2)),
+             (X, int("0000100110", 2), int("0111010000", 2))]
+    rows = []
+    for i, (x, d, want) in enumerate(cases):
+        got = int(posit_divide(fmt, jnp.asarray([x], dtype=jnp.uint32),
+                               jnp.asarray([d], dtype=jnp.uint32),
+                               "srt_r4_cs_of_fr")[0])
+        rows.append((f"table3/example{i+1}", float("nan"),
+                     f"got={got:010b} want={want:010b} match={got == want}"))
+    return rows
+
+
+def figs_synthesis_rows():
+    """Figs 4-9: cost-model area/delay/power/energy across variants."""
+    rows = []
+    for n in (16, 32, 64):
+        fmt = PositFormat(n)
+        for pipelined in (False, True):
+            kind = "pipelined" if pipelined else "combinational"
+            for v in VARIANTS:
+                r = costmodel.estimate(fmt, v, pipelined)
+                energy = r.energy_pipe_au if pipelined else r.energy_au
+                rows.append((
+                    f"fig{'7to9' if pipelined else '4to6'}/{kind}/posit{n}/{v}",
+                    float("nan"),
+                    f"area_ge={r.area_ge:.0f} delay_fo4={r.delay_fo4:.1f} "
+                    f"power_au={r.power_au:.0f} energy_au={energy:.0f} "
+                    f"cycles={r.cycles}"))
+    return rows
+
+
+def prior_work_rows():
+    """Section IV deltas vs [14] (two's-complement-decode digit recurrence).
+
+    [14] needs one extra iteration (signed significands) and a wider decode;
+    we model it as NRD + 1 iteration + 10% decode overhead and compare with
+    the paper's cited reductions.
+    """
+    rows = []
+    cited_delay = {16: 21.5, 32: None, 64: 4.2}           # NRD vs [14], %
+    cited_srt_delay = {16: 40.6, 32: 62.1, 64: 75.6}      # SRT CS r2 vs [14]
+    cited_srt_energy = {16: 50.2, 32: 70.9, 64: 81.4}
+    for n in (16, 32, 64):
+        fmt = PositFormat(n)
+        nrd = costmodel.estimate(fmt, "nrd", False)
+        srt = costmodel.estimate(fmt, "srt_r2_cs_of_fr", False)
+        # model of [14]: one extra iteration on the NRD datapath (+ overhead)
+        it = VARIANTS["nrd"].iterations(fmt)
+        prior_delay = nrd.delay_fo4 * (it + 1) / it * 1.10
+        prior_energy = nrd.energy_au * (it + 1) / it * 1.10
+        d_nrd = 100 * (1 - nrd.delay_fo4 / prior_delay)
+        d_srt = 100 * (1 - srt.delay_fo4 / prior_delay)
+        e_srt = 100 * (1 - srt.energy_au / prior_energy)
+        rows.append((f"prior14/posit{n}/nrd_delay_cut", float("nan"),
+                     f"model={d_nrd:.1f}% paper={cited_delay[n]}%"))
+        rows.append((f"prior14/posit{n}/srtr2cs_delay_cut", float("nan"),
+                     f"model={d_srt:.1f}% paper={cited_srt_delay[n]}%"))
+        rows.append((f"prior14/posit{n}/srtr2cs_energy_cut", float("nan"),
+                     f"model={e_srt:.1f}% paper={cited_srt_energy[n]}%"))
+    return rows
+
+
+def _time_call(f, *args, reps=5):
+    f(*args).block_until_ready() if hasattr(f(*args), "block_until_ready") else None
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def divider_throughput_rows():
+    """Measured throughput of the emulated dividers (CPU host; TPU target)."""
+    rows = []
+    rng = np.random.default_rng(0)
+    N = 1 << 16
+    for n in (8, 16, 32):
+        fmt = PositFormat(n)
+        px = jnp.asarray(rng.integers(0, 1 << n, N, dtype=np.uint64).astype(np.uint32))
+        pd = jnp.asarray(rng.integers(0, 1 << n, N, dtype=np.uint64).astype(np.uint32))
+        for v in ("nrd", "srt_r2_cs", "srt_r4_cs_of_fr", "srt_r4_scaled"):
+            us = _time_call(lambda a, b: posit_divide(fmt, a, b, v), px, pd)
+            rows.append((f"throughput/posit{n}/{v}", us,
+                         f"{N / us:.1f} Mdiv/s it={VARIANTS[v].iterations(fmt)}"))
+    # Pallas kernel (interpret mode on CPU)
+    from repro.kernels import ops
+
+    for n in (16, 32):
+        fmt = PositFormat(n)
+        px = jnp.asarray(rng.integers(0, 1 << n, N, dtype=np.uint64).astype(np.uint32))
+        pd = jnp.asarray(rng.integers(0, 1 << n, N, dtype=np.uint64).astype(np.uint32))
+        us = _time_call(lambda a, b: ops.posit_div(fmt, a, b), px, pd)
+        rows.append((f"throughput/posit{n}/pallas_srt_r4", us,
+                     f"{N / us:.1f} Mdiv/s interpret_mode"))
+    return rows
+
+
+def divider_hlo_flops_rows():
+    """Table II reproduced in compiled-artifact form: HLO ops per division.
+
+    Lowers the (unrolled) digit recurrence for 64k divisions and reports
+    cost_analysis flops per division; the radix-2 / radix-4 ratio should
+    track the paper's iteration ratio (14/8 for posit16, 30/16 for posit32).
+    """
+    import jax as _jax
+    from repro.core.divider import posit_divide as _div
+
+    rows = []
+    N = 1 << 16
+    for n in (16, 32):
+        fmt = PositFormat(n)
+        spec = _jax.ShapeDtypeStruct((N,), jnp.uint32)
+        flops = {}
+        for v in ("srt_r2_cs_of_fr", "srt_r4_cs_of_fr", "srt_r4_scaled"):
+            c = _jax.jit(lambda a, b, v=v: _div(fmt, a, b, v, True)
+                         ).lower(spec, spec).compile()
+            flops[v] = (c.cost_analysis() or {}).get("flops", 0.0) / N
+        it2 = VARIANTS["srt_r2_cs_of_fr"].iterations(fmt)
+        it4 = VARIANTS["srt_r4_cs_of_fr"].iterations(fmt)
+        ratio = flops["srt_r2_cs_of_fr"] / max(flops["srt_r4_cs_of_fr"], 1e-9)
+        rows.append((
+            f"table2_hlo/posit{n}", float("nan"),
+            f"flops_per_div r2={flops['srt_r2_cs_of_fr']:.0f} "
+            f"r4={flops['srt_r4_cs_of_fr']:.0f} "
+            f"scaled={flops['srt_r4_scaled']:.0f} "
+            f"r2/r4={ratio:.2f} paper_it_ratio={it2/it4:.2f}"))
+    return rows
+
+
+def radix16_rows():
+    """Beyond-paper design exploration: radix-16 (2 overlapped r4 stages)."""
+    rows = []
+    for n in (16, 32, 64):
+        fmt = PositFormat(n)
+        r4 = costmodel.estimate(fmt, "srt_r4_cs_of_fr", True)
+        r16 = costmodel.radix16_overlap_estimate(fmt, True)
+        rows.append((
+            f"beyond/radix16/posit{n}", float("nan"),
+            f"cycles {r4.cycles}->{r16.cycles} "
+            f"area_x{r16.area_ge/r4.area_ge:.2f} "
+            f"energy_x{r16.energy_pipe_au/r4.energy_pipe_au:.2f} "
+            f"latency_cut={100*(1-r16.cycles/r4.cycles):.0f}%"))
+    return rows
+
+
+def posit64_throughput_rows():
+    """Posit64 wide-datapath divider (3-limb BitVec) throughput + validation."""
+    import numpy as _np
+
+    from repro.core import wide
+    from repro.core.bitvec import bv_from_ints, bv_to_ints
+
+    rng = _np.random.default_rng(0)
+    cnt = 4096
+    px = _np.array([int(rng.integers(0, 1 << 63)) for _ in range(cnt)], dtype=object)
+    pd = _np.array([int(rng.integers(0, 1 << 63)) for _ in range(cnt)], dtype=object)
+    fmt = PositFormat(64)
+    bx, bd = bv_from_ints(px, 64), bv_from_ints(pd, 64)
+    rows = []
+    for v in ("srt_r2_cs_of_fr", "srt_r4_cs_of_fr"):
+        us = _time_call(lambda a, b, v=v: wide.posit_divide_wide(fmt, a, b, v),
+                        bx, bd)
+        rows.append((f"throughput/posit64/{v}", us,
+                     f"{cnt / us:.2f} Mdiv/s it={VARIANTS[v].iterations(fmt)}"))
+    return rows

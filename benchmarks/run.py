@@ -1,0 +1,55 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Analytic artifacts (tables/figures
+reproduced from the cost model) carry NaN timing; throughput rows time the
+actual JAX/Pallas dividers on this host.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the timed throughput section")
+    args = ap.parse_args()
+
+    from . import bench_tables as B
+
+    sections = [
+        ("Table II (iterations/latency)", B.table2_rows),
+        ("Table III (termination/rounding examples)", B.table3_rows),
+        ("Figs 4-9 (synthesis cost model)", B.figs_synthesis_rows),
+        ("Section IV deltas vs prior work [14]", B.prior_work_rows),
+        ("Table II in compiled HLO (flops/division)", B.divider_hlo_flops_rows),
+        ("Beyond-paper: radix-16 overlapped design point", B.radix16_rows),
+    ]
+    if not args.quick:
+        sections.append(("Posit64 wide-datapath divider", B.posit64_throughput_rows))
+    if not args.quick:
+        sections.append(("Divider throughput (this host)",
+                         B.divider_throughput_rows))
+
+    print("name,us_per_call,derived")
+    ok = True
+    for title, fn in sections:
+        print(f"# --- {title} ---")
+        try:
+            for name, us, derived in fn():
+                print(f'{name},{us:.3f},"{derived}"')
+                if "match" in derived and "False" in derived:
+                    ok = False
+        except Exception as e:  # noqa: BLE001
+            ok = False
+            print(f'{title},nan,"ERROR: {type(e).__name__}: {e}"')
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

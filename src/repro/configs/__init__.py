@@ -1,0 +1,42 @@
+"""Assigned architecture configs (one module per arch) + registry."""
+
+from importlib import import_module
+
+ARCH_IDS = (
+    "granite_8b",
+    "yi_34b",
+    "smollm_360m",
+    "llama3_405b",
+    "llama4_scout_17b_a16e",
+    "olmoe_1b_7b",
+    "seamless_m4t_medium",
+    "recurrentgemma_2b",
+    "mamba2_2p7b",
+    "internvl2_76b",
+)
+
+# canonical dashed names from the assignment
+ALIASES = {
+    "granite-8b": "granite_8b",
+    "yi-34b": "yi_34b",
+    "smollm-360m": "smollm_360m",
+    "llama3-405b": "llama3_405b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "internvl2-76b": "internvl2_76b",
+}
+
+
+def get_config(name: str, smoke: bool = False):
+    mod_name = ALIASES.get(name, name)
+    if mod_name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ALIASES)}")
+    mod = import_module(f"repro.configs.{mod_name}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False):
+    return {a: get_config(a, smoke) for a in ARCH_IDS}

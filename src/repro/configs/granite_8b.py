@@ -1,0 +1,14 @@
+"""Granite-8B (code) — llama-arch dense GQA [arXiv:2405.04324; hf]."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-8b", family="dense",
+    n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=49152, rope_theta=10000.0,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+    d_ff=256, vocab=512, attn_q_chunk=64, attn_kv_chunk=64,
+)

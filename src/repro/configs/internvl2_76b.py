@@ -1,0 +1,16 @@
+"""InternVL2-76B LLM backbone (InternViT frontend STUBBED: input_specs
+provides precomputed patch embeddings) [arXiv:2404.16821; unverified]."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=28672, vocab=128256, rope_theta=1000000.0,
+    num_patches=256,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+    d_ff=256, vocab=512, num_patches=16, attn_q_chunk=64, attn_kv_chunk=64,
+)

@@ -1,0 +1,15 @@
+"""Llama-3 405B — dense GQA, 128k vocab [arXiv:2407.21783; unverified]."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b", family="dense",
+    n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8,
+    d_ff=53248, vocab=128256, rope_theta=500000.0,
+    fsdp=True,  # params + optimizer state sharded over the data axis too
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+    d_ff=256, vocab=512, fsdp=False, attn_q_chunk=64, attn_kv_chunk=64,
+)

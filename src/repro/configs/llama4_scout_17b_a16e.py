@@ -1,0 +1,16 @@
+"""Llama-4 Scout 17B-A16E — MoE 16 experts top-1 [hf:meta-llama; unverified]."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=8192, vocab=202048, rope_theta=500000.0,
+    n_experts=16, experts_per_token=1,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+    d_ff=128, vocab=512, n_experts=4, experts_per_token=1,
+    attn_q_chunk=64, attn_kv_chunk=64,
+)

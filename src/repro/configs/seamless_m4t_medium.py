@@ -1,0 +1,18 @@
+"""SeamlessM4T-medium backbone — enc-dec, audio stub frontend
+[arXiv:2308.11596; hf].  The modality frontend is a STUB: input_specs
+provides precomputed frame embeddings (B, S_src, D)."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", family="encdec",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab=256206, rope_theta=10000.0,
+    enc_layers=12, dec_layers=12, src_frontend="audio_stub", src_len_ratio=4,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+    d_ff=256, vocab=512, enc_layers=2, dec_layers=2,
+    attn_q_chunk=64, attn_kv_chunk=64,
+)

@@ -1,0 +1,14 @@
+"""Yi-34B — llama-arch dense GQA [arXiv:2403.04652; hf]."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b", family="dense",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=20480, vocab=64000, rope_theta=5000000.0,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+    d_ff=256, vocab=512, attn_q_chunk=64, attn_kv_chunk=64,
+)

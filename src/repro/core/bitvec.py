@@ -1,0 +1,378 @@
+"""Fixed-width multi-limb bit vectors for hardware-faithful datapath emulation.
+
+The paper's dividers are fixed-width two's-complement / carry-save datapaths
+(Section III-E1: ``n - 2 + log2(r) - floor(rho)`` bits, wider with operand
+scaling).  JAX on TPU has no native int64, and we must not enable global x64,
+so datapaths are emulated as little-endian tuples of uint32 limbs with an
+explicit static ``width``.  All shift amounts are Python ints (they are wiring
+constants in the hardware), which keeps every op a handful of vector
+instructions.
+
+Two's-complement semantics: a BitVec of width W represents a value modulo
+2**W; ``sign``/``top_signed`` reinterpret the top bits as signed.  This is
+exactly the modular arithmetic the silicon datapath performs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_U32 = jnp.uint32
+_FULL = jnp.uint32(0xFFFFFFFF)
+
+
+def _nlimbs(width: int) -> int:
+    return (width + 31) // 32
+
+
+def _top_mask(width: int) -> int:
+    rem = width % 32
+    return 0xFFFFFFFF if rem == 0 else (1 << rem) - 1
+
+
+class BitVec:
+    """A fixed-width unsigned integer register file (vectorized over arrays)."""
+
+    __slots__ = ("limbs", "width")
+
+    def __init__(self, limbs, width: int):
+        assert len(limbs) == _nlimbs(width), (len(limbs), width)
+        self.limbs = tuple(limbs)
+        self.width = int(width)
+
+    @property
+    def shape(self):
+        return self.limbs[0].shape
+
+    def __repr__(self):
+        return f"BitVec(width={self.width}, limbs={self.limbs})"
+
+
+def _flatten(bv: BitVec):
+    return bv.limbs, bv.width
+
+
+def _unflatten(width, limbs):
+    return BitVec(tuple(limbs), width)
+
+
+jax.tree_util.register_pytree_node(BitVec, _flatten, _unflatten)
+
+
+# ---------------------------------------------------------------- builders
+
+
+def bv_mask(bv: BitVec) -> BitVec:
+    """Re-normalize the top limb to the declared width."""
+    limbs = list(bv.limbs)
+    limbs[-1] = limbs[-1] & _U32(_top_mask(bv.width))
+    return BitVec(limbs, bv.width)
+
+
+def bv_from_u32(x, width: int) -> BitVec:
+    """Build from a uint32 array holding a value < 2**min(width,32)."""
+    x = x.astype(_U32)
+    z = jnp.zeros_like(x)
+    limbs = [x] + [z] * (_nlimbs(width) - 1)
+    return bv_mask(BitVec(limbs, width))
+
+
+def bv_const(value: int, width: int, like) -> BitVec:
+    """Broadcast a Python int constant against the shape of ``like`` limbs."""
+    value &= (1 << width) - 1
+    limbs = []
+    for i in range(_nlimbs(width)):
+        limbs.append(jnp.full_like(like, (value >> (32 * i)) & 0xFFFFFFFF, dtype=_U32))
+    return BitVec(limbs, width)
+
+
+def bv_zeros(width: int, like) -> BitVec:
+    z = jnp.zeros_like(like, dtype=_U32)
+    return BitVec([z] * _nlimbs(width), width)
+
+
+def bv_resize(a: BitVec, width: int) -> BitVec:
+    """Zero-extend or truncate to a new width."""
+    n = _nlimbs(width)
+    limbs = list(a.limbs[:n])
+    while len(limbs) < n:
+        limbs.append(jnp.zeros_like(a.limbs[0]))
+    return bv_mask(BitVec(limbs, width))
+
+
+# ---------------------------------------------------------------- bitwise
+
+
+def bv_not(a: BitVec) -> BitVec:
+    return bv_mask(BitVec([~l for l in a.limbs], a.width))
+
+
+def bv_and(a: BitVec, b: BitVec) -> BitVec:
+    return BitVec([x & y for x, y in zip(a.limbs, b.limbs)], a.width)
+
+
+def bv_or(a: BitVec, b: BitVec) -> BitVec:
+    return BitVec([x | y for x, y in zip(a.limbs, b.limbs)], a.width)
+
+
+def bv_xor(a: BitVec, b: BitVec) -> BitVec:
+    return BitVec([x ^ y for x, y in zip(a.limbs, b.limbs)], a.width)
+
+
+# ---------------------------------------------------------------- arithmetic
+
+
+def bv_add(a: BitVec, b: BitVec) -> BitVec:
+    """Modular add (ripple carry across limbs)."""
+    assert a.width == b.width
+    out = []
+    carry = None
+    for x, y in zip(a.limbs, b.limbs):
+        s = x + y
+        c = (s < x).astype(_U32)
+        if carry is not None:
+            s2 = s + carry
+            c = c | (s2 < s).astype(_U32)
+            s = s2
+        out.append(s)
+        carry = c
+    return bv_mask(BitVec(out, a.width))
+
+
+def bv_add_bit(a: BitVec, bit) -> BitVec:
+    """Add a 0/1 uint32 array into the LSB (carry-in injection)."""
+    out = []
+    carry = bit.astype(_U32)
+    for x in a.limbs:
+        s = x + carry
+        carry = (s < x).astype(_U32)
+        out.append(s)
+    return bv_mask(BitVec(out, a.width))
+
+
+def bv_neg(a: BitVec) -> BitVec:
+    return bv_add_bit(bv_not(a), jnp.ones_like(a.limbs[0]))
+
+
+def bv_sub(a: BitVec, b: BitVec) -> BitVec:
+    return bv_add(a, bv_neg(b))
+
+
+# ---------------------------------------------------------------- shifts
+
+
+def bv_shl(a: BitVec, k: int) -> BitVec:
+    """Static left shift within the width."""
+    assert k >= 0
+    if k == 0:
+        return a
+    n = len(a.limbs)
+    ls, bs = divmod(k, 32)
+    z = jnp.zeros_like(a.limbs[0])
+    out = []
+    for i in range(n):
+        lo = a.limbs[i - ls] if 0 <= i - ls < n else z
+        if bs == 0:
+            out.append(lo)
+        else:
+            hi = a.limbs[i - ls - 1] if 0 <= i - ls - 1 < n else z
+            out.append(((lo << bs) | (hi >> (32 - bs))) & _FULL)
+    return bv_mask(BitVec(out, a.width))
+
+
+def bv_shr(a: BitVec, k: int) -> BitVec:
+    """Static logical right shift."""
+    assert k >= 0
+    if k == 0:
+        return a
+    n = len(a.limbs)
+    ls, bs = divmod(k, 32)
+    z = jnp.zeros_like(a.limbs[0])
+    out = []
+    for i in range(n):
+        lo = a.limbs[i + ls] if i + ls < n else z
+        if bs == 0:
+            out.append(lo)
+        else:
+            hi = a.limbs[i + ls + 1] if i + ls + 1 < n else z
+            out.append(((lo >> bs) | (hi << (32 - bs))) & _FULL)
+    return BitVec(out, a.width)
+
+
+# ---------------------------------------------------------------- queries
+
+
+def bv_sign(a: BitVec):
+    """MSB of the width (two's-complement sign) as bool."""
+    pos = a.width - 1
+    return ((a.limbs[pos // 32] >> (pos % 32)) & 1).astype(jnp.bool_)
+
+
+def bv_bit(a: BitVec, pos: int):
+    """Extract bit ``pos`` (0 = LSB) as uint32 0/1."""
+    return (a.limbs[pos // 32] >> (pos % 32)) & _U32(1)
+
+
+def bv_is_zero(a: BitVec):
+    acc = a.limbs[0]
+    for l in a.limbs[1:]:
+        acc = acc | l
+    return acc == 0
+
+
+def bv_top_signed(a: BitVec, t: int):
+    """Top ``t`` (<=32) bits as a sign-extended int32 (truncated estimate)."""
+    assert 1 <= t <= 32
+    top = bv_shr(a, a.width - t).limbs[0]
+    sh = 32 - t
+    return (top << sh).astype(jnp.int32) >> sh
+
+
+def bv_low_u32(a: BitVec):
+    return a.limbs[0]
+
+
+def bv_to_u32(a: BitVec):
+    """Value as uint32 (caller asserts width <= 32 semantically)."""
+    return a.limbs[0]
+
+
+def bv_eq(a: BitVec, b: BitVec):
+    acc = a.limbs[0] == b.limbs[0]
+    for x, y in zip(a.limbs[1:], b.limbs[1:]):
+        acc = acc & (x == y)
+    return acc
+
+
+# ---------------------------------------------------------------- select
+
+
+def bv_select(cond, a: BitVec, b: BitVec) -> BitVec:
+    """Elementwise cond ? a : b (cond bool array broadcastable)."""
+    assert a.width == b.width
+    return BitVec(
+        [jnp.where(cond, x, y) for x, y in zip(a.limbs, b.limbs)], a.width
+    )
+
+
+# ---------------------------------------------------------------- carry-save
+
+
+def bv_csa(a: BitVec, b: BitVec, c: BitVec):
+    """3:2 carry-save adder: returns (sum, carry<<1), sum+carry == a+b+c mod 2^W.
+
+    This is the paper's redundant-residual representation (Section III-B1):
+    one full-adder delay per iteration instead of a full carry propagation.
+    """
+    s = bv_xor(bv_xor(a, b), c)
+    maj = bv_or(bv_or(bv_and(a, b), bv_and(a, c)), bv_and(b, c))
+    return s, bv_shl(maj, 1)
+
+
+# ---------------------------------------------------------------- host I/O
+
+
+def bv_to_ints(a: BitVec):
+    """Device -> numpy object array of Python ints (test/debug only)."""
+    import numpy as np
+
+    limbs = [np.asarray(l, dtype=np.uint64) for l in a.limbs]
+    flat = [l.reshape(-1) for l in limbs]
+    out = []
+    for idx in range(flat[0].size):
+        v = 0
+        for i, l in enumerate(flat):
+            v |= int(l[idx]) << (32 * i)
+        out.append(v & ((1 << a.width) - 1))
+    import numpy as _np
+
+    arr = _np.array(out, dtype=object).reshape(limbs[0].shape)
+    return arr
+
+
+def bv_from_ints(vals, width: int) -> BitVec:
+    """numpy array of Python ints -> BitVec (test/debug only)."""
+    import numpy as np
+
+    vals = np.asarray(vals, dtype=object)
+    limbs = []
+    for i in range(_nlimbs(width)):
+        limbs.append(
+            jnp.asarray(
+                np.array(
+                    [((int(v) >> (32 * i)) & 0xFFFFFFFF) for v in vals.reshape(-1)],
+                    dtype=np.uint32,
+                ).reshape(vals.shape)
+            )
+        )
+    return bv_mask(BitVec(limbs, width))
+
+
+# ------------------------------------------------------------- dynamic shifts
+
+
+def _safe_shl32(x, s):
+    big = s >= 32
+    return jnp.where(big, _U32(0), x << jnp.where(big, 0, s).astype(_U32))
+
+
+def _safe_shr32(x, s):
+    big = s >= 32
+    return jnp.where(big, _U32(0), x >> jnp.where(big, 0, s).astype(_U32))
+
+
+def bv_shl_dyn(a: BitVec, s) -> BitVec:
+    """Left shift by a traced amount (0 <= s < width)."""
+    s = jnp.asarray(s).astype(jnp.int32)
+    n = len(a.limbs)
+    out = [jnp.zeros_like(a.limbs[0]) for _ in range(n)]
+    for ls in range(n):  # limb offset cases
+        bs = s - 32 * ls
+        for i in range(n):
+            j = i - ls
+            if j < 0:
+                continue
+            lo = _safe_shl32(a.limbs[j], bs)
+            hi = _safe_shr32(a.limbs[j - 1], 32 - bs) if j - 1 >= 0 else _U32(0)
+            contrib = jnp.where((bs >= 0) & (bs < 32), lo | hi, _U32(0))
+            out[i] = out[i] | contrib
+    return bv_mask(BitVec(out, a.width))
+
+
+def bv_shr_dyn(a: BitVec, s) -> BitVec:
+    """Logical right shift by a traced amount (0 <= s < width)."""
+    s = jnp.asarray(s).astype(jnp.int32)
+    n = len(a.limbs)
+    out = [jnp.zeros_like(a.limbs[0]) for _ in range(n)]
+    for ls in range(n):
+        bs = s - 32 * ls
+        for i in range(n):
+            j = i + ls
+            if j >= n:
+                continue
+            lo = _safe_shr32(a.limbs[j], bs)
+            hi = _safe_shl32(a.limbs[j + 1], 32 - bs) if j + 1 < n else _U32(0)
+            contrib = jnp.where((bs >= 0) & (bs < 32), lo | hi, _U32(0))
+            out[i] = out[i] | contrib
+    return BitVec(out, a.width)
+
+
+# ------------------------------------------------------------- comparisons
+
+
+def bv_ult(a: BitVec, b: BitVec):
+    """Unsigned a < b."""
+    lt = a.limbs[0] < b.limbs[0]
+    for x, y in zip(a.limbs[1:], b.limbs[1:]):
+        lt = jnp.where(x == y, lt, x < y)
+    return lt
+
+
+def bv_ugt(a: BitVec, b: BitVec):
+    return bv_ult(b, a)
+
+
+def bv_bit_dyn(a: BitVec, pos):
+    """Extract bit at a traced position as uint32 0/1."""
+    return bv_to_u32(bv_shr_dyn(a, pos)) & _U32(1)

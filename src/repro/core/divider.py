@@ -1,0 +1,396 @@
+"""Digit-recurrence posit division — all Table IV variants, bit-exact.
+
+Implements the paper's Algorithm 1 (NRD) and Algorithm 2 (generic radix-r SRT)
+over emulated fixed-width datapaths (:mod:`repro.core.bitvec`), with the
+optimizations of Section III-B:
+
+  * redundant (carry-save) residual           -> ``redundant_residual``
+  * on-the-fly quotient conversion (Eq 18-19) -> ``otf``
+  * fast sign/zero detection of the residual  -> ``fast_remainder`` (numerically
+    identical; modeled in the cost model)
+  * operand scaling (Table I, Eq 29)          -> ``scaling``
+
+Fraction convention: significands are treated as values in [1/2, 1) with
+``FRAC = F+1`` fractional bits (the paper's footnote 1 — equivalent to the
+posit [1,2) form).  The residual datapath has ``FRAC_W`` fractional bits and
+3 integer bits (two's complement), matching Section III-E1 sizing.
+
+Iterations: It = ceil(h / log2 r), h = n - 1 - floor(rho)   (Eq 30-31).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import seltables
+from .bitvec import (
+    BitVec,
+    bv_add,
+    bv_add_bit,
+    bv_and,
+    bv_bit,
+    bv_const,
+    bv_from_u32,
+    bv_is_zero,
+    bv_not,
+    bv_or,
+    bv_select,
+    bv_shl,
+    bv_shr,
+    bv_sign,
+    bv_sub,
+    bv_csa,
+    bv_to_u32,
+    bv_top_signed,
+    bv_zeros,
+)
+from .posit import PositFormat, posit_decode, posit_encode
+
+_U32 = jnp.uint32
+_I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class DividerConfig:
+    """One divider micro-architecture (a row of the paper's Table IV)."""
+
+    name: str
+    radix: int = 4
+    redundant_residual: bool = True
+    otf: bool = True
+    fast_remainder: bool = True
+    scaling: bool = False
+    nonrestoring: bool = False  # Algorithm 1 (digit set {-1, 1})
+
+    @property
+    def rho_num_den(self):
+        # radix-2 digit sets used here have rho = 1; radix-4 a=2 -> rho = 2/3.
+        return (1, 1) if self.radix == 2 else (2, 3)
+
+    @property
+    def rho_is_one(self) -> bool:
+        return self.radix == 2
+
+    @property
+    def p_shift(self) -> int:
+        """Initialization shift (Section III-C): w(0) = x / p."""
+        return 1 if self.rho_is_one else 2
+
+    @property
+    def log2r(self) -> int:
+        return 1 if self.radix == 2 else 2
+
+    def h(self, fmt: PositFormat) -> int:
+        """Quotient bits required (Eq 30): n - 1 - floor(rho)."""
+        return fmt.n - 1 - (1 if self.rho_is_one else 0)
+
+    def iterations(self, fmt: PositFormat) -> int:
+        """Eq 31."""
+        h = self.h(fmt)
+        return -(-h // self.log2r)
+
+
+VARIANTS = {
+    "nrd": DividerConfig("nrd", radix=2, redundant_residual=False, otf=False,
+                         fast_remainder=False, nonrestoring=True),
+    "srt_r2": DividerConfig("srt_r2", radix=2, redundant_residual=False,
+                            otf=False, fast_remainder=False),
+    "srt_r2_cs": DividerConfig("srt_r2_cs", radix=2, otf=False,
+                               fast_remainder=False),
+    "srt_r2_cs_of": DividerConfig("srt_r2_cs_of", radix=2,
+                                  fast_remainder=False),
+    "srt_r2_cs_of_fr": DividerConfig("srt_r2_cs_of_fr", radix=2),
+    "srt_r4_cs": DividerConfig("srt_r4_cs", otf=False, fast_remainder=False),
+    "srt_r4_cs_of": DividerConfig("srt_r4_cs_of", fast_remainder=False),
+    "srt_r4_cs_of_fr": DividerConfig("srt_r4_cs_of_fr"),
+    "srt_r4_scaled": DividerConfig("srt_r4_scaled", scaling=True),
+}
+
+DEFAULT_VARIANT = "srt_r4_cs_of_fr"
+
+_IB = 3  # residual integer bits incl sign: covers |r*w| < 4 for every variant
+
+
+def _widths(fmt: PositFormat, cfg: DividerConfig):
+    FRAC = fmt.F + 1
+    if cfg.scaling:
+        frac_w = FRAC + 3 + cfg.p_shift  # scaled operands carry 3 extra bits
+    else:
+        frac_w = FRAC + cfg.p_shift
+    W = frac_w + _IB
+    FP = cfg.iterations(fmt) * cfg.log2r - cfg.p_shift  # frac bits of quotient
+    WQ = FP + 2
+    return FRAC, frac_w, W, FP, WQ
+
+
+# ---------------------------------------------------------------------------
+# quotient-digit selection functions (Section III-D)
+# ---------------------------------------------------------------------------
+
+
+def _sel_nrd(west):
+    """Algorithm 1: q = 1 if w >= 0 else -1 (sign bit only)."""
+    return jnp.where(west >= 0, _I32(1), _I32(-1))
+
+
+def _sel_srt_r2_exact(yh):
+    """Eq 26 — non-redundant residual; yh = floor(2w) in units of 1/2."""
+    return jnp.where(yh >= 1, _I32(1), jnp.where(yh >= -1, _I32(0), _I32(-1)))
+
+
+def _sel_srt_r2_cs(yh):
+    """Eq 27 — carry-save estimate, units of 1/2 (4-bit estimate)."""
+    return jnp.where(yh >= 0, _I32(1), jnp.where(yh == -1, _I32(0), _I32(-1)))
+
+
+def _sel_srt_r4_cs(yh, didx):
+    """Eq 28 — carry-save estimate (units 1/16) + divisor interval table."""
+    m2 = jnp.take(jnp.asarray(seltables.RADIX4_M2, dtype=_I32), didx)
+    m1 = jnp.take(jnp.asarray(seltables.RADIX4_M1, dtype=_I32), didx)
+    m0 = jnp.take(jnp.asarray(seltables.RADIX4_M0, dtype=_I32), didx)
+    mm1 = jnp.take(jnp.asarray(seltables.RADIX4_MM1, dtype=_I32), didx)
+    return jnp.where(
+        yh >= m2, _I32(2),
+        jnp.where(yh >= m1, _I32(1),
+                  jnp.where(yh >= m0, _I32(0),
+                            jnp.where(yh >= mm1, _I32(-1), _I32(-2)))))
+
+
+def _sel_srt_r4_scaled(yh):
+    """Eq 29 — divisor-independent thresholds, units of 1/8 (6-bit estimate)."""
+    return jnp.where(
+        yh >= seltables.SCALED_M2, _I32(2),
+        jnp.where(yh >= seltables.SCALED_M1, _I32(1),
+                  jnp.where(yh >= seltables.SCALED_M0, _I32(0),
+                            jnp.where(yh >= seltables.SCALED_MM1, _I32(-1),
+                                      _I32(-2)))))
+
+
+def _cs_estimate(rws: BitVec, rwc: BitVec, tb: int):
+    """Truncated carry-save estimate: tb-bit modular sum of the top bits."""
+    t1 = bv_top_signed(rws, tb)
+    t2 = bv_top_signed(rwc, tb)
+    s = (t1 + t2) & ((1 << tb) - 1)
+    sh = 32 - tb
+    return (s << sh) >> sh  # sign-extend back to int32
+
+
+# ---------------------------------------------------------------------------
+# the recurrence
+# ---------------------------------------------------------------------------
+
+
+def _digit_addend(digit, d1: BitVec, d2: Optional[BitVec], zero: BitVec):
+    """-q*d as (addend, carry_in): positive digits add ~(q d) + 1."""
+    if d2 is None:  # radix 2
+        add = bv_select(digit == 1, bv_not(d1), bv_select(digit == -1, d1, zero))
+    else:
+        add = bv_select(
+            digit == 2, bv_not(d2),
+            bv_select(digit == 1, bv_not(d1),
+                      bv_select(digit == -1, d1,
+                                bv_select(digit == -2, d2, zero))))
+    cin = (digit > 0).astype(_U32)
+    return add, cin
+
+
+def _otf_update(Q: BitVec, QD: BitVec, digit, r: int):
+    """On-the-fly conversion, Eqs (18)-(19): concatenation, no carries."""
+    lr = 1 if r == 2 else 2
+    neg = digit < 0
+    pos = digit > 0
+    mag = jnp.abs(digit).astype(_U32)
+    Qs, QDs = bv_shl(Q, lr), bv_shl(QD, lr)
+    # Q'  = q >= 0 ? Q || q        : QD || (r - |q|)
+    q_app = jnp.where(neg, _U32(r) - mag, mag)
+    Qn = bv_or(bv_select(neg, QDs, Qs), bv_from_u32(q_app, Q.width))
+    # QD' = q > 0  ? Q || (q - 1)  : QD || ((r-1) - |q|)
+    qd_app = jnp.where(pos, mag - 1, _U32(r - 1) - mag)
+    QDn = bv_or(bv_select(pos, Qs, QDs), bv_from_u32(qd_app, Q.width))
+    return Qn, QDn
+
+
+def _plain_q_update(Q: BitVec, digit, r: int):
+    """Non-OTF accumulation q <- r*q + digit (digit may be negative)."""
+    lr = 1 if r == 2 else 2
+    Qs = bv_shl(Q, lr)
+    mag = jnp.abs(digit).astype(_U32)
+    addv = bv_from_u32(mag, Q.width)
+    return bv_select(digit < 0, bv_sub(Qs, addv), bv_add(Qs, addv))
+
+
+def _fraction_divide(fmt: PositFormat, cfg: DividerConfig, xsig, dsig,
+                     unroll: bool = False):
+    """Divide significands; returns (frac, t_adj, round_bit, sticky, rem_zero).
+
+    xsig/dsig: uint32, values in [2^F, 2^{F+1}) == fractions in [1/2, 1).
+    """
+    FRAC, frac_w, W, FP, WQ = _widths(fmt, cfg)
+    It = cfg.iterations(fmt)
+    r = cfg.radix
+    lr = cfg.log2r
+
+    if isinstance(xsig, BitVec):
+        from .bitvec import bv_resize
+
+        x = bv_resize(xsig, W)
+        d = bv_resize(dsig, W)
+        didx = (bv_to_u32(bv_shr(dsig, FRAC - 4)) & 7).astype(_I32)
+    else:
+        x = bv_from_u32(xsig, W)
+        d = bv_from_u32(dsig, W)
+        didx = ((dsig >> (FRAC - 4)) & 7).astype(_I32)
+
+    if cfg.scaling:
+        # Table I: M*v = v + (v >> s1) + (v >> s2), selected by 3 frac bits of d.
+
+        def scale(v: BitVec) -> BitVec:
+            v3 = bv_shl(v, 3)  # FRAC+3 fractional bits
+            cands1 = [bv_shr(v3, s) for s in (1, 2, 3)]
+            s1_map = jnp.asarray([s[0] for s in seltables.SCALING_SHIFTS], dtype=_I32)
+            s2_map = jnp.asarray(
+                [0 if s[1] is None else s[1] for s in seltables.SCALING_SHIFTS],
+                dtype=_I32)
+            s1 = jnp.take(s1_map, didx)
+            s2 = jnp.take(s2_map, didx)
+            t1 = bv_select(s1 == 1, cands1[0],
+                           bv_select(s1 == 2, cands1[1], cands1[2]))
+            z = bv_zeros(v.width, bv_to_u32(v))
+            t2 = bv_select(s2 == 1, cands1[0],
+                           bv_select(s2 == 3, cands1[2], z))
+            return bv_add(bv_add(v3, t1), t2)
+
+        x_s = scale(x)   # FRAC+3 frac bits, value < 2.25
+        d_s = scale(d)   # value in [1 - 1/64, 1 + 1/8]
+        # Align to frac_w fractional bits; w(0) = x*/4.
+        d_al = bv_shl(d_s, frac_w - (FRAC + 3))
+        w0 = bv_shl(x_s, frac_w - (FRAC + 3) - cfg.p_shift)
+    else:
+        d_al = bv_shl(d, frac_w - FRAC)
+        w0 = bv_shl(x, frac_w - FRAC - cfg.p_shift)
+
+    d2_al = bv_shl(d_al, 1) if r == 4 else None
+    zero = bv_zeros(W, bv_to_u32(w0))
+
+    # --- digit selection dispatcher --------------------------------------
+    if cfg.nonrestoring:
+        tb = None
+    elif not cfg.redundant_residual:
+        tb = _IB + 1
+    elif r == 2:
+        tb = _IB + 1          # 3 int + 1 frac (paper Section III-D2)
+    elif cfg.scaling:
+        tb = _IB + seltables.SCALED_G_FRAC  # 6 bits (Eq 29)
+    else:
+        tb = _IB + seltables.G_FRAC         # 7 bits (Eq 28)
+
+    def select_digit(rws, rwc):
+        if cfg.nonrestoring:
+            return _sel_nrd(jnp.where(bv_sign(rws), _I32(-1), _I32(0)))
+        if not cfg.redundant_residual:
+            yh = bv_top_signed(rws, tb)
+            return _sel_srt_r2_exact(yh)
+        yh = _cs_estimate(rws, rwc, tb)
+        if r == 2:
+            return _sel_srt_r2_cs(yh)
+        if cfg.scaling:
+            return _sel_srt_r4_scaled(yh)
+        return _sel_srt_r4_cs(yh, didx)
+
+    # --- quotient registers ----------------------------------------------
+    Q0 = bv_zeros(WQ, bv_to_u32(w0))
+    QD0 = bv_zeros(WQ, bv_to_u32(w0))
+
+    # --- the iteration body -----------------------------------------------
+    use_cs = cfg.redundant_residual
+
+    def body(_, carry):
+        ws, wc, Q, QD = carry
+        rws = bv_shl(ws, lr)
+        rwc = bv_shl(wc, lr) if use_cs else wc
+        digit = select_digit(rws, rwc)
+        add, cin = _digit_addend(digit, d_al, d2_al, zero)
+        if use_cs:
+            s, c = bv_csa(rws, rwc, add)
+            # inject the +1 of the two's complement into the free carry LSB
+            c_l = list(c.limbs)
+            c_l[0] = c_l[0] | cin
+            ws_n, wc_n = s, BitVec(c_l, W)
+        else:
+            ws_n = bv_add_bit(bv_add(rws, add), cin)
+            wc_n = wc  # unused zero
+        if cfg.otf:
+            Qn, QDn = _otf_update(Q, QD, digit, r)
+        else:
+            Qn = _plain_q_update(Q, digit, r)
+            QDn = QD  # converted at termination instead
+        return ws_n, wc_n, Qn, QDn
+
+    carry = (w0, zero if use_cs else bv_zeros(W, bv_to_u32(w0)), Q0, QD0)
+    if not use_cs:
+        carry = (w0, bv_zeros(W, bv_to_u32(w0)), Q0, QD0)
+    if unroll:
+        for i in range(It):
+            carry = body(i, carry)
+        ws, wc, Q, QD = carry
+    else:
+        ws, wc, Q, QD = jax.lax.fori_loop(0, It, body, carry)
+
+    # --- termination (Section III-F) ---------------------------------------
+    if use_cs:
+        wfull = bv_add(ws, wc)
+    else:
+        wfull = ws
+    neg = bv_sign(wfull)
+    if not cfg.otf:
+        QD = bv_add(Q, bv_const((1 << WQ) - 1, WQ, bv_to_u32(Q)))  # Q - 1
+    qf = bv_select(neg, QD, Q)
+    rem = bv_select(neg, bv_add(wfull, d_al), wfull)
+    rem_zero = bv_is_zero(rem)
+
+    # --- normalization + rounding ------------------------------------------
+    intbit = bv_bit(qf, FP).astype(jnp.bool_)
+    qfn = bv_select(intbit, qf, bv_shl(qf, 1))
+    t_adj = jnp.where(intbit, _I32(0), _I32(-1))
+    F = fmt.F
+    from .bitvec import bv_resize as _bv_resize
+
+    frac = _bv_resize(bv_shr(qfn, FP - F), F)  # BitVec: F may exceed 32 bits
+    round_bit = bv_bit(qfn, FP - F - 1)
+    low_mask = bv_const((1 << (FP - F - 1)) - 1, WQ, bv_to_u32(qfn))
+    sticky = (~bv_is_zero(bv_and(qfn, low_mask))) | (~rem_zero)
+    return frac, t_adj, round_bit, sticky, rem_zero
+
+
+# ---------------------------------------------------------------------------
+# public entry point
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def posit_divide(fmt: PositFormat, px, pd, variant: str = DEFAULT_VARIANT,
+                 unroll: bool = False):
+    """Bit-exact posit division Q = X / D on n-bit patterns (uint32 arrays)."""
+    cfg = VARIANTS[variant]
+    px = px.astype(_U32)
+    pd = pd.astype(_U32)
+    dx = posit_decode(fmt, px)
+    dd = posit_decode(fmt, pd)
+
+    sign = dx.sign ^ dd.sign
+    scale = dx.scale - dd.scale
+
+    frac, t_adj, round_bit, sticky, _ = _fraction_divide(fmt, cfg, dx.sig, dd.sig,
+                                                         unroll=unroll)
+
+    out_nar = dx.is_nar | dd.is_nar | dd.is_zero
+    out_zero = dx.is_zero & ~out_nar
+    return posit_encode(
+        fmt, sign, scale + t_adj, bv_to_u32(frac), round_bit, sticky,
+        out_zero, out_nar
+    )

@@ -1,0 +1,2 @@
+from .pipeline import DataConfig, SyntheticLMDataset, make_batch_specs  # noqa: F401
+from .tokenizer import ByteTokenizer  # noqa: F401

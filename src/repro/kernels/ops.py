@@ -1,0 +1,68 @@
+"""Public jit'd wrappers around the Pallas posit kernels.
+
+Handles arbitrary input shapes (flatten -> pad to block multiples -> kernel
+-> unpad), backend selection (interpret mode on CPU, compiled on TPU), and
+exposes the same signatures as the pure-jnp references in :mod:`ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.posit import PositFormat
+from . import posit_div as _div
+from . import posit_cast as _cast
+
+_DEFAULT_BLOCK = (64, 256)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _tile_2d(x, block):
+    """Flatten to (rows, bn) padded to block multiples; return unpad info."""
+    bm, bn = block
+    flat = x.reshape(-1)
+    total = flat.shape[0]
+    cols = bn
+    rows = -(-total // cols)
+    rows_pad = -(-rows // bm) * bm
+    pad = rows_pad * cols - total
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows_pad, cols), total
+
+
+def posit_div(fmt: PositFormat, px, pd, block=_DEFAULT_BLOCK, interpret=None):
+    """Elementwise posit division on bit-pattern arrays (any shape)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    shape = px.shape
+    x2, total = _tile_2d(px.astype(jnp.uint32), block)
+    d2, _ = _tile_2d(pd.astype(jnp.uint32), block)
+    # padding lanes divide 0/0 -> NaR; harmless and discarded.
+    out = _div.posit_div_pallas(fmt, x2, d2, block, interpret)
+    return out.reshape(-1)[:total].reshape(shape)
+
+
+def posit_quantize(fmt: PositFormat, x, block=_DEFAULT_BLOCK, interpret=None):
+    """float32 -> posit bit patterns (any shape)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    shape = x.shape
+    x2, total = _tile_2d(x.astype(jnp.float32), block)
+    out = _cast.posit_quantize_pallas(fmt, x2, block, interpret)
+    return out.reshape(-1)[:total].reshape(shape)
+
+
+def posit_dequantize(fmt: PositFormat, p, block=_DEFAULT_BLOCK, interpret=None):
+    """posit bit patterns -> float32 (any shape)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    shape = p.shape
+    p2, total = _tile_2d(p.astype(jnp.uint32), block)
+    out = _cast.posit_dequantize_pallas(fmt, p2, block, interpret)
+    return out.reshape(-1)[:total].reshape(shape)

@@ -1,0 +1,169 @@
+"""Pallas TPU kernel: batched posit division (SRT radix-4, CS residual, OTF).
+
+TPU adaptation of the paper's best divider (Table IV, ``SRT CS OF FR``,
+radix 4): each 8x128 vector lane is one divider instance, the carry-save
+residual pair lives in VREGs across all iterations, and the quotient-digit
+selection is a branchless compare ladder on the truncated CS estimate.
+
+Datapath trick (vs. the generic BitVec emulation): residuals are kept on the
+operand grid (F+1 fraction bits) by folding the w(0) = x/4 initialization
+into the first iteration — y_1 = 4*w(0) = x exactly — so the whole radix-4
+carry-save datapath fits a single int32 word for every n <= 32:
+3 integer bits + F+1 <= 28 fraction bits, left-aligned at bit 29.
+
+The kernel is elementwise; BlockSpec tiles the operands into VMEM blocks and
+the grid walks the padded 2D array.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import seltables
+from repro.core.posit import PositFormat, posit_decode, posit_encode
+
+_U32 = jnp.uint32
+_I32 = jnp.int32
+
+# Residual binary point: 3 integer bits (incl. sign) at the top of int32.
+_WPOINT = 29
+
+
+def _lut8(table, idx):
+    """8-entry lookup as a compare ladder of scalar constants (VMEM-free)."""
+    out = jnp.full_like(idx, table[7])
+    for i in range(7):
+        out = jnp.where(idx == i, _I32(table[i]), out)
+    return out
+
+
+def _sel_r4(est, didx):
+    """Radix-4 selection (Eq 28): est in units of 1/16, didx in [0, 8)."""
+    m2 = _lut8(seltables.RADIX4_M2, didx)
+    m1 = _lut8(seltables.RADIX4_M1, didx)
+    m0 = _lut8(seltables.RADIX4_M0, didx)
+    mm1 = _lut8(seltables.RADIX4_MM1, didx)
+    return jnp.where(
+        est >= m2, _I32(2),
+        jnp.where(est >= m1, _I32(1),
+                  jnp.where(est >= m0, _I32(0),
+                            jnp.where(est >= mm1, _I32(-1), _I32(-2)))))
+
+
+def _cs_est(rws, rwc):
+    """7-bit truncated carry-save estimate of the shifted residual."""
+    t = ((rws >> (_WPOINT - 4)) + (rwc >> (_WPOINT - 4))) & _I32(0x7F)
+    return (t << 25) >> 25  # sign-extend 7 bits
+
+
+def _otf(Q, QD, digit):
+    """On-the-fly conversion step (Eqs 18-19), radix 4."""
+    neg = digit < 0
+    pos = digit > 0
+    mag = jnp.abs(digit).astype(_U32)
+    Qs, QDs = Q << 2, QD << 2
+    Qn = jnp.where(neg, QDs | (_U32(4) - mag), Qs | mag)
+    QDn = jnp.where(pos, Qs | (mag - 1), QDs | (_U32(3) - mag))
+    return Qn, QDn
+
+
+def _divide_block(fmt: PositFormat, px, pd):
+    """The divider datapath on one block (pure jnp; used inside the kernel)."""
+    F = fmt.F
+    FRAC = F + 1
+    It = -(-(fmt.n - 1) // 2)  # ceil(h/2), h = n-1 (rho = 2/3)
+    SH = _WPOINT - FRAC
+    assert SH >= 1, fmt
+
+    dx = posit_decode(fmt, px)
+    dd = posit_decode(fmt, pd)
+
+    x_al = (dx.sig << SH).astype(_I32)   # x in [1/2,1) at 29 frac bits
+    d_al = (dd.sig << SH).astype(_I32)
+    didx = ((dd.sig >> (FRAC - 4)) & 7).astype(_I32)
+    d2 = d_al << 1
+
+    def addend_for(digit):
+        add = jnp.where(
+            digit == 2, ~d2,
+            jnp.where(digit == 1, ~d_al,
+                      jnp.where(digit == -1, d_al,
+                                jnp.where(digit == -2, d2, _I32(0)))))
+        cin = (digit > 0).astype(_I32)
+        return add, cin
+
+    # Iteration 1 folded: y_1 = 4*w(0) = x exactly (w(0) = x/4).
+    est = _cs_est(x_al, jnp.zeros_like(x_al))
+    digit = _sel_r4(est, didx)
+    add, cin = addend_for(digit)
+    ws = x_al ^ add
+    wc = ((x_al & add) << 1) | cin
+    Q, QD = _otf(jnp.zeros_like(px), jnp.zeros_like(px), digit)
+
+    def body(_, carry):
+        ws, wc, Q, QD = carry
+        rws, rwc = ws << 2, wc << 2
+        digit = _sel_r4(_cs_est(rws, rwc), didx)
+        add, cin = addend_for(digit)
+        s = rws ^ rwc ^ add
+        c = (((rws & rwc) | (rws & add) | (rwc & add)) << 1) | cin
+        Qn, QDn = _otf(Q, QD, digit)
+        return s, c, Qn, QDn
+
+    ws, wc, Q, QD = jax.lax.fori_loop(0, It - 1, body, (ws, wc, Q, QD))
+
+    # Termination: sign/zero of the final residual (the FR lookahead in HW).
+    wfull = ws + wc
+    neg = wfull < 0
+    qf = jnp.where(neg, QD, Q)
+    rem = jnp.where(neg, wfull + d_al, wfull)
+    rem_nz = rem != 0
+
+    # q = qf * 2^-(2It-2) in (1/2, 2); normalize and round.
+    FP = 2 * It - 2
+    intbit = ((qf >> FP) & 1).astype(jnp.bool_)
+    qn = jnp.where(intbit, qf, qf << 1)
+    t_adj = jnp.where(intbit, _I32(0), _I32(-1))
+    frac = (qn >> (FP - F)).astype(_U32) & _U32((1 << F) - 1)
+    round_bit = (qn >> (FP - F - 1)) & 1
+    sticky = ((qn & ((1 << (FP - F - 1)) - 1)) != 0) | rem_nz
+
+    sign = dx.sign ^ dd.sign
+    scale = dx.scale - dd.scale + t_adj
+    out_nar = dx.is_nar | dd.is_nar | dd.is_zero
+    out_zero = dx.is_zero & ~out_nar
+    return posit_encode(fmt, sign, scale, frac, round_bit, sticky, out_zero, out_nar)
+
+
+def _kernel(x_ref, d_ref, o_ref, *, fmt: PositFormat):
+    o_ref[...] = _divide_block(fmt, x_ref[...], d_ref[...])
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5))
+def posit_div_pallas(
+    fmt: PositFormat,
+    px,
+    pd,
+    block=(64, 256),
+    interpret: bool = True,
+    vmem_limit_bytes: int = 64 * 1024 * 1024,
+):
+    """Tiled Pallas divider over a 2D uint32 array (pre-padded by ops.py)."""
+    assert px.ndim == 2 and px.shape == pd.shape
+    bm, bn = block
+    m, n = px.shape
+    assert m % bm == 0 and n % bn == 0, (px.shape, block)
+    grid = (m // bm, n // bn)
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_kernel, fmt=fmt),
+        out_shape=jax.ShapeDtypeStruct(px.shape, jnp.uint32),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        interpret=interpret,
+    )(px.astype(_U32), pd.astype(_U32))

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the posit kernels.
+
+``posit_div_ref`` uses plain *restoring* long division — a code path that is
+structurally independent from both the SRT carry-save recurrence in the
+Pallas kernel and the BitVec datapath emulation in ``repro.core.divider`` —
+so bit-agreement between the three is a strong correctness signal.  The
+shared decode/encode comes from :mod:`repro.core.posit`, which is validated
+exhaustively against the pure-Python golden model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.posit import PositFormat, posit_decode, posit_encode
+
+_U32 = jnp.uint32
+_I32 = jnp.int32
+
+
+def posit_div_ref(fmt: PositFormat, px, pd):
+    """Correctly-rounded posit division via restoring long division (n <= 32)."""
+    F = fmt.F
+    FRAC = F + 1  # operand fraction bits; values in [1/2, 1)
+    assert FRAC + 2 <= 31, "restoring datapath must fit int32"
+
+    px = px.astype(_U32)
+    pd = pd.astype(_U32)
+    dx = posit_decode(fmt, px)
+    dd = posit_decode(fmt, pd)
+
+    x = dx.sig.astype(_I32)
+    d = dd.sig.astype(_I32)
+
+    # Integer bit first (x/d in (1/2, 2)), keeping the remainder in [0, d).
+    b0 = x >= d
+    w0 = jnp.where(b0, x - d, x)
+    steps = F + 2  # F fraction bits + round bit + 1 sticky bit
+
+    def body(_, carry):
+        w, q = carry
+        w = w << 1
+        ge = w >= d
+        w = jnp.where(ge, w - d, w)
+        q = (q << 1) | ge.astype(_U32)
+        return w, q
+
+    w, q = jax.lax.fori_loop(0, steps, body, (w0, b0.astype(_U32)))
+
+    # q = floor(x/d * 2^(F+2)), value q * 2^-(F+2) in (1/2, 2).
+    FP = F + 2
+    intbit = ((q >> FP) & 1).astype(jnp.bool_)
+    qn = jnp.where(intbit, q, q << 1)
+    t_adj = jnp.where(intbit, _I32(0), _I32(-1))
+    frac = (qn >> 2) & _U32((1 << F) - 1)
+    round_bit = (qn >> 1) & 1
+    sticky = ((qn & 1) != 0) | (w != 0)
+
+    sign = dx.sign ^ dd.sign
+    scale = dx.scale - dd.scale + t_adj
+    out_nar = dx.is_nar | dd.is_nar | dd.is_zero
+    out_zero = dx.is_zero & ~out_nar
+    return posit_encode(fmt, sign, scale, frac, round_bit, sticky, out_zero, out_nar)
+
+
+def posit_quantize_ref(fmt: PositFormat, x):
+    """float32 -> posit bits (RNE), reference for the cast kernel."""
+    from repro.core.posit import float_to_posit
+
+    return float_to_posit(fmt, x)
+
+
+def posit_dequantize_ref(fmt: PositFormat, p):
+    """posit bits -> float32, reference for the cast kernel."""
+    from repro.core.posit import posit_to_float
+
+    return posit_to_float(fmt, p)

@@ -1,0 +1,57 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Wire-format experiment: posit16 ring all-reduce vs f32 psum on the pod axis.
+
+Lowers both collectives on the production multi-pod mesh for a 128M-gradient
+shard and parses the collective instructions from the compiled HLO — showing
+the actual bytes-on-wire reduction of shipping gradients as 16-bit posit
+patterns across the slow pod interconnect (EXPERIMENTS.md §Perf, cell 1).
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.posit import PositFormat
+from repro.launch import dryrun as DR
+from repro.launch import mesh as M
+from repro.optim.grad_compress import posit_ring_all_reduce
+
+
+def main():
+    mesh = M.make_production_mesh(multi_pod=True)
+    n = 128 * 1024 * 1024 // 4  # a 128 MiB f32 gradient shard per device group
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    sh = NamedSharding(mesh, P())
+
+    def f32_psum(g):
+        return jax.shard_map(lambda v: jax.lax.psum(v, "pod"),
+                             mesh=mesh, in_specs=P(), out_specs=P(),
+                             check_vma=False)(g)
+
+    def posit_ring(g):
+        return jax.shard_map(
+            lambda v: posit_ring_all_reduce(v, "pod", PositFormat(16)),
+            mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False)(g)
+
+    out = {}
+    with mesh:
+        for name, fn in (("f32_psum", f32_psum), ("posit16_ring", posit_ring)):
+            c = jax.jit(fn, in_shardings=sh).lower(spec).compile()
+            coll = DR.parse_collectives(c.as_text())
+            total = sum(v["bytes"] for v in coll.values())
+            out[name] = {"collectives": coll, "wire_bytes": total}
+            print(f"{name}: {total/2**20:.1f} MiB on wire  {coll}")
+    ratio = out["f32_psum"]["wire_bytes"] / max(out["posit16_ring"]["wire_bytes"], 1)
+    out["wire_reduction"] = ratio
+    print(f"wire reduction: {ratio:.2f}x")
+    os.makedirs("experiments/hillclimb", exist_ok=True)
+    with open("experiments/hillclimb/grad_compress_wire.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

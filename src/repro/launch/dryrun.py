@@ -1,0 +1,270 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves (without hardware):
+  * the sharding config is coherent (SPMD partitioning succeeds),
+  * the program fits (memory_analysis),
+  * and records cost_analysis + the collective schedule for §Roofline.
+
+The 512 virtual host devices exist ONLY in this entry point (the env var
+above must precede any jax import — device count locks at first init).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all [--mesh both] [--out experiments/dryrun]
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k --posit
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALIASES, get_config
+from repro.data.pipeline import make_batch_specs
+from repro.launch import mesh as M
+from repro.models import transformer as T
+from repro.models import sharding as SH
+from repro.models import layers as L
+from repro.train.trainer import TrainConfig, make_train_step
+
+# shape table: name -> (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# per-arch gradient-accumulation microbatches for train_4k (memory fitting)
+TRAIN_MICROBATCHES = {
+    "llama3-405b": 8, "internvl2-76b": 4, "yi-34b": 2,
+    "llama4-scout-17b-a16e": 2, "granite-8b": 1, "smollm-360m": 1,
+    "olmoe-1b-7b": 1, "seamless-m4t-medium": 1, "recurrentgemma-2b": 1,
+    "mamba2-2.7b": 1,
+}
+
+_COLL_RE = re.compile(
+    r"= ((?:\([^)]*\))|(?:\w+\[[\d,]*\]\S*)) (all-reduce|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute)\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "pred": 1, "s8": 1,
+                "u8": 1}
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum result bytes per collective kind (each instruction counted once)."""
+    out: Dict[str, Dict[str, float]] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_s, kind = m.group(1), m.group(2)
+        b = 0
+        for sm in _SHAPE_RE.finditer(shape_s):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            b += n * _DTYPE_BYTES.get(dt, 4)
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += b
+    return out
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention arch: 512k dense decode is O(S^2); only "
+                "SSM/hybrid archs run long_500k (DESIGN.md §6)")
+    return None
+
+
+def _seq_adjust(cfg, seq_len):
+    """VLM consumes num_patches positions of the cell's seq_len budget."""
+    if cfg.family == "vlm":
+        return seq_len - cfg.num_patches
+    return seq_len
+
+
+def build_cell(arch: str, shape: str, mesh, *, posit: bool = False,
+               analysis_overrides: Optional[dict] = None):
+    """Returns (jitted_fn, example_args_shapes) ready to lower."""
+    seq_len, global_batch, kind = SHAPES[shape]
+    cfg = get_config(arch)
+    if posit:
+        cfg = cfg.with_numerics(posit_division=True, div_format="posit16")
+    if analysis_overrides:
+        cfg = cfg.replace(**{k: v for k, v in analysis_overrides.items()
+                             if k not in ("microbatches", "seq_len", "global_batch")})
+        seq_len = analysis_overrides.get("seq_len", seq_len)
+        global_batch = analysis_overrides.get("global_batch", global_batch)
+
+    batch_sharded = global_batch % (mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)) == 0
+    full_dp = cfg.tp_disable and global_batch % mesh.size == 0
+    rules = M.arch_rules(cfg, mesh, batch_sharded=batch_sharded)
+    if full_dp:
+        rules = {**rules, "batch": tuple(mesh.axis_names)}
+
+    if kind == "train":
+        mb = TRAIN_MICROBATCHES.get(arch, 1)
+        if analysis_overrides and "microbatches" in analysis_overrides:
+            mb = analysis_overrides["microbatches"]
+        tc = TrainConfig(steps=1000, microbatches=mb)
+        state_shapes = jax.eval_shape(
+            lambda k: __import__("repro.train.trainer", fromlist=["x"]).init_train_state(cfg, tc, k),
+            jax.random.PRNGKey(0))
+        batch_shapes = make_batch_specs(cfg, global_batch, _seq_adjust(cfg, seq_len))
+        s_shard = M.named(mesh, M.state_pspecs(cfg, state_shapes, mesh))
+        b_shard = M.named(mesh, M.batch_pspecs(cfg, batch_shapes, mesh,
+                                               batch_sharded=batch_sharded,
+                                               full_dp=full_dp))
+        raw_step = make_train_step(cfg, tc)
+
+        def step(state, batch):
+            with SH.use_rules(rules):
+                return raw_step(state, batch)
+
+        fn = jax.jit(step, in_shardings=(s_shard, b_shard), donate_argnums=0)
+        return fn, (state_shapes, batch_shapes), cfg
+
+    if kind == "prefill":
+        params_shapes = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                                       jax.random.PRNGKey(0))
+        batch_shapes = make_batch_specs(cfg, global_batch, _seq_adjust(cfg, seq_len))
+        p_shard = M.named(mesh, M.param_pspecs(cfg, params_shapes, mesh))
+        b_shard = M.named(mesh, M.batch_pspecs(cfg, batch_shapes, mesh,
+                                               batch_sharded=batch_sharded))
+
+        def prefill_step(params, batch):
+            with SH.use_rules(rules):
+                h = T.forward(params, cfg, batch)
+                return L.logits(params["embed"], h[:, -1:], cfg)
+
+        fn = jax.jit(prefill_step, in_shardings=(p_shard, b_shard))
+        return fn, (params_shapes, batch_shapes), cfg
+
+    # decode
+    params_shapes = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                                   jax.random.PRNGKey(0))
+    cache_shapes = jax.eval_shape(
+        lambda: T.init_cache(cfg, global_batch, seq_len))
+    p_shard = M.named(mesh, M.param_pspecs(cfg, params_shapes, mesh))
+    c_shard = M.named(mesh, M.cache_pspecs(cfg, cache_shapes, mesh,
+                                           batch_sharded=batch_sharded))
+    tok_shape = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)
+    pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, cache, tok, pos):
+        with SH.use_rules(rules):
+            return T.decode_step(params, cfg, cache, tok, pos)
+
+    fn = jax.jit(serve_step, in_shardings=(
+        p_shard, c_shard,
+        M.named(mesh, M.batch_pspecs(cfg, {"t": tok_shape}, mesh,
+                                     batch_sharded=batch_sharded))["t"],
+        M.named(mesh, jax.tree.map(lambda _: jax.sharding.PartitionSpec(), pos_shape))),
+        donate_argnums=1)
+    return fn, (params_shapes, cache_shapes, tok_shape, pos_shape), cfg
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, posit: bool = False,
+             out_dir: str = "experiments/dryrun") -> dict:
+    t0 = time.time()
+    reason = skip_reason(arch, shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "posit": posit}
+    if reason:
+        rec.update(status="skipped", reason=reason, total_s=0.0)
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape}_{mesh_kind}" + ("_posit" if posit else "")
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = M.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    try:
+        with mesh:
+            fn, args, cfg = build_cell(arch, shape, mesh, posit=posit)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            coll = parse_collectives(compiled.as_text())
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            devices=int(mesh.size),
+            memory={
+                "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                "output_bytes": getattr(ma, "output_size_in_bytes", None),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+            },
+            cost={k: v for k, v in ca.items()
+                  if k in ("flops", "transcendentals", "bytes accessed")},
+            collectives=coll,
+            note="cost_analysis counts while-loop bodies once; see roofline.py "
+                 "for trip-count-corrected numbers",
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, don't crash the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    rec["total_s"] = round(time.time() - t0, 1)
+
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}_{shape}_{mesh_kind}" + ("_posit" if posit else "")
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str)
+    ap.add_argument("--shape", type=str, choices=list(SHAPES))
+    ap.add_argument("--mesh", type=str, default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--posit", action="store_true",
+                    help="enable posit-division numerics for this cell")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in ALIASES:
+            for shape in SHAPES:
+                for mk in meshes:
+                    cells.append((arch, shape, mk))
+    else:
+        assert args.arch and args.shape
+        for mk in meshes:
+            cells.append((args.arch, args.shape, mk))
+
+    for arch, shape, mk in cells:
+        tag = f"{arch}_{shape}_{mk}" + ("_posit" if args.posit else "")
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_done and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    print(f"[skip] {tag}")
+                    continue
+        rec = run_cell(arch, shape, mk, posit=args.posit, out_dir=args.out)
+        print(f"[{rec['status']:7s}] {tag} ({rec.get('total_s', 0)}s)"
+              + (f"  {rec.get('error', '')}" if rec["status"] == "error" else ""))
+
+
+if __name__ == "__main__":
+    main()

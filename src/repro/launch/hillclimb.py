@@ -1,0 +1,100 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver: hypothesis -> change -> re-lower -> record.
+
+Three cells (chosen from the baseline roofline table):
+  1. llama3-405b x train_4k      — flagship scale, collective-bound
+  2. granite-8b  x train_4k      — worst collective/compute ratio (dense)
+  3. smollm-360m x train_4k      — paper-technique cell (posit divider ON)
+
+Each experiment is a (tag, overrides) pair; results land in
+experiments/hillclimb/<arch>_<shape><tag>.json and EXPERIMENTS.md §Perf
+narrates the hypothesis/outcome per step.
+"""
+
+import json
+import sys
+
+from repro.launch import roofline as R
+from repro.numerics.formats import NumericsConfig
+
+OUT = "experiments/hillclimb"
+
+EXPERIMENTS = [
+    # ---- cell 1: llama3-405b train_4k --------------------------------
+    ("llama3-405b", "train_4k", "_hc0_baseline", False, {}),
+    ("llama3-405b", "train_4k", "_hc1_repeat_kv", False,
+     {"gqa_repeat_kv": True}),
+    ("llama3-405b", "train_4k", "_hc2_repeat_kv_dots", False,
+     {"gqa_repeat_kv": True, "remat": "dots"}),
+    # ---- extra cell: yi-34b train_4k (56 heads: repeat_kv inapplicable,
+    #      16 ∤ 56 — attack the head_dim score-AR by halving its precision)
+    ("yi-34b", "train_4k", "_hc0_baseline", False, {}),
+    ("yi-34b", "train_4k", "_hc1_scores_bf16", False,
+     {"attn_scores_bf16": True}),
+    ("yi-34b", "train_4k", "_hc2_scores_bf16_dots", False,
+     {"attn_scores_bf16": True, "remat": "dots"}),
+    # ---- cell 2: granite-8b train_4k ----------------------------------
+    ("granite-8b", "train_4k", "_hc0_baseline", False, {}),
+    ("granite-8b", "train_4k", "_hc1_repeat_kv", False,
+     {"gqa_repeat_kv": True}),
+    ("granite-8b", "train_4k", "_hc2_repeat_kv_dots", False,
+     {"gqa_repeat_kv": True, "remat": "dots"}),
+    ("granite-8b", "train_4k", "_hc3_repeat_kv_dots_mb2", False,
+     {"gqa_repeat_kv": True, "remat": "dots", "microbatches": 2}),
+    # ---- cell 3: smollm-360m train_4k + posit numerics ----------------
+    # paper-faithful baseline: posit division ON, best variant (r4 CS OF FR)
+    ("smollm-360m", "train_4k", "_hc0_posit_r4", True, {}),
+    # ablation: radix-2 divider (paper Table II: 14 vs 8 iterations)
+    ("smollm-360m", "train_4k", "_hc0b_posit_r2", True,
+     {"numerics": NumericsConfig(posit_division=True, div_format="posit16",
+                                 div_algo="srt_r2_cs_of_fr")}),
+    # beyond-paper: drop TP for the 360M model (pure DP), posit still ON
+    ("smollm-360m", "train_4k", "_hc1_posit_tp1", True,
+     {"tp_disable": True}),
+    # posit OFF reference at the same sharding (emulation overhead)
+    ("smollm-360m", "train_4k", "_hc2_float_tp1", False,
+     {"tp_disable": True}),
+    # unrolled divider: real emulation cost visible (fori_loop bodies are
+    # cost-counted once); radix-4 vs radix-2 shows Table II in HLO FLOPs
+    ("smollm-360m", "train_4k", "_hc3_posit_tp1_unroll_r4", True,
+     {"tp_disable": True,
+      "numerics": NumericsConfig(posit_division=True, div_format="posit16",
+                                 div_algo="srt_r4_cs_of_fr", div_unroll=True)}),
+    ("smollm-360m", "train_4k", "_hc3b_posit_tp1_unroll_r2", True,
+     {"tp_disable": True,
+      "numerics": NumericsConfig(posit_division=True, div_format="posit16",
+                                 div_algo="srt_r2_cs_of_fr", div_unroll=True)}),
+    # posit only in softmax-normalizer path is the paper-faithful hot spot;
+    # posit8 halves iterations again (It=6 r4) — format ablation
+    ("smollm-360m", "train_4k", "_hc4_posit8_tp1_unroll", True,
+     {"tp_disable": True,
+      "numerics": NumericsConfig(posit_division=True, div_format="posit8",
+                                 div_algo="srt_r4_cs_of_fr", div_unroll=True)}),
+]
+
+
+def main():
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for arch, shape, tag, posit, ov in EXPERIMENTS:
+        if only and only not in (arch + tag):
+            continue
+        path = os.path.join(OUT, f"{arch}_{shape}" + ("_posit" if posit else "") + tag + ".json")
+        if os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") == "ok":
+                    print(f"[skip] {arch}{tag}")
+                    continue
+        rec = R.run(arch, shape, posit=posit, out_dir=OUT, tag_suffix=tag,
+                    overrides=ov or None)
+        if rec["status"] == "ok":
+            print(f"[ok] {arch}{tag}: c={rec['compute_s']:.2f}s "
+                  f"m={rec['memory_s']:.2f}s coll={rec['collective_s']:.2f}s "
+                  f"dom={rec['dominant']} mfu={rec['mfu_bound']*100:.2f}%")
+        else:
+            print(f"[{rec['status']}] {arch}{tag}: {rec.get('error','')[:120]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,215 @@
+"""Production mesh construction + per-arch sharding derivation.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+``xla_force_host_platform_device_count`` before first jax init.
+
+Sharding policy (see DESIGN.md §7):
+  * DP over ('pod', 'data'); TP over 'model'; EP maps experts to 'model'.
+  * GQA head sharding: kv_heads % TP == 0 -> shard (q+kv) heads; otherwise
+    shard head_dim (always divisible here) — the uniform rule that makes all
+    ten archs lower cleanly.  Padded-head sharding is a §Perf lever.
+  * FSDP (llama3-405b): block params + optimizer state additionally sharded
+    over ('pod','data') on their d_model/d_ff dims.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import make_rules
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def head_mode(cfg: ModelConfig, tp: int) -> str:
+    """'heads' when q+kv heads are TP-divisible; 'heads_repl_kv' with the
+    repeat-KV lever; 'replicated' for pure DP; else 'head_dim'."""
+    if cfg.tp_disable:
+        return "replicated"
+    if cfg.n_heads and cfg.n_heads % tp == 0 and cfg.n_kv_heads % tp == 0:
+        return "heads"
+    if cfg.gqa_repeat_kv and cfg.n_heads and cfg.n_heads % tp == 0:
+        return "heads_repl_kv"
+    return "head_dim"
+
+
+def arch_rules(cfg: ModelConfig, mesh: Mesh, *, batch_sharded: bool = True) -> dict:
+    tp = mesh.shape.get("model", 1)
+    hm = head_mode(cfg, tp)
+    rules = make_rules(
+        mesh.axis_names, fsdp=cfg.fsdp,
+        shard_heads=hm in ("heads", "heads_repl_kv"),
+        shard_head_dim=(hm == "head_dim"),
+    )
+    if hm == "replicated":
+        rules = {k: (v if k == "batch" else None) for k, v in rules.items()}
+    if not batch_sharded:
+        rules = {**rules, "batch": None}
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# parameter / state shardings
+# ---------------------------------------------------------------------------
+
+_STACKED_MARKERS = ("blocks", "enc_blocks", "dec_blocks")
+
+
+def _param_spec(path_keys, shape, cfg: ModelConfig, hm: str, fsdp) -> P:
+    name = path_keys[-1]
+    stacked = any(m in path_keys for m in _STACKED_MARKERS)
+    lead = (None,) if stacked else ()
+
+    def sp(*dims):
+        assert len(lead) + len(dims) == len(shape), (path_keys, shape, dims)
+        return P(*lead, *dims)
+
+    M = None if hm == "replicated" else "model"
+    if name in ("wq",):
+        if hm in ("heads", "heads_repl_kv"):
+            return sp(fsdp, M, None)
+        return sp(fsdp, None, M)
+    if name in ("wk", "wv"):
+        if hm == "heads":
+            return sp(fsdp, M, None)
+        if hm == "heads_repl_kv":
+            return sp(fsdp, None, None)   # replicated KV projections
+        return sp(fsdp, None, M)
+    if name == "wo":
+        if hm in ("heads", "heads_repl_kv"):
+            return sp(M, None, fsdp)
+        return sp(None, M, fsdp)
+    if name in ("w1", "w3"):
+        if len(shape) - len(lead) == 3:  # MoE (E, d, ff)
+            return sp(M, fsdp, None)
+        return sp(fsdp, M)
+    if name == "w2":
+        if len(shape) - len(lead) == 3:  # MoE (E, ff, d)
+            return sp(M, None, fsdp)
+        return sp(M, fsdp)
+    if name == "router":
+        return sp(None, M)
+    if name == "tok":
+        # vocab-sharded: GSPMD lowers the lookup to local-gather + mask +
+        # all-reduce (D-sharded tables trip a partitioner verifier bug when
+        # the gather sits under remat+scan; see DESIGN.md).
+        return P(M, None)
+    if name == "head":
+        return P(None, M)
+    if name in ("in_proj", "in_x", "in_gate"):
+        return sp(fsdp, M)
+    if name in ("out_proj", "out"):
+        return sp(M, fsdp)
+    if name in ("wa", "wx"):
+        return sp(None, M)
+    if name == "conv_w":
+        return sp(None, M)
+    if name in ("patch_proj", "src_proj"):
+        return P(None, M)
+    # norms, biases, scalars, lam/A_log/dt_bias/D/...
+    return P(*([None] * len(shape)))
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        k = getattr(p, "key", None)
+        if k is None:
+            k = getattr(p, "idx", None)
+        out.append(str(k))
+    return tuple(out)
+
+
+def param_pspecs(cfg: ModelConfig, params_tree, mesh: Mesh):
+    tp = mesh.shape.get("model", 1)
+    hm = head_mode(cfg, tp)
+    da = data_axes(mesh)
+    fsdp = (da if len(da) > 1 else (da[0] if da else None)) if cfg.fsdp else None
+
+    def f(path, leaf):
+        return _param_spec(_path_keys(path), leaf.shape, cfg, hm, fsdp)
+
+    return jax.tree_util.tree_map_with_path(f, params_tree)
+
+
+def state_pspecs(cfg: ModelConfig, state_tree, mesh: Mesh):
+    """Shardings for {'params', 'opt': {'m','v','step'}} (m/v follow params)."""
+    pspec = param_pspecs(cfg, state_tree["params"], mesh)
+    return {
+        "params": pspec,
+        "opt": {
+            "m": param_pspecs(cfg, state_tree["opt"]["m"], mesh),
+            "v": param_pspecs(cfg, state_tree["opt"]["v"], mesh),
+            "step": P(),
+        },
+    }
+
+
+def batch_pspecs(cfg: ModelConfig, batch_tree, mesh: Mesh, *,
+                 batch_sharded: bool = True, full_dp: bool = False):
+    da = data_axes(mesh)
+    if full_dp:
+        da = tuple(mesh.axis_names)  # pure-DP: batch over every axis
+    dp = (da if len(da) > 1 else (da[0] if da else None)) if batch_sharded else None
+
+    def f(path, leaf):
+        return P(dp, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(f, batch_tree)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_tree, mesh: Mesh, *,
+                 batch_sharded: bool = True):
+    """Decode-cache shardings: batch -> DP, kv heads or head_dim -> TP."""
+    tp = mesh.shape.get("model", 1)
+    hm = head_mode(cfg, tp)
+    da = data_axes(mesh)
+    dp = (da if len(da) > 1 else (da[0] if da else None)) if batch_sharded else None
+    M = None if hm == "replicated" else "model"
+
+    def f(path, leaf):
+        keys = _path_keys(path)
+        nd = len(leaf.shape)
+        name = keys[-1]
+        stacked = "layers" in keys or "cross" in keys  # (L, B, ...)
+        b_at = 1 if stacked else 0
+        spec = [None] * nd
+        if b_at < nd:
+            spec[b_at] = dp
+        if name in ("k", "v") and nd >= b_at + 4:
+            # (.., B, S, KV, hd)
+            if hm == "heads":
+                spec[b_at + 2] = M
+            else:
+                spec[b_at + 3] = M
+        elif name == "conv":
+            # (.., B, K-1, channels)
+            if cfg.family == "ssm" or cfg.family == "hybrid":
+                spec[nd - 1] = M
+        elif name == "h":
+            if cfg.family == "ssm" and nd >= b_at + 4:
+                spec[b_at + 1] = M       # heads
+            elif cfg.family == "hybrid":
+                spec[nd - 1] = M         # lru width
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(f, cache_tree)
+
+
+def named(mesh: Mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,113 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from experiments/."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ARCH_ORDER = ["granite-8b", "yi-34b", "smollm-360m", "llama3-405b",
+              "llama4-scout-17b-a16e", "olmoe-1b-7b", "seamless-m4t-medium",
+              "recurrentgemma-2b", "mamba2-2.7b", "internvl2-76b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(dirname: str) -> List[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def _gb(x):
+    return f"{(x or 0) / 2**30:.2f}"
+
+
+def dryrun_table(dirname="experiments/dryrun") -> str:
+    recs = {(r["arch"], r["shape"], r["mesh"]): r for r in _load(dirname)
+            if not r.get("posit")}
+    lines = [
+        "| arch | shape | mesh | status | compile_s | args GB/dev | temp GB/dev "
+        "| HLO GFLOPs/dev* | collective ops (AR/AG/RS/A2A/CP) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("single", "multi"):
+                r = recs.get((arch, shape, mesh))
+                if r is None:
+                    lines.append(f"| {arch} | {shape} | {mesh} | MISSING | | | | | |")
+                    continue
+                if r["status"] == "skipped":
+                    lines.append(f"| {arch} | {shape} | {mesh} | skipped | | | | | "
+                                 f"{r['reason'].split(';')[0]} |")
+                    continue
+                if r["status"] != "ok":
+                    lines.append(f"| {arch} | {shape} | {mesh} | **ERROR** | | | | | "
+                                 f"{r.get('error','')[:60]} |")
+                    continue
+                c = r.get("collectives", {})
+
+                def n(k):
+                    return c.get(k, {}).get("count", 0)
+
+                coll = (f"{n('all-reduce')}/{n('all-gather')}/{n('reduce-scatter')}"
+                        f"/{n('all-to-all')}/{n('collective-permute')}")
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | ok | {r['compile_s']} | "
+                    f"{_gb(r['memory']['argument_bytes'])} | "
+                    f"{_gb(r['memory']['temp_bytes'])} | "
+                    f"{r['cost'].get('flops', 0) / 1e9:.1f} | {coll} |")
+    lines.append("")
+    lines.append("\\* cost_analysis counts while-loop (scan) bodies once — "
+                 "see §Roofline for trip-count-corrected totals.")
+    return "\n".join(lines)
+
+
+def _fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def roofline_table(dirname="experiments/roofline", posit=False) -> str:
+    recs = {(r["arch"], r["shape"]): r for r in _load(dirname)
+            if bool(r.get("posit")) == posit and not r.get("tag")}
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL/HLO flops | MFU bound |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | skipped | | |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | — | — | — | **ERROR:** "
+                             f"{r.get('error','')[:50]} | | |")
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {_fmt_s(r['compute_s'])} | "
+                f"{_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} | "
+                f"**{r['dominant'].replace('_s','')}** | "
+                f"{r['useful_ratio']:.2f} | {r['mfu_bound']*100:.1f}% |")
+    return "\n".join(lines)
+
+
+def main():
+    print("## Dry-run\n")
+    print(dryrun_table())
+    print("\n## Roofline\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline extraction from compiled dry-run artifacts (single-pod mesh).
+
+XLA's HloCostAnalysis visits while-loop bodies ONCE (verified empirically in
+EXPERIMENTS.md §Dry-run), so naive cost_analysis numbers undercount scanned
+layers / microbatches / attention chunks.  This module recovers trip-count-
+correct totals by *differencing*:
+
+  * layers:        lower L and L' variants; per-layer = (C(L') - C(L))/(L'-L)
+  * microbatches:  lower with microbatches=1 at microbatch-sized global batch,
+                   scale by the production microbatch count
+  * attention:     analysis variants unroll flash chunks (q/kv chunk = S), so
+                   attention FLOPs are counted exactly at full S
+  * SSD chunks:    per-layer costs are linear in S; two seq points
+                   extrapolate to the target S (pure-linear family only)
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  Terms are reported in seconds-per-step per chip; the
+compiled module is the per-device SPMD program, so no extra chip division.
+"""
+
+import argparse
+import json
+import time
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import ALIASES, get_config
+from repro.launch import mesh as M
+from repro.launch import dryrun as DR
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+# effective wire multipliers (ring algorithms, n>>1)
+_COLL_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _cost_of(arch, shape, mesh, *, posit=False, **overrides) -> Dict[str, float]:
+    fn, args, cfg = DR.build_cell(arch, shape, mesh, posit=posit,
+                                  analysis_overrides=overrides)
+    with mesh:
+        compiled = fn.lower(*args).compile()
+        ca = compiled.cost_analysis() or {}
+        coll = DR.parse_collectives(compiled.as_text())
+    out = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+    }
+    for kind, rec in coll.items():
+        out[f"coll_{kind}"] = float(rec["bytes"])
+    return out
+
+
+def _combine(a, b, fa, fb):
+    keys = set(a) | set(b)
+    return {k: fa * a.get(k, 0.0) + fb * b.get(k, 0.0) for k in keys}
+
+
+def _scale(a, f):
+    return {k: v * f for k, v in a.items()}
+
+
+def analyze_cell(arch: str, shape: str, *, posit: bool = False,
+                 overrides: Optional[dict] = None) -> dict:
+    """Trip-count-corrected per-device costs for one (arch, shape) cell."""
+    seq_len, global_batch, kind = DR.SHAPES[shape]
+    cfg = get_config(arch)
+    mesh = M.make_production_mesh(multi_pod=False)
+    ov = dict(overrides or {})
+
+    # analysis shape: microbatch-size global batch, unrolled attention
+    mb = DR.TRAIN_MICROBATCHES.get(arch, 1) if kind == "train" else 1
+    mb = ov.pop("microbatches", mb)
+    eff_batch = global_batch // mb if kind == "train" else global_batch
+    base_ov = dict(microbatches=1, global_batch=eff_batch,
+                   attn_q_chunk=seq_len, attn_kv_chunk=seq_len,
+                   scan_layers=False, **ov)
+
+    if cfg.family == "encdec":
+        c11 = _cost_of(arch, shape, mesh, posit=posit,
+                       **base_ov, enc_layers=1, dec_layers=1)
+        c21 = _cost_of(arch, shape, mesh, posit=posit,
+                       **base_ov, enc_layers=2, dec_layers=1)
+        c12 = _cost_of(arch, shape, mesh, posit=posit,
+                       **base_ov, enc_layers=1, dec_layers=2)
+        enc = _combine(c21, c11, 1, -1)
+        dec = _combine(c12, c11, 1, -1)
+        base = _combine(c11, _combine(enc, dec, 1, 1), 1, -1)
+        total = _combine(base, _combine(enc, dec, cfg.enc_layers, cfg.dec_layers), 1, 1)
+    elif cfg.family == "hybrid":
+        # pattern i%3==2 is attention; L=2 -> 2 rec; L=3 -> 2 rec + 1 attn
+        c2 = _cost_of(arch, shape, mesh, posit=posit, **base_ov, n_layers=2)
+        c3 = _cost_of(arch, shape, mesh, posit=posit, **base_ov, n_layers=3)
+        c4 = _cost_of(arch, shape, mesh, posit=posit, **base_ov, n_layers=4)
+        attn_l = _combine(c3, c2, 1, -1)
+        rec_l = _combine(c4, c3, 1, -1)
+        base = _combine(c2, rec_l, 1, -2)
+        n_attn = sum(1 for i in range(cfg.n_layers) if cfg.is_attn_layer(i))
+        n_rec = cfg.n_layers - n_attn
+        total = _combine(base, _combine(rec_l, attn_l, n_rec, n_attn), 1, 1)
+    elif cfg.family == "ssm" and kind != "decode":
+        # costs linear in S: difference layers at two seq points, extrapolate
+        Q = cfg.ssm_chunk
+        s1, s2 = 4 * Q, 8 * Q
+        cells = {}
+        for L in (1, 2):
+            for s in (s1, s2):
+                cells[(L, s)] = _cost_of(arch, shape, mesh, posit=posit,
+                                         **{**base_ov, "seq_len": s}, n_layers=L)
+        lay1 = _combine(cells[(2, s1)], cells[(1, s1)], 1, -1)
+        lay2 = _combine(cells[(2, s2)], cells[(1, s2)], 1, -1)
+        slope = _scale(_combine(lay2, lay1, 1, -1), 1.0 / (s2 - s1))
+        layer = _combine(lay1, slope, 1, (seq_len - s1))
+        base1 = _combine(cells[(1, s1)], lay1, 1, -1)
+        base2 = _combine(cells[(1, s2)], lay2, 1, -1)
+        bslope = _scale(_combine(base2, base1, 1, -1), 1.0 / (s2 - s1))
+        base = _combine(base1, bslope, 1, (seq_len - s1))
+        total = _combine(base, layer, 1, cfg.n_layers)
+    else:
+        c1 = _cost_of(arch, shape, mesh, posit=posit, **base_ov, n_layers=1)
+        c2 = _cost_of(arch, shape, mesh, posit=posit, **base_ov, n_layers=2)
+        layer = _combine(c2, c1, 1, -1)
+        base = _combine(c1, layer, 1, -1)
+        total = _combine(base, layer, 1, cfg.n_layers)
+
+    total = _scale(total, mb)  # gradient-accumulation microbatches
+    return {"total": total, "microbatches": mb, "devices": int(mesh.size)}
+
+
+# ---------------------------------------------------------------------------
+# model FLOPs (the "useful work" yardstick)
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg) -> Dict[str, float]:
+    """Total and active parameter counts from real param shapes."""
+    import numpy as np
+
+    from repro.models import transformer as T
+
+    shapes = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    total = active = embed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        n = float(np.prod(leaf.shape))
+        total += n
+        if keys[-1] in ("tok", "head"):
+            embed += n
+            continue
+        if keys[-1] in ("w1", "w2", "w3") and len(leaf.shape) >= 3 and cfg.n_experts:
+            # stacked MoE expert weights: (L, E, ., .)
+            active += n * cfg.experts_per_token / cfg.n_experts
+        else:
+            active += n
+    return {"total": total, "active_nonembed": active, "embed": embed}
+
+
+def model_flops(cfg, shape: str) -> float:
+    """6*N*D for training, 2*N*D for inference (active params, global)."""
+    seq_len, global_batch, kind = DR.SHAPES[shape]
+    p = count_params(cfg)
+    n = p["active_nonembed"] + p["embed"] / 2  # head matmul counts, table ~free
+    if kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n * tokens
+    tokens = 1 * global_batch  # decode: one token per request
+    return 2.0 * n * tokens
+
+
+def roofline_terms(costs: dict, cfg, shape: str) -> dict:
+    t = costs["total"]
+    devices = costs["devices"]
+    compute_s = t.get("flops", 0.0) / PEAK_FLOPS
+    memory_s = t.get("bytes", 0.0) / HBM_BW
+    coll_bytes = sum(_COLL_MULT[k.replace("coll_", "")] * v
+                     for k, v in t.items() if k.startswith("coll_"))
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_flops_global = t.get("flops", 0.0) * devices
+    return {
+        **terms,
+        "dominant": dom,
+        "step_s_bound": max(terms.values()),
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": mf / hlo_flops_global if hlo_flops_global else 0.0,
+        "mfu_bound": (mf / devices / PEAK_FLOPS) / max(terms.values())
+        if max(terms.values()) > 0 else 0.0,
+        "collective_bytes_device": coll_bytes,
+    }
+
+
+def run(arch: str, shape: str, *, posit: bool = False, out_dir="experiments/roofline",
+        tag_suffix: str = "", overrides: Optional[dict] = None) -> dict:
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape, "posit": posit}
+    if overrides:
+        rec["overrides"] = {k: str(v) for k, v in overrides.items()}
+    if tag_suffix:
+        rec["tag"] = tag_suffix
+    reason = DR.skip_reason(arch, shape)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+    else:
+        try:
+            cfg = get_config(arch)
+            costs = analyze_cell(arch, shape, posit=posit, overrides=overrides)
+            rec.update(status="ok", costs=costs["total"],
+                       microbatches=costs["microbatches"],
+                       **roofline_terms(costs, cfg, shape))
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-3000:])
+    rec["total_s"] = round(time.time() - t0, 1)
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}_{shape}" + ("_posit" if posit else "") + tag_suffix
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(DR.SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--posit", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--out", default="experiments/roofline")
+    args = ap.parse_args()
+
+    cells = ([(a, s) for a in ALIASES for s in DR.SHAPES]
+             if args.all else [(args.arch, args.shape)])
+    for arch, shape in cells:
+        tag = f"{arch}_{shape}" + ("_posit" if args.posit else "")
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_done and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    print(f"[skip] {tag}")
+                    continue
+        rec = run(arch, shape, posit=args.posit, out_dir=args.out)
+        msg = rec.get("dominant", rec.get("reason", rec.get("error", "")))
+        print(f"[{rec['status']:7s}] {tag} ({rec['total_s']}s) {str(msg)[:120]}")
+
+
+if __name__ == "__main__":
+    main()

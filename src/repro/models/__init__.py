@@ -1,0 +1,4 @@
+"""Model zoo: composable JAX model definitions for the assigned archs."""
+
+from .config import ModelConfig  # noqa: F401
+from . import transformer  # noqa: F401

@@ -1,0 +1,98 @@
+"""Model configuration for all assigned architectures."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.numerics.formats import NumericsConfig
+
+
+def _pad_to(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | encdec | hybrid | ssm | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    head_dim: Optional[int] = None
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    # --- hybrid (RG-LRU + local attention, 1 attn per `attn_period`) ---
+    attn_period: int = 0        # 3 -> layers i % 3 == 2 are attention
+    local_window: int = 0
+    lru_width: int = 0
+    conv_width: int = 4
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 256
+    ssm_groups: int = 1
+    # --- encoder-decoder ---
+    enc_layers: int = 0
+    dec_layers: int = 0
+    src_frontend: str = ""      # "audio_stub" | "vision_stub"
+    src_len_ratio: int = 4      # src_len = seq_len // ratio for encdec shapes
+    # --- VLM ---
+    num_patches: int = 0
+    # --- common ---
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    act: str = "silu"
+    numerics: NumericsConfig = dataclasses.field(default_factory=NumericsConfig)
+    # --- distribution hints (overridable per run) ---
+    fsdp: bool = False          # shard params over the data axis too (ZeRO-3)
+    remat: str = "full"         # full | dots | none
+    scan_layers: bool = True
+    gqa_repeat_kv: bool = False  # repeat KV to n_heads (enables head sharding
+    #                              without the head_dim-contraction all-reduce)
+    attn_scores_bf16: bool = False  # compute/AR scores in bf16 (halves the
+    #                                 head_dim-mode score all-reduce bytes)
+    tp_disable: bool = False     # replicate over the model axis (pure DP)
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 1024
+
+    def __post_init__(self):
+        if self.head_dim is None and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a TP-friendly multiple (Megatron-style)."""
+        return _pad_to(self.vocab, 256)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def is_attn_layer(self, i: int) -> bool:
+        if self.family != "hybrid":
+            return True
+        return i % self.attn_period == (self.attn_period - 1)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run long_500k decode? (SSM state / local window only)"""
+        return self.family in ("ssm", "hybrid")
+
+    def with_numerics(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, numerics=NumericsConfig(**kw))
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,356 @@
+"""Shared neural layers: norms, RoPE, GQA flash attention, MLP, MoE.
+
+All layers are pure functions over parameter pytrees (dicts of jnp arrays).
+Compute dtype is bf16 by default with f32 accumulation for reductions; params
+stay f32 (the trainer holds the master copy).  Division sites optionally run
+through the posit digit-recurrence divider (`cfg.numerics.posit_division`).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.numerics.posit_ops import posit_div_values, posit_softmax
+from .config import ModelConfig
+from .sharding import constrain
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+
+
+def rmsnorm(x, w, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    if cfg.numerics.posit_division:
+        y = posit_div_values(xf, jnp.sqrt(ms + cfg.norm_eps), cfg.numerics)
+    else:
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., s, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- softmax
+
+
+def _softmax(x, cfg: ModelConfig, axis=-1):
+    if cfg.numerics.posit_division:
+        return posit_softmax(x, cfg.numerics, axis=axis)
+    return jax.nn.softmax(x, axis=axis)
+
+
+# ----------------------------------------------------------------- attention
+
+
+def init_attention(key, cfg: ModelConfig, d_model=None):
+    d = d_model or cfg.d_model
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _init(ks[0], (d, h, hd)),
+        "wk": _init(ks[1], (d, kv, hd)),
+        "wv": _init(ks[2], (d, kv, hd)),
+        "wo": _init(ks[3], (h, hd, d), scale=1.0 / math.sqrt(h * hd)),
+    }
+
+
+def _qkv(params, x, cfg: ModelConfig, positions, rope: bool = True):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.gqa_repeat_kv and cfg.n_kv_heads < cfg.n_heads:
+        # §Perf lever: repeat KV to n_heads so attention shards on the head
+        # axis — removes the head_dim-contraction all-reduce of the S^2
+        # score tensor (the dominant collective in head_dim mode).
+        g = cfg.n_heads // cfg.n_kv_heads
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        k = constrain(k, "batch", "seq", "heads", "head_dim")
+        v = constrain(v, "batch", "seq", "heads", "head_dim")
+    else:
+        k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+        v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    return q, k, v
+
+
+def flash_attention(q, k, v, cfg: ModelConfig, *, causal: bool,
+                    window: int = 0, q_offset: int = 0):
+    """Chunked online-softmax attention (GQA via head grouping).
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd).  Scans q-chunks in an outer loop
+    and kv-chunks in an inner loop with running (max, denom, acc) — the
+    standard flash pattern, so no (Sq, Sk) tensor is ever materialized.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV  # query heads per kv head
+    scale = 1.0 / math.sqrt(hd)
+
+    def _chunk(S, pref):
+        c = min(pref, S)
+        while S % c:
+            c -= 1
+        return c
+
+    bq = _chunk(Sq, cfg.attn_q_chunk)
+    bk = _chunk(Sk, cfg.attn_kv_chunk)
+    nq, nk = Sq // bq, Sk // bk
+
+    qr = q.reshape(B, nq, bq, KV, G, hd)
+    kr = k.reshape(B, nk, bk, KV, hd)
+    vr = v.reshape(B, nk, bk, KV, hd)
+
+    q_pos = q_offset + jnp.arange(Sq).reshape(nq, bq)
+    k_pos = jnp.arange(Sk).reshape(nk, bk)
+
+    def q_step(_, qi):
+        qb, qp = qi  # (B, bq, KV, G, hd), (bq,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb, vb, kp = ki
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb)
+            if cfg.attn_scores_bf16:
+                # keep the (possibly all-reduced) score tensor in bf16; the
+                # online-softmax statistics below still accumulate in f32
+                s = s.astype(jnp.bfloat16)
+            s = s.astype(jnp.float32) * scale
+            mask = jnp.ones((bq, kp.shape[0]), dtype=bool)
+            if causal:
+                mask &= qp[:, None] >= kp[None, :]
+            if window:
+                mask &= qp[:, None] - kp[None, :] < window
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(qb.dtype), vb).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, bq), -1e30, dtype=jnp.float32)
+        l0 = jnp.zeros((B, KV, G, bq), dtype=jnp.float32)
+        a0 = jnp.zeros((B, KV, G, bq, hd), dtype=jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4), k_pos))
+        if cfg.numerics.posit_division:
+            out = posit_div_values(acc, l[..., None] + 1e-30, cfg.numerics)
+        else:
+            out = acc / (l[..., None] + 1e-30)
+        return None, out.astype(qb.dtype)  # (B, KV, G, bq, hd)
+
+    _, outs = jax.lax.scan(q_step, None, (qr.transpose(1, 0, 2, 3, 4, 5), q_pos))
+    # outs: (nq, B, KV, G, bq, hd) -> (B, Sq, H, hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hd)
+    return out
+
+
+def attention_block(params, x, cfg: ModelConfig, positions, *, causal=True,
+                    window=0, rope=True):
+    q, k, v = _qkv(params, x, cfg, positions, rope=rope)
+    o = flash_attention(q, k, v, cfg, causal=causal, window=window)
+    o = constrain(o, "batch", "seq", "heads", "head_dim")
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+
+
+def cross_attention_block(params, x, mem_kv, cfg: ModelConfig):
+    """Decoder cross-attention; mem_kv = (k, v) precomputed from the encoder."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k, v = mem_kv
+    o = flash_attention(q, k.astype(dt), v.astype(dt), cfg, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+
+
+def decode_attention(params, x, cache_k, cache_v, pos, cfg: ModelConfig,
+                     *, window: int = 0, rope: bool = True):
+    """Single-token attention against a (B, S, KV, hd) cache; returns output
+    and the updated cache entries (caller writes them)."""
+    dt = x.dtype
+    B, S, KV, hd = cache_k.shape
+    H = cfg.n_heads
+    G = H // KV
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.numerics.kv_cache_format:
+        # posit-quantized KV storage: entries are rounded to the posit grid
+        # at insertion (wire format uint16/uint8; values emulated here)
+        from repro.numerics.formats import resolve_format
+        from repro.numerics.quant import posit_round_value
+
+        pf = resolve_format(cfg.numerics.kv_cache_format)
+        k = posit_round_value(pf, k.astype(jnp.float32)).astype(k.dtype)
+        v = posit_round_value(pf, v.astype(jnp.float32)).astype(v.dtype)
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+
+    qg = q.reshape(B, 1, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg[:, 0], ck.astype(dt))
+    s = s.astype(jnp.float32) / math.sqrt(hd)
+    kpos = jnp.arange(S)
+    mask = kpos[None, None, None, :] <= pos
+    if window:
+        mask &= kpos[None, None, None, :] > pos - window
+    s = jnp.where(mask, s, -1e30)
+    p = _softmax(s, cfg, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(dt), cv.astype(dt))
+    o = o.reshape(B, 1, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    return out, ck, cv
+
+
+# ----------------------------------------------------------------- MLP
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff=None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": _init(ks[0], (d, ff)),
+        "w3": _init(ks[1], (d, ff)),
+        "w2": _init(ks[2], (ff, d)),
+    }
+
+
+def mlp_block(params, x, cfg: ModelConfig):
+    dt = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, params["w1"].astype(dt))
+    g = jnp.einsum("bsd,df->bsf", x, params["w3"].astype(dt))
+    h = jax.nn.silu(h) * g
+    h = constrain(h, "batch", "seq", "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, params["w2"].astype(dt))
+
+
+# ----------------------------------------------------------------- MoE
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _init(ks[0], (d, E), scale=0.02),
+        "w1": _init(ks[1], (E, d, ff)),
+        "w3": _init(ks[2], (E, d, ff)),
+        "w2": _init(ks[3], (E, ff, d)),
+    }
+
+
+def moe_block(params, x, cfg: ModelConfig):
+    """Top-k MoE, capacity-bounded scatter/gather dispatch *per batch row*.
+
+    The dispatch buffer keeps a leading batch dim sharded over DP, so expert
+    compute is C_row-bounded per data shard (no DP-replicated global
+    capacity); experts shard over the model axis (EP) and GSPMD emits the
+    dispatch/combine all-to-alls.  FLOPs ~= active-expert FLOPs *
+    capacity_factor.  Rank computation uses associative_scan (XLA cost models
+    long cumsums quadratically).
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    dt = x.dtype
+    C = max(int(math.ceil(S * k / E * cfg.capacity_factor)), 1)
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"].astype(dt)).astype(jnp.float32)
+    probs = _softmax(logits, cfg, axis=-1)
+    gate, eid = jax.lax.top_k(probs, k)          # (B, S, k)
+    if cfg.numerics.posit_division:
+        from repro.numerics.posit_ops import posit_router_norm
+        gate = posit_router_norm(gate, cfg.numerics)
+    else:
+        gate = gate / (gate.sum(-1, keepdims=True) + 1e-9)
+
+    # rank of each (token, choice) within its expert, per batch row
+    onehot = jax.nn.one_hot(eid, E, dtype=jnp.int32)          # (B, S, k, E)
+    flat_oh = onehot.reshape(B, S * k, E)
+    csum = jax.lax.associative_scan(jnp.add, flat_oh, axis=1)
+    ranks = (csum - flat_oh).reshape(B, S, k, E)
+    rank = (ranks * onehot).sum(-1)                           # (B, S, k)
+    keep = rank < C
+    dest = jnp.where(keep, eid * C + rank, E * C)             # (B, S, k)
+
+    # dispatch: scatter tokens into (B, E*C+1, D)
+    binx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S * k))
+    vals = jnp.broadcast_to(x[:, :, None, :], (B, S, k, D)).reshape(B, S * k, D)
+    buf = jnp.zeros((B, E * C + 1, D), dtype=dt)
+    buf = buf.at[binx, dest.reshape(B, S * k)].add(vals)
+    xe = buf[:, : E * C].reshape(B, E, C, D)
+    xe = constrain(xe, "batch", "experts", None, None)
+
+    h = jnp.einsum("becd,edf->becf", xe, params["w1"].astype(dt))
+    g = jnp.einsum("becd,edf->becf", xe, params["w3"].astype(dt))
+    h = jax.nn.silu(h) * g
+    h = constrain(h, "batch", "experts", None, None)
+    ye = jnp.einsum("becf,efd->becd", h, params["w2"].astype(dt))
+    ye = constrain(ye, "batch", "experts", None, None)
+
+    # combine: gather back and weight
+    yflat = jnp.concatenate(
+        [ye.reshape(B, E * C, D), jnp.zeros((B, 1, D), dtype=dt)], axis=1)
+    ytok = yflat[binx, dest.reshape(B, S * k)].reshape(B, S, k, D)
+    y = (ytok * gate[..., None].astype(dt) * keep[..., None]).sum(2)
+    return y
+
+
+# ----------------------------------------------------------------- embedding
+
+
+def init_embed(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    p = {"tok": _init(ks[0], (cfg.padded_vocab, cfg.d_model), scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["head"] = _init(ks[1], (cfg.d_model, cfg.padded_vocab))
+    return p
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    # NOTE: no with_sharding_constraint here — re-sharding a gather output
+    # from a model-sharded table inside a scan body trips an XLA SPMD
+    # partitioner verifier bug (see DESIGN.md); GSPMD propagation handles it.
+    return params["tok"].astype(COMPUTE_DTYPE)[tokens]
+
+
+def logits(params, x, cfg: ModelConfig):
+    w = params["tok"] if cfg.tie_embeddings else params["head"]
+    w = w.T if cfg.tie_embeddings else w
+    out = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    return constrain(out, "batch", "seq", "vocab")

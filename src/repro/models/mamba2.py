@@ -1,0 +1,162 @@
+"""Mamba2 / SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: quadratic attention-like computation within chunks,
+linear state passing between chunks — O(S * Q) instead of O(S^2).  Decode is
+a constant-size state update, so the arch runs ``long_500k``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _init, rmsnorm
+from .sharding import constrain
+
+
+def init_mamba2_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    H, N, G = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    conv_dim = di + 2 * G * N
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _init(ks[0], (d, 2 * di + 2 * G * N + H)),
+        "conv_w": _init(ks[1], (cfg.conv_width, conv_dim), scale=1.0 / math.sqrt(cfg.conv_width)),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.zeros((di,), jnp.float32),
+        "out_proj": _init(ks[2], (di, d)),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * G * N]
+    dt = zxbcdt[..., 2 * di + 2 * G * N :]
+    return z, xBC, dt
+
+
+def _conv1d(x, w, b, state=None):
+    K = w.shape[0]
+    if state is not None:
+        xp = jnp.concatenate([state, x], axis=1)
+        new_state = xp[:, -(K - 1):]
+    else:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        new_state = None
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K)) + b
+    return jax.nn.silu(out.astype(x.dtype)), new_state
+
+
+def _ssd_chunked(xh, Bm, Cm, dA, dt, cfg: ModelConfig):
+    """xh: (B,S,H,P); Bm/Cm: (B,S,G,N); dA: (B,S,H) = dt*A; dt: (B,S,H)."""
+    Bsz, S, H, P = xh.shape
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    Q = min(cfg.ssm_chunk, S)
+    while S % Q:  # largest divisor <= configured chunk (ragged seq lengths)
+        Q -= 1
+    NC = S // Q
+
+    r = lambda t, tail: t.reshape((Bsz, NC, Q) + tail)
+    xh, dA, dt = r(xh, (H, P)), r(dA, (H,)), r(dt, (H,))
+    Bm, Cm = r(Bm, (G, N)), r(Cm, (G, N))
+    # broadcast groups over heads
+    hpg = H // G
+    Bh = jnp.repeat(Bm, hpg, axis=3)  # (B,NC,Q,H,N)
+    Ch = jnp.repeat(Cm, hpg, axis=3)
+
+    # associative_scan (log-depth adds) — jnp.cumsum can lower to a
+    # quadratic-cost reduce-window on some backends/cost models
+    cum = jax.lax.associative_scan(jnp.add, dA, axis=2)  # (B,NC,Q,H)
+    # intra-chunk: y_i = sum_{j<=i} C_i.B_j exp(cum_i - cum_j) dt_j x_j
+    Ldec = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,NC,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: where(mask, exp(x), 0) has NaN gradients at exp(inf)
+    L = jnp.exp(jnp.where(tri, Ldec, -1e30))
+    CB = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh)
+    W = (CB * L * dt[:, :, None, :, :]).astype(xh.dtype)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", W, xh)
+
+    # chunk states: st = sum_j exp(cum_Q - cum_j) dt_j B_j (x) x_j
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,NC,Q,H)
+    st = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp",
+                    (decay_out * dt).astype(xh.dtype), Bh.astype(xh.dtype), xh)
+
+    # inter-chunk scan over NC
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # (B,NC,H)
+
+    def step(h, inp):
+        dcy, s = inp
+        h_new = h * dcy[..., None, None] + s.astype(jnp.float32)
+        return h_new, h  # emit PREVIOUS state for this chunk
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    hT, h_prev = jax.lax.scan(step, h0,
+                              (chunk_decay.transpose(1, 0, 2), st.transpose(1, 0, 2, 3, 4)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)           # (B,NC,H,N,P)
+
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp",
+                         Ch.astype(xh.dtype), h_prev.astype(xh.dtype),
+                         jnp.exp(cum).astype(xh.dtype))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, hT
+
+
+def mamba2_block(params, x, cfg: ModelConfig, state=None, *, decode=False):
+    """x: (B,S,D). state = (conv_state, h) for decode."""
+    dt_ = x.dtype
+    Bsz, S, D = x.shape
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_groups
+    di = cfg.d_inner
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    z, xBC, dtr = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                       # (H,)
+    dA = dt * A
+
+    if decode:
+        conv_state, h = state
+        xBC, new_conv = _conv1d(xBC, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_), conv_state)
+    else:
+        xBC, new_conv = _conv1d(xBC, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_))
+
+    xin = xBC[..., :di].reshape(Bsz, S, H, P)
+    Bm = xBC[..., di : di + G * N].reshape(Bsz, S, G, N)
+    Cm = xBC[..., di + G * N :].reshape(Bsz, S, G, N)
+    xin = constrain(xin, "batch", "seq", "heads", None)
+
+    if decode:
+        hpg = H // G
+        Bh = jnp.repeat(Bm[:, 0], hpg, axis=1)   # (B,H,N)
+        Ch = jnp.repeat(Cm[:, 0], hpg, axis=1)
+        decay = jnp.exp(dA[:, 0])                # (B,H)
+        h_new = (h * decay[..., None, None]
+                 + jnp.einsum("bh,bhn,bhp->bhnp", dt[:, 0], Bh.astype(jnp.float32),
+                              xin[:, 0].astype(jnp.float32)))
+        y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), h_new)[:, None]
+        y = y.astype(dt_)
+        new_state = (new_conv, h_new)
+    else:
+        y, hT = _ssd_chunked(xin, Bm, Cm, dA, dt, cfg)
+        new_state = None
+
+    y = y + params["D"].astype(dt_)[None, None, :, None] * (xin if not decode else xin[:, :1])
+    y = y.reshape(Bsz, S, di)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_w"], cfg)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+    return (out, new_state) if decode else out
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    conv = jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype)
+    h = jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim), jnp.float32)
+    return conv, h

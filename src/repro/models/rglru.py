@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-gated linear recurrent unit with a short conv1d, used in a 2:1 pattern
+with local sliding-window attention.  Training/prefill uses an associative
+scan over the sequence; decoding is a single-step state update — the reason
+this arch runs the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _init
+from .sharding import constrain
+
+_C = 8.0  # RG-LRU constant
+
+
+def init_rglru_block(key, cfg: ModelConfig):
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "in_x": _init(ks[0], (d, w)),
+        "in_gate": _init(ks[1], (d, w)),
+        "conv_w": _init(ks[2], (cfg.conv_width, w), scale=1.0 / math.sqrt(cfg.conv_width)),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "wa": _init(ks[3], (w, w)),
+        "wx": _init(ks[4], (w, w)),
+        "lam": jax.random.uniform(ks[5], (w,), minval=2.0, maxval=4.0),
+        "out": _init(ks[6], (w, d)),
+    }
+
+
+def _conv1d(x, w, b, state=None):
+    """Causal depthwise conv; x (B,S,W), w (K,W). state: (B,K-1,W) for decode."""
+    K = w.shape[0]
+    if state is not None:
+        xp = jnp.concatenate([state, x], axis=1)  # (B, K-1+S, W)
+        new_state = xp[:, -(K - 1):] if K > 1 else state
+    else:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        new_state = None
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K)) + b
+    return out.astype(x.dtype), new_state
+
+
+def _rglru_coeffs(params, xc, dt):
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, params["wa"].astype(dt)).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, params["wx"].astype(dt)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = (i * xc.astype(jnp.float32))
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    return a, b
+
+
+def rglru_block(params, x, cfg: ModelConfig, state=None, *, decode=False):
+    """x: (B,S,D) -> (B,S,D). state = (conv_state, h) when decoding."""
+    dt = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["in_gate"].astype(dt)))
+    xin = jnp.einsum("bsd,dw->bsw", x, params["in_x"].astype(dt))
+
+    if decode:
+        conv_state, h = state
+        xc, new_conv = _conv1d(xin, params["conv_w"].astype(dt), params["conv_b"].astype(dt), conv_state)
+        a, b = _rglru_coeffs(params, xc, dt)
+        h_new = a[:, 0] * h + b[:, 0]           # (B, W)
+        y = h_new[:, None].astype(dt)
+        new_state = (new_conv, h_new)
+    else:
+        xc, _ = _conv1d(xin, params["conv_w"].astype(dt), params["conv_b"].astype(dt))
+        a, b = _rglru_coeffs(params, xc, dt)
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+        y = h.astype(dt)
+        new_state = None
+
+    y = constrain(y, "batch", "seq", "ffn")
+    out = jnp.einsum("bsw,wd->bsd", y * gate, params["out"].astype(dt))
+    return (out, new_state) if decode else out
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    w = cfg.lru_width or cfg.d_model
+    conv = jnp.zeros((batch, cfg.conv_width - 1, w), dtype)
+    h = jnp.zeros((batch, w), jnp.float32)
+    return conv, h

@@ -1,0 +1,89 @@
+"""Logical-axis sharding rules (flax-partitioning style, dependency-free).
+
+Model code annotates tensors with *logical* axis names; the launcher installs
+a rule table mapping logical names to mesh axes.  ``constrain`` becomes a
+no-op when no rules are installed (single-device tests), so model code is
+identical on 1 chip and 512.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+DEFAULT_RULES = {
+    # activations
+    "batch": None, "seq": None, "embed": None, "heads": None, "kv_heads": None,
+    "head_dim": None, "ffn": None, "vocab": None, "experts": None,
+    "expert_cap": None, "state": None, "chunk": None,
+    # params
+    "p_embed": None, "p_vocab": None, "p_ffn": None, "p_heads": None,
+    "p_head_dim": None, "p_experts": None, "p_fsdp": None,
+}
+
+
+def rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(table: dict):
+    old = rules()
+    _state.rules = {**DEFAULT_RULES, **table}
+    try:
+        yield
+    finally:
+        _state.rules = old
+
+
+def spec(*names: Optional[str]) -> P:
+    """Build a PartitionSpec from logical axis names using installed rules."""
+    tab = rules()
+    if tab is None:
+        return P(*([None] * len(names)))
+    return P(*[tab.get(n) if n else None for n in names])
+
+
+def constrain(x, *names: Optional[str]):
+    """with_sharding_constraint by logical axes; no-op without rules."""
+    if rules() is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec(*names))
+
+
+def make_rules(mesh_axes: Sequence[str], *, fsdp: bool = False,
+               shard_heads: bool = True, shard_head_dim: bool = False,
+               seq_shard: bool = False) -> dict:
+    """Standard DP/TP(/fsdp) rule table for a ('pod','data','model') mesh."""
+    data_axes: Tuple[str, ...] = tuple(a for a in mesh_axes if a in ("pod", "data"))
+    data: Union[Tuple[str, ...], str, None] = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+    model = "model" if "model" in mesh_axes else None
+    table = {
+        "batch": data,
+        "seq": model if seq_shard else None,
+        "embed": None,
+        "heads": model if shard_heads else None,
+        "kv_heads": model if shard_heads else None,
+        "head_dim": model if shard_head_dim else None,
+        "ffn": model,
+        "vocab": model,
+        "experts": model,
+        "expert_cap": None,
+        "state": None,
+        "chunk": None,
+        "p_embed": data if fsdp else None,
+        "p_vocab": model,
+        "p_ffn": model,
+        "p_heads": model if shard_heads else None,
+        "p_head_dim": model if shard_head_dim else None,
+        "p_experts": model,
+        "p_fsdp": data if fsdp else None,
+    }
+    return table

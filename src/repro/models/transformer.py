@@ -1,0 +1,458 @@
+"""Model assembly: decoder LMs (dense/MoE/hybrid/SSM/VLM) and enc-dec.
+
+Uniform-block families stack layer params on a leading axis and run
+``lax.scan`` (+ remat) so 126-layer HLOs stay small; the hybrid family
+(RecurrentGemma's 2:1 RG-LRU/attention pattern) unrolls a python loop.
+
+Public entry points:
+  init_params(cfg, key)
+  forward(params, cfg, batch)            -> final hidden states
+  train_loss(params, cfg, batch)         -> scalar loss + metrics
+  init_cache(cfg, batch, seq_len)        -> decode cache pytree
+  prefill(params, cfg, tokens, ...)      -> (logits, cache)
+  decode_step(params, cfg, cache, token, pos) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+from .mamba2 import init_mamba2_block, init_mamba2_state, mamba2_block
+from .rglru import init_rglru_block, init_rglru_state, rglru_block
+from .sharding import constrain
+
+Params = Dict[str, Any]
+
+
+# =====================================================================
+# init
+# =====================================================================
+
+
+def _init_dense_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if cfg.family == "moe" :
+        p["moe"] = L.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def _init_rec_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "rec": init_rglru_block(ks[0], cfg),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": L.init_mlp(ks[1], cfg),
+    }
+
+
+def _init_ssm_block(key, cfg: ModelConfig):
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ssm": init_mamba2_block(key, cfg),
+    }
+
+
+def _init_encdec_block(key, cfg: ModelConfig, cross: bool):
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": L.init_mlp(ks[1], cfg),
+    }
+    if cross:
+        p["ln_x"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["xattn"] = L.init_attention(ks[2], cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    params: Params = {"embed": L.init_embed(ks[0], cfg),
+                      "ln_f": jnp.zeros((cfg.d_model,), jnp.float32)}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        bkeys = jax.random.split(ks[1], cfg.n_layers)
+        params["blocks"] = jax.vmap(lambda k: _init_dense_block(k, cfg))(bkeys)
+        if cfg.family == "vlm":
+            params["patch_proj"] = L._init(ks[2], (cfg.d_model, cfg.d_model))
+    elif cfg.family == "ssm":
+        bkeys = jax.random.split(ks[1], cfg.n_layers)
+        params["blocks"] = jax.vmap(lambda k: _init_ssm_block(k, cfg))(bkeys)
+    elif cfg.family == "hybrid":
+        blocks = []
+        bkeys = jax.random.split(ks[1], cfg.n_layers)
+        for i in range(cfg.n_layers):
+            if cfg.is_attn_layer(i):
+                blocks.append(_init_dense_block(bkeys[i], cfg))
+            else:
+                blocks.append(_init_rec_block(bkeys[i], cfg))
+        params["blocks_list"] = blocks
+    elif cfg.family == "encdec":
+        ekeys = jax.random.split(ks[1], cfg.enc_layers)
+        dkeys = jax.random.split(ks[2], cfg.dec_layers)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _init_encdec_block(k, cfg, cross=False))(ekeys)
+        params["dec_blocks"] = jax.vmap(
+            lambda k: _init_encdec_block(k, cfg, cross=True))(dkeys)
+        params["src_proj"] = L._init(ks[3], (cfg.d_model, cfg.d_model))
+        params["ln_enc"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# =====================================================================
+# blocks (forward)
+# =====================================================================
+
+
+def _dense_block(p, x, cfg: ModelConfig, positions, *, causal=True, window=0):
+    h = L.rmsnorm(x, p["ln1"], cfg)
+    x = x + L.attention_block(p["attn"], h, cfg, positions, causal=causal, window=window)
+    h = L.rmsnorm(x, p["ln2"], cfg)
+    if "moe" in p:
+        x = x + L.moe_block(p["moe"], h, cfg)
+    else:
+        x = x + L.mlp_block(p["mlp"], h, cfg)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def _rec_block(p, x, cfg: ModelConfig):
+    h = L.rmsnorm(x, p["ln1"], cfg)
+    x = x + rglru_block(p["rec"], h, cfg)
+    h = L.rmsnorm(x, p["ln2"], cfg)
+    x = x + L.mlp_block(p["mlp"], h, cfg)
+    return x
+
+
+def _ssm_block(p, x, cfg: ModelConfig):
+    h = L.rmsnorm(x, p["ln1"], cfg)
+    return x + mamba2_block(p["ssm"], h, cfg)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _layer_slice(stacked, i):
+    return jax.tree.map(lambda a: a[i], stacked)
+
+
+def _scan_blocks(stacked, x, body, cfg: ModelConfig = None):
+    """lax.scan over stacked layer params, or an unrolled python loop when
+    cfg.scan_layers=False (used by the roofline extractor: XLA's cost
+    analysis counts while bodies once, so trip counts must be unrolled to
+    be measured)."""
+    if cfg is not None and not cfg.scan_layers:
+        n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+        for i in range(n):
+            x = body(_layer_slice(stacked, i), x)
+        return x
+
+    def step(h, lp):
+        return body(lp, h), None
+
+    x, _ = jax.lax.scan(step, x, stacked)
+    return x
+
+
+# =====================================================================
+# forward / loss
+# =====================================================================
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any]):
+    """Returns final-norm hidden states (B, S, D) of the decoder."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+
+    if cfg.family == "encdec":
+        return _encdec_forward(params, cfg, batch)
+
+    x = L.embed(params["embed"], tokens, cfg)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(x.dtype)  # (B, P, D)
+        pe = jnp.einsum("bpd,de->bpe", patches, params["patch_proj"].astype(x.dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+        S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        body = _remat(lambda p, h: _dense_block(p, h, cfg, positions), cfg)
+        x = _scan_blocks(params["blocks"], x, body, cfg)
+    elif cfg.family == "ssm":
+        body = _remat(lambda p, h: _ssm_block(p, h, cfg), cfg)
+        x = _scan_blocks(params["blocks"], x, body, cfg)
+    elif cfg.family == "hybrid":
+        for i, p in enumerate(params["blocks_list"]):
+            if cfg.is_attn_layer(i):
+                body = _remat(lambda p, h: _dense_block(
+                    p, h, cfg, positions, window=cfg.local_window), cfg)
+            else:
+                body = _remat(lambda p, h: _rec_block(p, h, cfg), cfg)
+            x = body(p, x)
+    else:
+        raise ValueError(cfg.family)
+
+    return L.rmsnorm(x, params["ln_f"], cfg)
+
+
+def _encdec_forward(params: Params, cfg: ModelConfig, batch):
+    src = batch["src_embeds"]          # (B, S_src, D) — stub frontend output
+    tokens = batch["tokens"]           # (B, S_tgt)
+    B, S_src = src.shape[:2]
+
+    xe = jnp.einsum("bsd,de->bse", src.astype(L.COMPUTE_DTYPE),
+                    params["src_proj"].astype(L.COMPUTE_DTYPE))
+    e_pos = jnp.broadcast_to(jnp.arange(S_src, dtype=jnp.int32), (B, S_src))
+    enc_body = _remat(lambda p, h: _dense_block(p, h, cfg, e_pos, causal=False), cfg)
+    xe = _scan_blocks(params["enc_blocks"], xe, enc_body, cfg)
+    xe = L.rmsnorm(xe, params["ln_enc"], cfg)
+
+    xd = L.embed(params["embed"], tokens, cfg)
+    S = tokens.shape[1]
+    d_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def dec_block(p, h):
+        a = L.rmsnorm(h, p["ln1"], cfg)
+        h = h + L.attention_block(p["attn"], a, cfg, d_pos, causal=True)
+        a = L.rmsnorm(h, p["ln_x"], cfg)
+        mem_k = jnp.einsum("bsd,dhk->bshk", xe, p["xattn"]["wk"].astype(xe.dtype))
+        mem_v = jnp.einsum("bsd,dhk->bshk", xe, p["xattn"]["wv"].astype(xe.dtype))
+        h = h + L.cross_attention_block(p["xattn"], a, (mem_k, mem_v), cfg)
+        a = L.rmsnorm(h, p["ln2"], cfg)
+        return h + L.mlp_block(p["mlp"], a, cfg)
+
+    xd = _scan_blocks(params["dec_blocks"], xd, _remat(dec_block, cfg), cfg)
+    return L.rmsnorm(xd, params["ln_f"], cfg)
+
+
+def train_loss(params: Params, cfg: ModelConfig, batch):
+    """Next-token cross-entropy (+ small z-loss); returns (loss, metrics)."""
+    h = forward(params, cfg, batch)
+    tokens = batch["tokens"]
+    if cfg.family == "vlm":
+        h = h[:, cfg.num_patches :]  # loss only on the text positions
+    lg = L.logits(params["embed"], h, cfg).astype(jnp.float32)
+    targets = tokens[:, 1:]
+    lg = lg[:, :-1]
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    mask = mask[:, 1:].astype(jnp.float32) if mask is not None else jnp.ones_like(gold)
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    zloss = 1e-4 * ((lse * mask) ** 2).sum() / denom
+    metrics = {"nll": loss, "zloss": zloss,
+               "tokens": denom, "acc": ((lg.argmax(-1) == targets) * mask).sum() / denom}
+    return loss + zloss, metrics
+
+
+# =====================================================================
+# decode (serving)
+# =====================================================================
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """Decode cache pytree for one token step with max context ``seq_len``."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def kv_cache(S):
+        return {
+            "k": jnp.zeros((batch, S, kv, hd), dtype),
+            "v": jnp.zeros((batch, S, kv, hd), dtype),
+        }
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"layers": jax.vmap(lambda _: kv_cache(seq_len))(jnp.arange(cfg.n_layers))}
+    if cfg.family == "ssm":
+        conv, h = init_mamba2_state(cfg, batch, dtype)
+        return {"layers": {
+            "conv": jnp.zeros((cfg.n_layers,) + conv.shape, conv.dtype),
+            "h": jnp.zeros((cfg.n_layers,) + h.shape, h.dtype),
+        }}
+    if cfg.family == "hybrid":
+        caches = []
+        W = min(cfg.local_window, seq_len)
+        for i in range(cfg.n_layers):
+            if cfg.is_attn_layer(i):
+                caches.append(kv_cache(W))       # ring buffer of window size
+            else:
+                conv, h = init_rglru_state(cfg, batch, dtype)
+                caches.append({"conv": conv, "h": h})
+        return {"layers_list": caches}
+    if cfg.family == "encdec":
+        self_caches = jax.vmap(lambda _: kv_cache(seq_len))(jnp.arange(cfg.dec_layers))
+        # cross K/V per decoder layer over the (stub) source length
+        s_src = max(seq_len // cfg.src_len_ratio, 1)
+        cross = {
+            "k": jnp.zeros((cfg.dec_layers, batch, s_src, kv, hd), dtype),
+            "v": jnp.zeros((cfg.dec_layers, batch, s_src, kv, hd), dtype),
+        }
+        return {"layers": self_caches, "cross": cross}
+    raise ValueError(cfg.family)
+
+
+def _scan_decode(params_stacked, cache_stacked, x, step, cfg: ModelConfig):
+    """Layer scan for decode, unrollable for the roofline extractor."""
+    if not cfg.scan_layers:
+        n = jax.tree_util.tree_leaves(params_stacked)[0].shape[0]
+        outs = []
+        for i in range(n):
+            x, c = step(x, (_layer_slice(params_stacked, i),
+                            _layer_slice(cache_stacked, i)))
+            outs.append(c)
+        new = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        return x, new
+    return jax.lax.scan(step, x, (params_stacked, cache_stacked))
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache, token, pos):
+    """One-token decode. token: (B, 1) int32; pos: scalar int32 array."""
+    x = L.embed(params["embed"], token, cfg)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def step(h, inp):
+            p, c = inp
+            a = L.rmsnorm(h, p["ln1"], cfg)
+            o, ck, cv = L.decode_attention(p["attn"], a, c["k"], c["v"], pos, cfg)
+            h = h + o
+            a = L.rmsnorm(h, p["ln2"], cfg)
+            h = h + (L.moe_block(p["moe"], a, cfg) if "moe" in p else L.mlp_block(p["mlp"], a, cfg))
+            return h, {"k": ck, "v": cv}
+
+        x, new_layers = _scan_decode(params["blocks"], cache["layers"], x, step, cfg)
+        new_cache = {"layers": new_layers}
+
+    elif cfg.family == "ssm":
+        def step(h, inp):
+            p, c = inp
+            a = L.rmsnorm(h, p["ln1"], cfg)
+            o, st = mamba2_block(p["ssm"], a, cfg, (c["conv"], c["h"]), decode=True)
+            return h + o, {"conv": st[0], "h": st[1]}
+
+        x, new_layers = _scan_decode(params["blocks"], cache["layers"], x, step, cfg)
+        new_cache = {"layers": new_layers}
+
+    elif cfg.family == "hybrid":
+        new_list = []
+        W = cfg.local_window
+        for i, p in enumerate(params["blocks_list"]):
+            c = cache["layers_list"][i]
+            a = L.rmsnorm(x, p["ln1"], cfg)
+            if cfg.is_attn_layer(i):
+                ring = jnp.minimum(jnp.mod(pos, c["k"].shape[1]), c["k"].shape[1] - 1)
+                o, ck, cv = _ring_decode_attention(p["attn"], a, c, pos, ring, cfg)
+                x = x + o
+                new_list.append({"k": ck, "v": cv})
+            else:
+                o, st = rglru_block(p["rec"], a, cfg, (c["conv"], c["h"]), decode=True)
+                x = x + o
+                new_list.append({"conv": st[0], "h": st[1]})
+            a = L.rmsnorm(x, p["ln2"], cfg)
+            x = x + L.mlp_block(p["mlp"], a, cfg)
+        new_cache = {"layers_list": new_list}
+
+    elif cfg.family == "encdec":
+        def step(h, inp):
+            p, c, xk, xv = inp
+            a = L.rmsnorm(h, p["ln1"], cfg)
+            o, ck, cv = L.decode_attention(p["attn"], a, c["k"], c["v"], pos, cfg)
+            h = h + o
+            a = L.rmsnorm(h, p["ln_x"], cfg)
+            h = h + L.cross_attention_block(p["xattn"], a, (xk, xv), cfg)
+            a = L.rmsnorm(h, p["ln2"], cfg)
+            h = h + L.mlp_block(p["mlp"], a, cfg)
+            return h, {"k": ck, "v": cv}
+
+        def step2(h, inp):
+            p, (c, xk, xv) = inp
+            return step(h, (p, c, xk, xv))
+
+        x, new_layers = _scan_decode(
+            params["dec_blocks"],
+            (cache["layers"], cache["cross"]["k"], cache["cross"]["v"]),
+            x, step2, cfg)
+        new_cache = {"layers": new_layers, "cross": cache["cross"]}
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rmsnorm(x, params["ln_f"], cfg)
+    lg = L.logits(params["embed"], x, cfg)
+    return lg, new_cache
+
+
+def _ring_decode_attention(p, x, c, pos, ring, cfg: ModelConfig):
+    """Local-attention decode against a window-sized ring buffer."""
+    import math as _m
+
+    dt = x.dtype
+    B, W, KV, hd = c["k"].shape
+    H = cfg.n_heads
+    G = H // KV
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(c["k"], k.astype(c["k"].dtype), (0, ring, 0, 0))
+    cv = jax.lax.dynamic_update_slice(c["v"], v.astype(c["v"].dtype), (0, ring, 0, 0))
+
+    slot = jnp.arange(W)
+    # absolute position held by each ring slot after this write
+    wrap = (pos // W) * W + slot
+    slot_pos = jnp.where(slot <= ring, wrap, wrap - W)
+    valid = (slot_pos >= 0) & (slot_pos <= pos) & (slot_pos > pos - W)
+
+    qg = q.reshape(B, 1, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg[:, 0], ck.astype(dt)).astype(jnp.float32)
+    s = s / _m.sqrt(hd)
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", pr.astype(dt), cv.astype(dt)).reshape(B, 1, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+    return out, ck, cv
+
+
+def prefill(params: Params, cfg: ModelConfig, batch, cache):
+    """Fill a decode cache by running tokens through decode_step sequentially.
+
+    Simple reference implementation (token-at-a-time); production prefill
+    lowers `forward` with cache capture, but for tests/examples this is
+    enough and exercises identical code to decode.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+
+    def step(carry, i):
+        cache, _ = carry
+        lg, cache = decode_step(params, cfg, cache, jax.lax.dynamic_slice(
+            tokens, (0, i), (B, 1)), i)
+        return (cache, lg), None
+
+    (cache, lg), _ = jax.lax.scan(step, (cache, jnp.zeros((B, 1, cfg.padded_vocab),
+                                                          L.COMPUTE_DTYPE)),
+                                  jnp.arange(S))
+    return lg, cache

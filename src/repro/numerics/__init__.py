@@ -1,0 +1,10 @@
+"""Posit numerics layer: tensor quantization + posit-division-backed ops."""
+
+from .formats import NUMERIC_FORMATS, NumericsConfig, resolve_format  # noqa: F401
+from .quant import posit_quantize_ste, quantize_tensor, dequantize_tensor  # noqa: F401
+from .posit_ops import (  # noqa: F401
+    posit_div_values,
+    posit_rmsnorm_div,
+    posit_router_norm,
+    posit_softmax,
+)

@@ -1,0 +1,44 @@
+"""Numeric format registry + per-model numerics configuration."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.posit import POSIT8, POSIT16, POSIT32, PositFormat
+
+NUMERIC_FORMATS = {
+    "posit8": POSIT8,
+    "posit16": POSIT16,
+    "posit32": POSIT32,
+}
+
+
+def resolve_format(name: str) -> PositFormat:
+    if name not in NUMERIC_FORMATS:
+        raise KeyError(f"unknown posit format {name!r}; have {list(NUMERIC_FORMATS)}")
+    return NUMERIC_FORMATS[name]
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsConfig:
+    """Per-model posit numerics switches (the paper's unit as a feature).
+
+    posit_division: route softmax / norm / router denominators through the
+        digit-recurrence posit divider (emulation of the paper's unit).
+    div_format / div_algo: which posit format + Table IV variant to use.
+    grad_compress_format: posit format for cross-pod gradient all-reduce
+        payloads (None = uncompressed f32 wire format).
+    kv_cache_format: posit format for KV-cache storage at serving time.
+    """
+
+    posit_division: bool = False
+    div_format: str = "posit16"
+    div_algo: str = "srt_r4_cs_of_fr"
+    div_unroll: bool = False   # unroll the recurrence (analysis/TPU perf)
+    grad_compress_format: Optional[str] = None
+    kv_cache_format: Optional[str] = None
+
+    @property
+    def div_fmt(self) -> PositFormat:
+        return resolve_format(self.div_format)

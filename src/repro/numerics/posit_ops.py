@@ -1,0 +1,68 @@
+"""Model ops whose divisions run through the paper's digit-recurrence divider.
+
+These are the integration points of the paper's contribution inside real
+models: softmax denominators, RMSNorm reciprocals and MoE router
+normalization.  Values are quantized to the configured posit format, divided
+with the configured Table IV variant (bit-exact datapath emulation), and
+dequantized.  Gradients flow straight-through (the quantized division is a
+fake-quant of the true division).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.divider import posit_divide
+from repro.core.posit import PositFormat, float_to_posit, posit_to_float
+from .formats import NumericsConfig
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _posit_div_ste(fmt_n: int, variant: str, unroll: bool, a, b):
+    fmt = PositFormat(fmt_n)
+    pa = float_to_posit(fmt, a)
+    pb = float_to_posit(fmt, b)
+    return posit_to_float(fmt, posit_divide(fmt, pa, pb, variant, unroll))
+
+
+def _div_fwd(fmt_n, variant, unroll, a, b):
+    out = _posit_div_ste(fmt_n, variant, unroll, a, b)
+    return out, (a, b, out)
+
+
+def _div_bwd(fmt_n, variant, unroll, res, g):
+    a, b, out = res
+    ga = g / b
+    gb = -g * out / b
+    return ga, gb
+
+
+_posit_div_ste.defvjp(_div_fwd, _div_bwd)
+
+
+def posit_div_values(a, b, cfg: NumericsConfig):
+    """a / b computed in posit arithmetic (float in, float out, STE grads)."""
+    a, b = jnp.broadcast_arrays(a, b)
+    return _posit_div_ste(cfg.div_fmt.n, cfg.div_algo, cfg.div_unroll, a, b)
+
+
+def posit_softmax(x, cfg: NumericsConfig, axis: int = -1):
+    """Numerically-stable softmax with a posit-divided normalizer."""
+    m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    e = jnp.exp(x - m)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return posit_div_values(e, s, cfg)
+
+
+def posit_rmsnorm_div(x, rms, cfg: NumericsConfig):
+    """x / rms via the posit divider (rms broadcast along the last axis)."""
+    return posit_div_values(x, rms, cfg)
+
+
+def posit_router_norm(weights, cfg: NumericsConfig, axis: int = -1):
+    """Normalize MoE router weights to sum to 1 with posit division."""
+    s = jnp.sum(weights, axis=axis, keepdims=True)
+    return posit_div_values(weights, s, cfg)

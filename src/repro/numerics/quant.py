@@ -1,0 +1,64 @@
+"""Tensor quantization to posit formats with straight-through gradients."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.posit import PositFormat, float_to_posit, posit_to_float
+
+
+def quantize_tensor(fmt: PositFormat, x):
+    """float32 tensor -> posit bit patterns (uint32; pack externally if needed)."""
+    return float_to_posit(fmt, x)
+
+
+def dequantize_tensor(fmt: PositFormat, p):
+    return posit_to_float(fmt, p)
+
+
+def posit_round_value(fmt: PositFormat, x):
+    """Round float tensor to the nearest posit value (stays float32)."""
+    return posit_to_float(fmt, float_to_posit(fmt, x))
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ste(fmt_n: int, x):
+    fmt = PositFormat(fmt_n)
+    return posit_round_value(fmt, x)
+
+
+def _ste_fwd(fmt_n, x):
+    return _ste(fmt_n, x), None
+
+
+def _ste_bwd(fmt_n, _, g):
+    return (g,)
+
+
+_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def posit_quantize_ste(fmt: PositFormat, x):
+    """Fake-quantize with straight-through estimator (for posit-aware training)."""
+    return _ste(fmt.n, x)
+
+
+def pack_posit16(p):
+    """uint32 posit16 patterns -> uint16 wire format (for collectives)."""
+    return p.astype(jnp.uint16)
+
+
+def unpack_posit16(w):
+    return w.astype(jnp.uint32)
+
+
+def pack_posit8(p):
+    return p.astype(jnp.uint8)
+
+
+def unpack_posit8(w):
+    return w.astype(jnp.uint32)

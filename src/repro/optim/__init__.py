@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from .schedule import cosine_schedule, wsd_schedule  # noqa: F401
+from .grad_compress import compress_gradients, posit_ring_all_reduce  # noqa: F401

@@ -1,0 +1,29 @@
+"""LR schedules (multiplier form, composed with AdamWConfig.lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(warmup: int, total: int, final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+
+    return f
+
+
+def wsd_schedule(warmup: int, total: int, decay_frac: float = 0.1):
+    """Warmup-stable-decay: linear warmup, flat, linear cooldown."""
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        decay_start = total * (1 - decay_frac)
+        dec = jnp.clip(1.0 - (s - decay_start) / jnp.maximum(total - decay_start, 1), 0.0, 1.0)
+        return jnp.where(s < warmup, warm, jnp.where(s < decay_start, 1.0, dec))
+
+    return f

@@ -1,0 +1,2 @@
+from .trainer import TrainConfig, Trainer, make_train_step, init_train_state  # noqa: F401
+from .checkpoint import CheckpointManager  # noqa: F401

@@ -1,0 +1,33 @@
+"""Elastic scaling: re-shard a training state onto a different mesh.
+
+Checkpoints store unsharded host arrays (see checkpoint.py), so recovering
+from node loss is: rebuild a smaller/larger mesh, derive shardings for it,
+and ``device_put`` the restored state.  ``remesh_state`` does the same for a
+live state (planned resize without a checkpoint round-trip).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def remesh_state(state, shardings) -> Any:
+    """Move/reshard an arbitrary pytree onto new shardings (same structure)."""
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    shard_leaves = jax.tree_util.tree_leaves(shardings)
+    assert len(leaves) == len(shard_leaves)
+    out = [jax.device_put(np.asarray(l), s) for l, s in zip(leaves, shard_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def survivable_mesh_shapes(n_devices: int, model_parallel: int):
+    """Mesh shapes reachable after losing nodes, keeping TP size fixed."""
+    shapes = []
+    d = n_devices // model_parallel
+    while d >= 1:
+        shapes.append((d, model_parallel))
+        d //= 2
+    return shapes

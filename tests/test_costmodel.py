@@ -1,0 +1,70 @@
+"""Hardware cost model: Table II exactness + paper trend assertions."""
+
+import pytest
+
+from repro.core import costmodel
+from repro.core.posit import PositFormat
+
+
+def test_table2_exact():
+    assert costmodel.table2() == costmodel.PAPER_TABLE2
+
+
+@pytest.mark.parametrize("n", [16, 32, 64])
+def test_radix4_faster_combinational(n):
+    """Section IV: 'radix-4 implementations are superior to radix-2 in delay'."""
+    fmt = PositFormat(n)
+    r2 = costmodel.estimate(fmt, "srt_r2_cs", False)
+    r4 = costmodel.estimate(fmt, "srt_r4_cs", False)
+    assert r4.delay_fo4 < r2.delay_fo4
+
+
+@pytest.mark.parametrize("n", [16, 32, 64])
+def test_cs_cuts_critical_path(n):
+    """'the most significant delay reduction is obtained in the CS variant'."""
+    fmt = PositFormat(n)
+    plain = costmodel.estimate(fmt, "srt_r2", False)
+    cs = costmodel.estimate(fmt, "srt_r2_cs", False)
+    assert cs.delay_fo4 < plain.delay_fo4
+    # and the relative cut grows with the datapath width
+    if n > 16:
+        prev = PositFormat(n // 2)
+        cut_n = 1 - cs.delay_fo4 / plain.delay_fo4
+        cut_p = 1 - (costmodel.estimate(prev, "srt_r2_cs", False).delay_fo4
+                     / costmodel.estimate(prev, "srt_r2", False).delay_fo4)
+        assert cut_n > cut_p
+
+
+@pytest.mark.parametrize("n", [16, 32, 64])
+def test_pipelined_radix4_energy_win(n):
+    """'radix-4 versions showing significant energy efficiency gains'."""
+    fmt = PositFormat(n)
+    r2 = costmodel.estimate(fmt, "srt_r2_cs_of_fr", True)
+    r4 = costmodel.estimate(fmt, "srt_r4_cs_of_fr", True)
+    assert r4.energy_pipe_au < r2.energy_pipe_au
+    assert r4.cycles < r2.cycles
+
+
+def test_of_adds_area():
+    """On-the-fly conversion costs area (Section III-B3)."""
+    fmt = PositFormat(32)
+    for pipe in (False, True):
+        base = costmodel.estimate(fmt, "srt_r4_cs", pipe)
+        of = costmodel.estimate(fmt, "srt_r4_cs_of", pipe)
+        assert of.area_ge > base.area_ge
+
+
+def test_scaling_adds_cycle():
+    fmt = PositFormat(32)
+    plain = costmodel.estimate(fmt, "srt_r4_cs_of_fr", True)
+    scaled = costmodel.estimate(fmt, "srt_r4_scaled", True)
+    assert scaled.cycles == plain.cycles + 1
+
+
+def test_radix4_area_advantage_amortized_for_wide_formats():
+    """'such an overhead is amortized for larger datapaths' (Fig 6)."""
+    comb16 = (costmodel.estimate(PositFormat(16), "srt_r4_cs_of_fr", False).area_ge
+              / costmodel.estimate(PositFormat(16), "srt_r2_cs_of_fr", False).area_ge)
+    comb64 = (costmodel.estimate(PositFormat(64), "srt_r4_cs_of_fr", False).area_ge
+              / costmodel.estimate(PositFormat(64), "srt_r2_cs_of_fr", False).area_ge)
+    assert comb64 < comb16

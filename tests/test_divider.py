@@ -1,0 +1,111 @@
+"""Digit-recurrence divider: exhaustive bit-exactness + paper artifacts."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import divider, goldens, seltables
+from repro.core.posit import PositFormat
+
+ALL_VARIANTS = list(divider.VARIANTS)
+
+
+@pytest.fixture(scope="module")
+def posit8_golden():
+    n = 8
+    N = 1 << n
+    px = np.repeat(np.arange(N, dtype=np.uint32), N)
+    pd = np.tile(np.arange(N, dtype=np.uint32), N)
+    gold = np.array([goldens.div(int(a), int(b), n) for a, b in zip(px, pd)],
+                    dtype=np.uint32)
+    return px, pd, gold
+
+
+@pytest.mark.parametrize("variant", ALL_VARIANTS)
+def test_posit8_exhaustive(variant, posit8_golden):
+    px, pd, gold = posit8_golden
+    fmt = PositFormat(8)
+    out = np.asarray(divider.posit_divide(fmt, jnp.asarray(px),
+                                          jnp.asarray(pd), variant))
+    assert (out == gold).all(), f"{variant}: {(out != gold).sum()} mismatches"
+
+
+@pytest.mark.parametrize("n", [16, 32])
+@pytest.mark.parametrize("variant", ["nrd", "srt_r2_cs_of_fr",
+                                     "srt_r4_cs_of_fr", "srt_r4_scaled"])
+def test_random_sample_vs_golden(n, variant):
+    rng = np.random.default_rng(n * 7 + 1)
+    cnt = 20000
+    px = rng.integers(0, 1 << n, cnt, dtype=np.uint64).astype(np.uint32)
+    pd = rng.integers(0, 1 << n, cnt, dtype=np.uint64).astype(np.uint32)
+    fmt = PositFormat(n)
+    out = np.asarray(divider.posit_divide(fmt, jnp.asarray(px),
+                                          jnp.asarray(pd), variant))
+    gold = np.array([goldens.div(int(a), int(b), n) for a, b in zip(px, pd)],
+                    dtype=np.uint32)
+    assert (out == gold).all()
+
+
+def test_variants_mutually_identical_posit10():
+    """All Table IV variants compute the same correctly-rounded quotient."""
+    n = 10
+    rng = np.random.default_rng(3)
+    cnt = 30000
+    px = jnp.asarray(rng.integers(0, 1 << n, cnt, dtype=np.uint64).astype(np.uint32))
+    pd = jnp.asarray(rng.integers(0, 1 << n, cnt, dtype=np.uint64).astype(np.uint32))
+    fmt = PositFormat(n)
+    ref = np.asarray(divider.posit_divide(fmt, px, pd, "nrd"))
+    for v in ALL_VARIANTS[1:]:
+        out = np.asarray(divider.posit_divide(fmt, px, pd, v))
+        assert (out == ref).all(), v
+
+
+def test_table3_worked_examples():
+    """Paper Table III, Posit10: bit-for-bit."""
+    fmt = PositFormat(10)
+    X = int("0011010111", 2)
+    for d_str, q_str in ((("0001001100"), ("0110011111")),
+                         (("0000100110"), ("0111010000"))):
+        got = int(divider.posit_divide(
+            fmt, jnp.asarray([X], dtype=jnp.uint32),
+            jnp.asarray([int(d_str, 2)], dtype=jnp.uint32))[0])
+        assert got == int(q_str, 2)
+
+
+def test_table2_iteration_counts():
+    """Paper Table II: It = ceil(h / log2 r), h = n-1-floor(rho)."""
+    expect = {(16, 2): 14, (32, 2): 30, (64, 2): 62,
+              (16, 4): 8, (32, 4): 16, (64, 4): 32}
+    for (n, r), it in expect.items():
+        v = "srt_r2_cs" if r == 2 else "srt_r4_cs"
+        assert divider.VARIANTS[v].iterations(PositFormat(n)) == it
+
+
+def test_special_cases():
+    fmt = PositFormat(16)
+    nar = 1 << 15
+    px = jnp.asarray([0, 5, nar, 7, 0], dtype=jnp.uint32)
+    pd = jnp.asarray([9, 0, 3, nar, 0], dtype=jnp.uint32)
+    out = np.asarray(divider.posit_divide(fmt, px, pd))
+    assert out[0] == 0          # 0 / x = 0
+    assert out[1] == nar        # x / 0 = NaR
+    assert out[2] == nar        # NaR / x = NaR
+    assert out[3] == nar        # x / NaR = NaR
+    assert out[4] == nar        # 0 / 0 = NaR
+
+
+def test_selection_table_containment():
+    """Derived radix-4 m_k table satisfies Eq 14 on a dense grid."""
+    seltables.verify_radix4_table_exhaustive(steps=32)
+
+
+def test_scaling_factors_table1():
+    """Table I: M*d lands in [1 - 1/64, 1 + 1/8] for all divisor intervals."""
+    from fractions import Fraction as Fr
+
+    for i, (s1, s2) in enumerate(seltables.SCALING_SHIFTS):
+        dlo = Fr(8 + i, 16)
+        dhi = Fr(9 + i, 16)
+        for d in (dlo, dhi - Fr(1, 1 << 12)):
+            m = 1 + Fr(1, 1 << s1) + (Fr(1, 1 << s2) if s2 else 0)
+            assert Fr(63, 64) <= m * d <= Fr(9, 8), (i, float(m * d))

@@ -1,0 +1,89 @@
+"""Property-based tests (hypothesis) on posit-division invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import divider, goldens
+from repro.core.posit import PositFormat
+
+N = 16
+FMT = PositFormat(N)
+NAR = 1 << (N - 1)
+
+pat = st.integers(min_value=0, max_value=(1 << N) - 1)
+
+
+def _div(a, b, variant="srt_r4_cs_of_fr"):
+    return int(divider.posit_divide(
+        FMT, jnp.asarray([a], dtype=jnp.uint32),
+        jnp.asarray([b], dtype=jnp.uint32), variant)[0])
+
+
+@given(pat, pat)
+@settings(max_examples=200, deadline=None)
+def test_matches_golden(a, b):
+    assert _div(a, b) == goldens.div(a, b, N)
+
+
+@given(pat)
+@settings(max_examples=100, deadline=None)
+def test_divide_by_one_is_identity(a):
+    one = goldens.from_float(1.0, N)
+    assert _div(a, one) == (a if a != 0 else 0)
+
+
+@given(pat)
+@settings(max_examples=100, deadline=None)
+def test_x_over_x_is_one(a):
+    if a in (0, NAR):
+        return
+    assert goldens.to_float(_div(a, a), N) == 1.0
+
+
+@given(pat, pat)
+@settings(max_examples=150, deadline=None)
+def test_sign_rule(a, b):
+    """sQ = sX xor sD (paper Eq before Eq 7)."""
+    if a in (0, NAR) or b in (0, NAR):
+        return
+    q = _div(a, b)
+    if q in (0, NAR):
+        return
+    fa, fb, fq = (goldens.to_float(x, N) for x in (a, b, q))
+    assert (fq < 0) == ((fa < 0) != (fb < 0))
+
+
+@given(pat, pat)
+@settings(max_examples=150, deadline=None)
+def test_correctly_rounded_nearest(a, b):
+    """Quotient is the nearest posit to the exact ratio (or saturated)."""
+    if a in (0, NAR) or b in (0, NAR):
+        return
+    q = _div(a, b)
+    fa, fb = goldens.to_float(a, N), goldens.to_float(b, N)
+    exact = fa / fb
+    fq = goldens.to_float(q, N)
+    # compare |error| to the neighbours' errors
+    body = (q if q < NAR else q - (1 << N))
+    for nb in (body - 1, body + 1):
+        nb_pat = nb & ((1 << N) - 1)
+        if nb_pat in (0, NAR):
+            continue
+        fn = goldens.to_float(nb_pat, N)
+        assert abs(fq - exact) <= abs(fn - exact) + 1e-30
+
+
+@given(pat, pat)
+@settings(max_examples=100, deadline=None)
+def test_nar_and_zero_propagation(a, b):
+    assert _div(a, 0) == NAR
+    assert _div(NAR, b) == NAR
+    if b not in (0, NAR):
+        assert _div(0, b) == 0
+
+
+@given(pat, pat)
+@settings(max_examples=60, deadline=None)
+def test_radix2_radix4_agree(a, b):
+    assert _div(a, b, "srt_r2_cs") == _div(a, b, "srt_r4_scaled")

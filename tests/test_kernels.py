@@ -1,0 +1,75 @@
+"""Per-kernel tests: Pallas (interpret mode) vs pure-jnp refs, shape sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import divider
+from repro.core.posit import PositFormat
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(n, shape):
+    cnt = int(np.prod(shape))
+    return RNG.integers(0, 1 << n, cnt, dtype=np.uint64).astype(np.uint32).reshape(shape)
+
+
+def test_posit8_div_kernel_exhaustive():
+    n = 8
+    fmt = PositFormat(n)
+    N = 1 << n
+    px = jnp.asarray(np.repeat(np.arange(N, dtype=np.uint32), N))
+    pd = jnp.asarray(np.tile(np.arange(N, dtype=np.uint32), N))
+    k = np.asarray(ops.posit_div(fmt, px, pd))
+    r = np.asarray(ref.posit_div_ref(fmt, px, pd))
+    b = np.asarray(divider.posit_divide(fmt, px, pd, "srt_r4_cs_of_fr"))
+    assert (k == r).all()
+    assert (k == b).all()
+
+
+@pytest.mark.parametrize("n", [8, 16, 32])
+@pytest.mark.parametrize("shape", [(257,), (5, 7, 11), (130, 260), (1, 1)])
+def test_div_kernel_shape_sweep(n, shape):
+    fmt = PositFormat(n)
+    px, pd = _rand(n, shape), _rand(n, shape)
+    k = np.asarray(ops.posit_div(fmt, jnp.asarray(px), jnp.asarray(pd)))
+    r = np.asarray(ref.posit_div_ref(fmt, jnp.asarray(px), jnp.asarray(pd)))
+    assert k.shape == shape
+    assert (k == r).all()
+
+
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_div_kernel_block_shapes(n):
+    fmt = PositFormat(n)
+    px, pd = _rand(n, (512,)), _rand(n, (512,))
+    base = np.asarray(ops.posit_div(fmt, jnp.asarray(px), jnp.asarray(pd)))
+    for block in ((8, 128), (16, 256), (64, 512)):
+        out = np.asarray(ops.posit_div(fmt, jnp.asarray(px), jnp.asarray(pd),
+                                       block=block))
+        assert (out == base).all(), block
+
+
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_cast_kernels_vs_ref(n):
+    fmt = PositFormat(n)
+    x = RNG.normal(0, 100, 4096).astype(np.float32)
+    x[:8] = [0.0, -0.0, np.inf, -np.inf, np.nan, 1e-30, -1e-30, 1e30]
+    q = np.asarray(ops.posit_quantize(fmt, jnp.asarray(x)))
+    qr = np.asarray(ref.posit_quantize_ref(fmt, jnp.asarray(x)))
+    assert (q == qr).all()
+    dq = np.asarray(ops.posit_dequantize(fmt, jnp.asarray(q)))
+    dqr = np.asarray(ref.posit_dequantize_ref(fmt, jnp.asarray(q)))
+    m = ~np.isnan(dqr)
+    assert (dq[m] == dqr[m]).all()
+    assert np.isnan(dq[~m]).all()
+
+
+def test_quantize_dequantize_roundtrip_error_bound():
+    """|x - P16(x)| / |x| <= 2^-9 for x in posit16's golden zone."""
+    fmt = PositFormat(16)
+    x = RNG.uniform(0.01, 100, 10000).astype(np.float32)
+    dq = np.asarray(ops.posit_dequantize(fmt, ops.posit_quantize(fmt, jnp.asarray(x))))
+    rel = np.abs(dq - x) / np.abs(x)
+    assert rel.max() < 2 ** -9

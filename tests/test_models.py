@@ -1,0 +1,154 @@
+"""Per-arch smoke tests + attention/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import layers as L
+from repro.models import transformer as T
+
+B, S = 2, 96
+
+
+def _batch(cfg, seq=S):
+    batch = {"tokens": (jnp.arange(B * seq, dtype=jnp.int32).reshape(B, seq)
+                        % (cfg.vocab - 1)) + 1}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.full((B, cfg.num_patches, cfg.d_model), 0.01,
+                                    jnp.float32)
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jnp.full((B, seq // cfg.src_len_ratio, cfg.d_model),
+                                       0.01, jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one grad step, shapes + finiteness."""
+    cfg = get_config(arch, smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    loss, metrics = jax.jit(lambda p, b: T.train_loss(p, cfg, b))(params, batch)
+    assert np.isfinite(float(loss))
+    h = jax.jit(lambda p, b: T.forward(p, cfg, b))(params, batch)
+    exp_s = S + (cfg.num_patches if cfg.family == "vlm" else 0)
+    assert h.shape == (B, exp_s, cfg.d_model)
+    assert bool(jnp.isfinite(h.astype(jnp.float32)).all())
+
+    g = jax.jit(jax.grad(lambda p, b: T.train_loss(p, cfg, b)[0]))(params, batch)
+    gn = jax.tree_util.tree_reduce(
+        lambda a, x: a + float(jnp.sum(x.astype(jnp.float32) ** 2)), g, 0.0)
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    cache = T.init_cache(cfg, B, 64)
+    step = jax.jit(lambda p, c, t, i: T.decode_step(p, cfg, c, t, i))
+    tok = jnp.ones((B, 1), jnp.int32)
+    lg, cache = step(params, cache, tok, jnp.int32(0))
+    lg, cache = step(params, cache, tok, jnp.int32(1))
+    assert lg.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.isfinite(lg.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ["granite_8b", "olmoe_1b_7b", "mamba2_2p7b",
+                                  "recurrentgemma_2b", "seamless_m4t_medium"])
+def test_decode_matches_forward(arch, monkeypatch):
+    """Sequential decode reproduces the training forward pass (f32)."""
+    monkeypatch.setattr(L, "COMPUTE_DTYPE", jnp.float32)
+    cfg = get_config(arch, smoke=True)
+    if cfg.n_experts:
+        # capacity drops depend on batch shape; make dispatch drop-free so
+        # sequential decode and batched forward route identically
+        cfg = cfg.replace(capacity_factor=float(cfg.n_experts))
+    seq = 32
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch(cfg, seq)
+
+    h = T.forward(params, cfg, batch)
+    full_logits = L.logits(params["embed"], h, cfg).astype(jnp.float32)
+
+    if cfg.family == "encdec":
+        pytest.skip("encdec decode uses a fresh cross-cache; covered in serve test")
+
+    cache = T.init_cache(cfg, B, seq, dtype=jnp.float32)
+    outs = []
+    for i in range(seq):
+        lg, cache = T.decode_step(params, cfg, cache,
+                                  batch["tokens"][:, i : i + 1], jnp.int32(i))
+        outs.append(lg.astype(jnp.float32))
+    dec_logits = jnp.concatenate(outs, axis=1)
+
+    if cfg.family == "vlm":
+        # forward prepends patch positions; compare text tail only
+        full_logits = full_logits[:, cfg.num_patches :]
+        pytest.skip("vlm decode has no image prefix in this test")
+
+    err = float(jnp.max(jnp.abs(dec_logits - full_logits)))
+    scale = float(jnp.max(jnp.abs(full_logits))) + 1e-6
+    assert err / scale < 2e-3, (err, scale)
+
+
+def test_flash_attention_matches_plain():
+    import math
+
+    cfg = get_config("granite_8b", smoke=True)
+    key = jax.random.PRNGKey(2)
+    H, KV, hd, s = 4, 2, 32, 256
+    q = jax.random.normal(key, (B, s, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(3), (B, s, KV, hd), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(4), (B, s, KV, hd), jnp.float32)
+
+    def plain(q, k, v, causal, window):
+        G = H // KV
+        qg = q.reshape(B, s, KV, G, hd)
+        sc = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / math.sqrt(hd)
+        qp = kp = jnp.arange(s)
+        mask = jnp.ones((s, s), bool)
+        if causal:
+            mask &= qp[:, None] >= kp[None, :]
+        if window:
+            mask &= qp[:, None] - kp[None, :] < window
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+        p = jax.nn.softmax(sc, -1)
+        o = jnp.einsum("bkgqs,bskd->bkgqd", p, v)
+        return o.transpose(0, 3, 1, 2, 4).reshape(B, s, H, hd)
+
+    for causal, window in ((True, 0), (False, 0), (True, 64)):
+        f = L.flash_attention(q, k, v, cfg, causal=causal, window=window)
+        p = plain(q, k, v, causal, window)
+        assert float(jnp.max(jnp.abs(f - p))) < 1e-4
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor >= 1, most tokens keep all their experts."""
+    cfg = get_config("olmoe_1b_7b", smoke=True).replace(capacity_factor=2.0)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    h = T.forward(params, cfg, batch)
+    assert bool(jnp.isfinite(h.astype(jnp.float32)).all())
+
+
+def test_full_configs_param_counts():
+    """Full-size configs build abstract params with expected magnitudes."""
+    import math
+
+    expected = {  # rough total params (incl. embeddings), in billions
+        "granite_8b": (7, 9.5), "yi_34b": (32, 36), "smollm_360m": (0.3, 0.5),
+        "llama3_405b": (390, 420), "olmoe_1b_7b": (6, 8),
+        "mamba2_2p7b": (2.2, 3.2), "internvl2_76b": (68, 80),
+        "recurrentgemma_2b": (2.2, 3.6), "seamless_m4t_medium": (0.7, 1.6),
+        "llama4_scout_17b_a16e": (90, 120),
+    }
+    for arch, (lo, hi) in expected.items():
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+        n = sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(shapes))
+        assert lo * 1e9 < n < hi * 1e9, (arch, n / 1e9)

@@ -1,0 +1,97 @@
+"""Posit decode/encode/casts: exhaustive + property-based."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import goldens, posit
+
+
+@pytest.mark.parametrize("n", [8, 10, 16])
+def test_decode_exhaustive_vs_golden(n):
+    fmt = posit.PositFormat(n)
+    pats = np.arange(1 << n, dtype=np.uint32)
+    d = posit.posit_decode(fmt, jnp.asarray(pats))
+    sign = np.asarray(d.sign)
+    scale = np.asarray(d.scale)
+    sig = np.asarray(d.sig)
+    for p in pats:
+        g = goldens.decode(int(p), n)
+        if g[0] == "zero":
+            assert bool(d.is_zero[p])
+        elif g[0] == "nar":
+            assert bool(d.is_nar[p])
+        else:
+            _, s, T, m = g
+            assert (bool(sign[p]), int(scale[p]), int(sig[p])) == (bool(s), T, m)
+
+
+@pytest.mark.parametrize("n", [8, 10, 16])
+def test_encode_roundtrip_exhaustive(n):
+    fmt = posit.PositFormat(n)
+    pats = np.arange(1 << n, dtype=np.uint32)
+    d = posit.posit_decode(fmt, jnp.asarray(pats))
+    enc = posit.posit_encode(
+        fmt, d.sign, d.scale, d.sig & ((1 << fmt.F) - 1),
+        jnp.zeros_like(d.sig), jnp.zeros_like(d.sig, dtype=bool),
+        d.is_zero, d.is_nar)
+    assert (np.asarray(enc) == pats).all()
+
+
+@pytest.mark.parametrize("n", [8, 16])
+def test_float_casts_exhaustive(n):
+    fmt = posit.PositFormat(n)
+    pats = np.arange(1 << n, dtype=np.uint32)
+    f = np.asarray(posit.posit_to_float(fmt, jnp.asarray(pats)))
+    gf = np.array([goldens.to_float(int(p), n) for p in pats])
+    m = ~np.isnan(gf)
+    assert (f[m] == gf[m]).all()
+    assert np.isnan(f[~m]).all()
+    back = np.asarray(posit.float_to_posit(fmt, jnp.asarray(f)))
+    assert (back == pats).all()
+
+
+@given(st.floats(min_value=-1e30, max_value=1e30,
+                 allow_nan=False, allow_infinity=False))
+@settings(max_examples=300, deadline=None)
+def test_float_to_posit_matches_golden_property(x):
+    """JAX cast == exact Python cast for arbitrary floats (posit16)."""
+    n = 16
+    got = int(posit.float_to_posit(posit.PositFormat(n),
+                                   jnp.asarray([np.float32(x)]))[0])
+    want = goldens.from_float(float(np.float32(x)), n)
+    assert got == want
+
+
+@given(st.integers(min_value=0, max_value=(1 << 16) - 1),
+       st.integers(min_value=0, max_value=(1 << 16) - 1))
+@settings(max_examples=200, deadline=None)
+def test_posit16_order_matches_value_order(a, b):
+    """Posits compare as two's-complement ints (paper Section II-A)."""
+    n = 16
+    fa, fb = goldens.to_float(a, n), goldens.to_float(b, n)
+    if np.isnan(fa) or np.isnan(fb):
+        return
+    ia = a if a < (1 << 15) else a - (1 << 16)
+    ib = b if b < (1 << 15) else b - (1 << 16)
+    assert (fa < fb) == (ia < ib) or fa == fb
+
+
+def test_special_patterns():
+    fmt = posit.PositFormat(16)
+    d = posit.posit_decode(fmt, jnp.asarray([0, 1 << 15], dtype=jnp.uint32))
+    assert bool(d.is_zero[0]) and bool(d.is_nar[1])
+    f = posit.posit_to_float(fmt, jnp.asarray([0, 1 << 15], dtype=jnp.uint32))
+    assert float(f[0]) == 0.0 and np.isnan(float(f[1]))
+
+
+def test_saturation_to_minpos_maxpos():
+    fmt = posit.PositFormat(8)
+    big = posit.float_to_posit(fmt, jnp.asarray([1e30, -1e30, 1e-30, -1e-30],
+                                                dtype=jnp.float32))
+    maxpos = (1 << 7) - 1
+    assert int(big[0]) == maxpos
+    assert int(big[1]) == ((~maxpos + 1) & 0xFF)
+    assert int(big[2]) == 1
+    assert int(big[3]) == ((~1 + 1) & 0xFF)

@@ -1,0 +1,98 @@
+"""Quire (exact fused accumulation): single-rounding semantics vs golden."""
+
+from fractions import Fraction
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import goldens, quire
+from repro.core.posit import PositFormat
+
+N = 16
+FMT = PositFormat(N)
+RNG = np.random.default_rng(5)
+
+
+def _pats(cnt, lo=1, hi=(1 << 15) - 1, allow_neg=True):
+    """Random non-NaR posit16 patterns (optionally signed)."""
+    p = RNG.integers(lo, hi, cnt, dtype=np.uint32)
+    if allow_neg:
+        neg = RNG.integers(0, 2, cnt).astype(bool)
+        p = np.where(neg, (~p + 1) & 0xFFFF, p)
+    return p.astype(np.uint32)
+
+
+def _exact_value(p):
+    g = goldens.decode(int(p), N)
+    if g[0] == "zero":
+        return Fraction(0)
+    _, s, T, sig = g
+    v = Fraction(sig, 1 << FMT.F) * (Fraction(2) ** T)
+    return -v if s else v
+
+
+def _golden_round(v: Fraction) -> int:
+    if v == 0:
+        return 0
+    sign = 1 if v < 0 else 0
+    av = abs(v)
+    # normalize to [1, 2)
+    scale = 0
+    while av >= 2:
+        av /= 2
+        scale += 1
+    while av < 1:
+        av *= 2
+        scale -= 1
+    return goldens.encode_exact(sign, scale, av.numerator, av.denominator, N)
+
+
+def test_single_product_is_correctly_rounded_mul():
+    pa, pb = _pats(500), _pats(500)
+    q = quire.quire_zero(jnp.asarray(pa))
+    q = quire.quire_mac(FMT, q, jnp.asarray(pa), jnp.asarray(pb))
+    out = np.asarray(quire.quire_to_posit(FMT, q))
+    for i in range(len(pa)):
+        want = goldens.mul(int(pa[i]), int(pb[i]), N)
+        assert int(out[i]) == want, (hex(pa[i]), hex(pb[i]))
+
+
+def test_fused_dot_single_rounding():
+    """quire dot == exact rational dot rounded ONCE (the fused-op guarantee)."""
+    K, B = 17, 64
+    pa = _pats(B * K).reshape(B, K)
+    pb = _pats(B * K).reshape(B, K)
+    out = np.asarray(quire.fused_dot(FMT, jnp.asarray(pa), jnp.asarray(pb)))
+    for i in range(B):
+        exact = sum((_exact_value(pa[i, j]) * _exact_value(pb[i, j])
+                     for j in range(K)), Fraction(0))
+        assert int(out[i]) == _golden_round(exact), i
+
+
+def test_fused_beats_sequential_rounding():
+    """Cancellation case: sequential MACs lose the tiny term, the quire keeps it."""
+    big = goldens.from_float(1024.0, N)
+    nbig = goldens.from_float(-1024.0, N)
+    tiny = goldens.from_float(1.5e-4, N)
+    one = 1 << (N - 2)
+    pa = jnp.asarray(np.array([[big, tiny, nbig]], dtype=np.uint32))
+    pb = jnp.asarray(np.array([[one, one, one]], dtype=np.uint32))
+    fused = int(np.asarray(quire.fused_dot(FMT, pa, pb))[0])
+    # fused result = round(exact tiny) != 0
+    assert goldens.to_float(fused, N) != 0.0
+    # sequential: (1024 + 1.5e-4) rounds back to 1024 -> sum collapses to 0
+    s1 = goldens.mul(big, one, N)
+    acc = _golden_round(_exact_value(s1) + _exact_value(tiny))
+    seq = _golden_round(_exact_value(acc) + _exact_value(nbig))
+    assert goldens.to_float(seq, N) == 0.0
+
+
+def test_accumulate_many_zeros_and_signs():
+    pa = np.array([0, 0x4000, (~0x4000 + 1) & 0xFFFF, 0], dtype=np.uint32)
+    pb = np.array([0x4000, 0x4000, 0x4000, 0], dtype=np.uint32)
+    q = quire.quire_zero(jnp.asarray(pa))
+    for i in range(4):
+        q = quire.quire_mac(FMT, q, jnp.asarray(pa[i : i + 1].repeat(4)),
+                            jnp.asarray(pb[i : i + 1].repeat(4)))
+    out = np.asarray(quire.quire_to_posit(FMT, q))
+    assert (out == 0).all()  # 0 + 1 - 1 + 0 == 0

@@ -1,0 +1,112 @@
+"""Sharding-rule validation without compiles: every sharded dim must divide.
+
+This is the cheap guard that keeps the 512-device dry-run green: for every
+arch we derive the production param/cache/batch PartitionSpecs and check
+divisibility against both production meshes' axis sizes.
+"""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import dryrun as DR
+from repro.launch import mesh as M
+from repro.models import transformer as T
+
+MESH_SHAPES = {
+    "single": {"data": 16, "model": 16},
+    "multi": {"pod": 2, "data": 16, "model": 16},
+}
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+        self.size = 1
+        for v in shape.values():
+            self.size *= v
+
+
+def _axis_size(mesh, entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for e in entry:
+            n *= mesh.shape[e]
+        return n
+    return mesh.shape[entry]
+
+
+def _check(tree, specs, mesh, what):
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    spec_leaves = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    for (path, leaf), spec in zip(leaves, spec_leaves):
+        assert isinstance(spec, P), (what, path)
+        assert len(spec) <= len(leaf.shape), (what, path, spec, leaf.shape)
+        for dim, entry in zip(leaf.shape, spec):
+            size = _axis_size(mesh, entry)
+            assert dim % size == 0, (what, jax.tree_util.keystr(path), spec,
+                                     leaf.shape, entry)
+
+
+@pytest.mark.parametrize("mesh_kind", ["single", "multi"])
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_and_state_specs_divide(arch, mesh_kind):
+    cfg = get_config(arch)
+    mesh = FakeMesh(MESH_SHAPES[mesh_kind])
+    params = jax.eval_shape(lambda k: T.init_params(cfg, k), jax.random.PRNGKey(0))
+    specs = M.param_pspecs(cfg, params, mesh)
+    _check(params, specs, mesh, f"{arch}/params")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_specs_divide(arch):
+    cfg = get_config(arch)
+    mesh = FakeMesh(MESH_SHAPES["multi"])
+    for shape_name in ("decode_32k", "long_500k"):
+        if DR.skip_reason(arch, shape_name):
+            continue
+        seq, batch, _ = DR.SHAPES[shape_name]
+        cache = jax.eval_shape(lambda: T.init_cache(cfg, batch, seq))
+        sharded = batch % 32 == 0
+        specs = M.cache_pspecs(cfg, cache, mesh, batch_sharded=sharded)
+        _check(cache, specs, mesh, f"{arch}/{shape_name}/cache")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_batch_specs_divide(arch):
+    from repro.data.pipeline import make_batch_specs
+
+    cfg = get_config(arch)
+    mesh = FakeMesh(MESH_SHAPES["multi"])
+    for shape_name in ("train_4k", "prefill_32k"):
+        seq, batch, _ = DR.SHAPES[shape_name]
+        specs_in = make_batch_specs(cfg, batch, seq)
+        specs = M.batch_pspecs(cfg, specs_in, mesh)
+        _check(specs_in, specs, mesh, f"{arch}/{shape_name}/batch")
+
+
+def test_head_mode_selection():
+    assert M.head_mode(get_config("olmoe-1b-7b"), 16) == "heads"
+    assert M.head_mode(get_config("seamless-m4t-medium"), 16) == "heads"
+    for a in ("granite-8b", "yi-34b", "smollm-360m", "llama3-405b",
+              "llama4-scout-17b-a16e", "recurrentgemma-2b", "internvl2-76b"):
+        assert M.head_mode(get_config(a), 16) == "head_dim", a
+
+
+def test_collective_parser():
+    hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups={{0,1}}
+  %ag.1 = bf16[4,1024]{1,0} all-gather(%y), dimensions={0}
+  %t = (f32[16]{0}, f32[8]{0}) all-to-all(%a, %b)
+  %cp = u16[32]{0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    out = DR.parse_collectives(hlo)
+    assert out["all-reduce"]["bytes"] == 128 * 256 * 4
+    assert out["all-gather"]["bytes"] == 4 * 1024 * 2
+    assert out["all-to-all"]["bytes"] == 16 * 4 + 8 * 4
+    assert out["collective-permute"]["bytes"] == 32 * 2
