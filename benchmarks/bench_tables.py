@@ -154,7 +154,10 @@ def divider_hlo_flops_rows():
         for v in ("srt_r2_cs_of_fr", "srt_r4_cs_of_fr", "srt_r4_scaled"):
             c = _jax.jit(lambda a, b, v=v: _div(fmt, a, b, v, True)
                          ).lower(spec, spec).compile()
-            flops[v] = (c.cost_analysis() or {}).get("flops", 0.0) / N
+            ca = c.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):  # list-of-dicts in older jaxlib
+                ca = ca[0] if ca else {}
+            flops[v] = ca.get("flops", 0.0) / N
         it2 = VARIANTS["srt_r2_cs_of_fr"].iterations(fmt)
         it4 = VARIANTS["srt_r4_cs_of_fr"].iterations(fmt)
         ratio = flops["srt_r2_cs_of_fr"] / max(flops["srt_r4_cs_of_fr"], 1e-9)
@@ -180,6 +183,92 @@ def radix16_rows():
             f"area_x{r16.area_ge/r4.area_ge:.2f} "
             f"energy_x{r16.energy_pipe_au/r4.energy_pipe_au:.2f} "
             f"latency_cut={100*(1-r16.cycles/r4.cycles):.0f}%"))
+    return rows
+
+
+def _count_pallas_calls(fn, *args):
+    """Number of pallas_call launches in the lowered jaxpr of fn(*args)."""
+    def walk(jaxpr):
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    n += walk(v.jaxpr if hasattr(v.jaxpr, "eqns") else v.jaxpr.jaxpr)
+                elif isinstance(v, (list, tuple)):
+                    for w in v:
+                        if hasattr(w, "jaxpr"):
+                            n += walk(w.jaxpr if hasattr(w.jaxpr, "eqns")
+                                      else w.jaxpr.jaxpr)
+        return n
+
+    closed = jax.make_jaxpr(fn)(*args)
+    return walk(closed.jaxpr)
+
+
+def fused_vs_chained_rows():
+    """Fused quantize->divide->dequantize kernel vs the 4-launch chain.
+
+    The chained path is what `posit_div_values` used to lower to:
+    posit_quantize(a), posit_quantize(b), posit_div_pallas, posit_dequantize
+    — four pallas_calls with uint32 intermediates in HBM.  The fused path is
+    one.  Rows report launch counts (from the jaxpr) and measured time on
+    the softmax / rmsnorm hot-path shapes (interpret mode on CPU hosts; the
+    launch-count reduction is backend-independent).
+    """
+    from repro.kernels import ops
+    from repro.numerics import NumericsConfig, posit_softmax
+    from repro.numerics.posit_ops import posit_rmsnorm_div
+
+    rows = []
+    rng = np.random.default_rng(0)
+    fmt = PositFormat(16)
+
+    def chained(a, b, variant="srt_r4_cs_of_fr"):
+        pa = ops.posit_quantize(fmt, a)
+        pb = ops.posit_quantize(fmt, b)
+        return ops.posit_dequantize(fmt, ops.posit_div(fmt, pa, pb,
+                                                       variant=variant))
+
+    a = jnp.asarray(rng.uniform(0.1, 10, (64, 1024)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(0.1, 10, (64, 1024)).astype(np.float32))
+
+    n_chain = _count_pallas_calls(chained, a, b)
+    n_fused = _count_pallas_calls(lambda a, b: ops.posit_div_fused(fmt, a, b),
+                                  a, b)
+    rows.append(("fused/kernel_launches", float("nan"),
+                 f"chained={n_chain} fused={n_fused} "
+                 f"reduction={n_chain}x->{n_fused}x"))
+
+    # head-to-head: every Table IV variant with a fused datapath
+    for variant in ops.FUSED_DIV_VARIANTS:
+        if not ops.fused_variant_supported(fmt, variant):
+            continue
+        us_c = _time_call(lambda x, y, v=variant: chained(x, y, v), a, b)
+        us_f = _time_call(
+            lambda x, y, v=variant: ops.posit_div_fused(fmt, x, y, variant=v),
+            a, b)
+        rows.append((f"fused/posit16/{variant}", us_f,
+                     f"chained_us={us_c:.1f} speedup={us_c / us_f:.2f}x "
+                     f"n={a.size}"))
+
+    # model hot paths through the NumericsConfig backend switch
+    cfg_e = NumericsConfig(posit_division=True, div_backend="emulate")
+    cfg_f = NumericsConfig(posit_division=True, div_backend="fused")
+    x = jnp.asarray(rng.normal(0, 3, (16, 64, 128)).astype(np.float32))
+    us_e = _time_call(lambda v: posit_softmax(v, cfg_e), x)
+    us_f = _time_call(lambda v: posit_softmax(v, cfg_f), x)
+    rows.append(("fused/softmax_hot_path", us_f,
+                 f"emulate_us={us_e:.1f} speedup={us_e / us_f:.2f}x "
+                 f"shape={tuple(x.shape)}"))
+    xf = jnp.asarray(rng.normal(0, 1, (4, 256, 512)).astype(np.float32))
+    rms = jnp.sqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    us_e = _time_call(lambda v, r: posit_rmsnorm_div(v, r, cfg_e), xf, rms)
+    us_f = _time_call(lambda v, r: posit_rmsnorm_div(v, r, cfg_f), xf, rms)
+    rows.append(("fused/rmsnorm_hot_path", us_f,
+                 f"emulate_us={us_e:.1f} speedup={us_e / us_f:.2f}x "
+                 f"shape={tuple(xf.shape)}"))
     return rows
 
 

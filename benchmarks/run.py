@@ -30,8 +30,9 @@ def main() -> None:
         ("Beyond-paper: radix-16 overlapped design point", B.radix16_rows),
     ]
     if not args.quick:
+        sections.append(("Fused vs chained posit-division path",
+                         B.fused_vs_chained_rows))
         sections.append(("Posit64 wide-datapath divider", B.posit64_throughput_rows))
-    if not args.quick:
         sections.append(("Divider throughput (this host)",
                          B.divider_throughput_rows))
 

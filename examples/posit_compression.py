@@ -40,7 +40,9 @@ def main():
     # ring all-reduce with posit16 payloads on a virtual 1-axis mesh
     mesh = jax.make_mesh((1,), ("pod",))
     x = jnp.asarray(rng.normal(0, 1, 1024).astype(np.float32))
-    out = jax.shard_map(
+    from jax.experimental.shard_map import shard_map  # jax.shard_map is 0.5+
+
+    out = shard_map(
         lambda v: posit_ring_all_reduce(v, "pod", PositFormat(16)),
         mesh=mesh, in_specs=P(), out_specs=P())(x)
     print("\nring all-reduce (1 pod, degenerate) exact:",

@@ -53,9 +53,19 @@ def main():
               f"radix-4 {row['r4_iterations']}it/{row['r4_latency']}cyc")
 
     # --- 5. the Pallas TPU kernel (interpret mode on CPU) ------------------
-    k = ops.posit_div(fmt, pa, pb)
-    assert (np.asarray(k) == ref).all()
-    print("\nPallas SRT-r4 kernel matches (interpret mode)")
+    for variant in ops.FUSED_DIV_VARIANTS:
+        k = ops.posit_div(fmt, pa, pb, variant=variant)
+        assert (np.asarray(k) == ref).all(), variant
+    print(f"\nPallas kernels match for all {len(ops.FUSED_DIV_VARIANTS)} "
+          "in-register variants (interpret mode)")
+
+    # --- 5b. fused quantize->divide->dequantize: ONE kernel launch ---------
+    fused = ops.posit_div_fused(fmt, x, d)
+    chained = posit_to_float(fmt, posit_divide(fmt, px, pd))
+    assert (np.asarray(fused).view(np.uint32)
+            == np.asarray(chained).view(np.uint32)).all()
+    print("fused float->posit->divide->float kernel bit-identical to the "
+          "chained path")
 
     # --- 6. hardware cost model (the paper's synthesis axes) ---------------
     print("\ncost model (Posit32, pipelined):")

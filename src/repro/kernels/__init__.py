@@ -1,3 +1,18 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the posit numerics hot paths.
+
+  * ``posit_cast``      — float32 <-> posit quantize/dequantize
+  * ``posit_div``       — SRT digit-recurrence division on bit patterns
+                          (variant-dispatched: r4 / r2 / scaled-r4)
+  * ``posit_fused_div`` — quantize -> divide -> dequantize in ONE kernel
+  * ``ops``             — shape-polymorphic jit'd wrappers (public API)
+"""
+
+from .ops import (  # noqa: F401
+    DEFAULT_DIV_VARIANT,
+    FUSED_DIV_VARIANTS,
+    fused_variant_supported,
+    posit_dequantize,
+    posit_div,
+    posit_div_fused,
+    posit_quantize,
+)

@@ -15,8 +15,17 @@ import jax.numpy as jnp
 from repro.core.posit import PositFormat
 from . import posit_div as _div
 from . import posit_cast as _cast
+from . import posit_fused_div as _fused
+
+DEFAULT_DIV_VARIANT = _div.DEFAULT_KERNEL_VARIANT
+FUSED_DIV_VARIANTS = _div.KERNEL_VARIANTS
 
 _DEFAULT_BLOCK = (64, 256)
+
+
+def fused_variant_supported(fmt: PositFormat, variant: str) -> bool:
+    """Does (fmt, variant) have a single-kernel fused datapath?"""
+    return _div.kernel_variant_supported(fmt, variant)
 
 
 def _on_tpu() -> bool:
@@ -36,15 +45,44 @@ def _tile_2d(x, block):
     return flat.reshape(rows_pad, cols), total
 
 
-def posit_div(fmt: PositFormat, px, pd, block=_DEFAULT_BLOCK, interpret=None):
+def posit_div(fmt: PositFormat, px, pd, block=_DEFAULT_BLOCK, interpret=None,
+              variant: str = DEFAULT_DIV_VARIANT):
     """Elementwise posit division on bit-pattern arrays (any shape)."""
+    if not fused_variant_supported(fmt, variant):
+        raise ValueError(
+            f"no in-register kernel datapath for {fmt} variant {variant!r}; "
+            f"supported variants: {FUSED_DIV_VARIANTS} "
+            f"(srt_r4_scaled needs n <= 30)")
     if interpret is None:
         interpret = not _on_tpu()
     shape = px.shape
     x2, total = _tile_2d(px.astype(jnp.uint32), block)
     d2, _ = _tile_2d(pd.astype(jnp.uint32), block)
     # padding lanes divide 0/0 -> NaR; harmless and discarded.
-    out = _div.posit_div_pallas(fmt, x2, d2, block, interpret)
+    out = _div.posit_div_pallas(fmt, x2, d2, block, interpret, variant=variant)
+    return out.reshape(-1)[:total].reshape(shape)
+
+
+def posit_div_fused(fmt: PositFormat, a, b, block=_DEFAULT_BLOCK,
+                    interpret=None, variant: str = DEFAULT_DIV_VARIANT):
+    """Fused quantize -> divide -> dequantize: float32 in, float32 out.
+
+    One kernel launch; bit-identical to
+    ``posit_dequantize(posit_div(posit_quantize(a), posit_quantize(b)))``.
+    """
+    if not fused_variant_supported(fmt, variant):
+        raise ValueError(
+            f"no fused datapath for {fmt} variant {variant!r}; "
+            f"supported variants: {FUSED_DIV_VARIANTS} "
+            f"(srt_r4_scaled needs n <= 30)")
+    if interpret is None:
+        interpret = not _on_tpu()
+    shape = a.shape
+    a2, total = _tile_2d(a.astype(jnp.float32), block)
+    b2, _ = _tile_2d(b.astype(jnp.float32), block)
+    # padding lanes divide 0/0 -> NaR -> NaN; harmless and discarded.
+    out = _fused.posit_fused_div_pallas(fmt, a2, b2, block, interpret,
+                                        variant=variant)
     return out.reshape(-1)[:total].reshape(shape)
 
 

@@ -1,15 +1,24 @@
-"""Pallas TPU kernel: batched posit division (SRT radix-4, CS residual, OTF).
+"""Pallas TPU kernel: batched posit division (SRT digit recurrence).
 
-TPU adaptation of the paper's best divider (Table IV, ``SRT CS OF FR``,
-radix 4): each 8x128 vector lane is one divider instance, the carry-save
-residual pair lives in VREGs across all iterations, and the quotient-digit
-selection is a branchless compare ladder on the truncated CS estimate.
+TPU adaptation of the paper's Table IV dividers: each 8x128 vector lane is
+one divider instance, the carry-save residual pair lives in VREGs across all
+iterations, and the quotient-digit selection is a branchless compare ladder
+on the truncated CS estimate.  Three variants lower to single-word int32
+datapaths (selected by the static ``variant`` argument):
+
+  * ``srt_r4_cs_of_fr``  — radix-4, CS residual, OTF, fast remainder (the
+    paper's best design point; the default)
+  * ``srt_r2_cs_of_fr``  — radix-2 equivalent (1 quotient bit / iteration)
+  * ``srt_r4_scaled``    — radix-4 with operand scaling (Eq 29): divisor-
+    independent selection constants, 3 extra datapath fraction bits
 
 Datapath trick (vs. the generic BitVec emulation): residuals are kept on the
-operand grid (F+1 fraction bits) by folding the w(0) = x/4 initialization
-into the first iteration — y_1 = 4*w(0) = x exactly — so the whole radix-4
-carry-save datapath fits a single int32 word for every n <= 32:
-3 integer bits + F+1 <= 28 fraction bits, left-aligned at bit 29.
+operand grid by folding the w(0) = x/p initialization into the first
+iteration — y_1 = p*w(0) = x exactly (p = the radix) — so the whole
+carry-save datapath fits a single int32 word: 3 integer bits + the operand
+fraction bits, left-aligned at bit 29.  The scaled variant carries 3 extra
+fraction bits and therefore supports n <= 30 only (see
+:func:`fused_variant_supported`).
 
 The kernel is elementwise; BlockSpec tiles the operands into VMEM blocks and
 the grid walks the padded 2D array.
@@ -31,6 +40,22 @@ _I32 = jnp.int32
 
 # Residual binary point: 3 integer bits (incl. sign) at the top of int32.
 _WPOINT = 29
+
+# Table IV rows with a single-int32-word Pallas datapath.
+KERNEL_VARIANTS = ("srt_r4_cs_of_fr", "srt_r2_cs_of_fr", "srt_r4_scaled")
+DEFAULT_KERNEL_VARIANT = "srt_r4_cs_of_fr"
+
+
+def kernel_variant_supported(fmt: PositFormat, variant: str) -> bool:
+    """Can (fmt, variant) run on the in-register int32 datapath?
+
+    The scaled variant's operands carry FRAC + 3 fraction bits (Table I
+    multiples), which must fit under the binary point at bit 29.
+    """
+    if variant not in KERNEL_VARIANTS or fmt.n > 32:
+        return False
+    frac = fmt.F + 1 + (3 if variant == "srt_r4_scaled" else 0)
+    return frac <= _WPOINT
 
 
 def _lut8(table, idx):
@@ -54,64 +79,123 @@ def _sel_r4(est, didx):
                             jnp.where(est >= mm1, _I32(-1), _I32(-2)))))
 
 
-def _cs_est(rws, rwc):
-    """7-bit truncated carry-save estimate of the shifted residual."""
-    t = ((rws >> (_WPOINT - 4)) + (rwc >> (_WPOINT - 4))) & _I32(0x7F)
-    return (t << 25) >> 25  # sign-extend 7 bits
+def _sel_r2(est):
+    """Radix-2 CS selection (Eq 27): est in units of 1/2 (4-bit estimate)."""
+    return jnp.where(est >= 0, _I32(1),
+                     jnp.where(est == -1, _I32(0), _I32(-1)))
 
 
-def _otf(Q, QD, digit):
-    """On-the-fly conversion step (Eqs 18-19), radix 4."""
+def _sel_r4_scaled(est):
+    """Scaled radix-4 selection (Eq 29): divisor-independent, units of 1/8."""
+    return jnp.where(
+        est >= seltables.SCALED_M2, _I32(2),
+        jnp.where(est >= seltables.SCALED_M1, _I32(1),
+                  jnp.where(est >= seltables.SCALED_M0, _I32(0),
+                            jnp.where(est >= seltables.SCALED_MM1, _I32(-1),
+                                      _I32(-2)))))
+
+
+def _cs_est(rws, rwc, gbits):
+    """Truncated carry-save estimate: 3 integer + ``gbits`` fraction bits."""
+    tb = 3 + gbits
+    sh = _WPOINT - gbits
+    t = ((rws >> sh) + (rwc >> sh)) & _I32((1 << tb) - 1)
+    return (t << (32 - tb)) >> (32 - tb)  # sign-extend tb bits
+
+
+def _otf(Q, QD, digit, r):
+    """On-the-fly conversion step (Eqs 18-19), radix r in {2, 4}."""
+    lr = 1 if r == 2 else 2
     neg = digit < 0
     pos = digit > 0
     mag = jnp.abs(digit).astype(_U32)
-    Qs, QDs = Q << 2, QD << 2
-    Qn = jnp.where(neg, QDs | (_U32(4) - mag), Qs | mag)
-    QDn = jnp.where(pos, Qs | (mag - 1), QDs | (_U32(3) - mag))
+    Qs, QDs = Q << lr, QD << lr
+    Qn = jnp.where(neg, QDs | (_U32(r) - mag), Qs | mag)
+    QDn = jnp.where(pos, Qs | (mag - 1), QDs | (_U32(r - 1) - mag))
     return Qn, QDn
 
 
-def _divide_block(fmt: PositFormat, px, pd):
+# Operand scaling (Table I): v -> v + (v >> s1) + (v >> s2), selected by the
+# 3 top fraction bits of d.  s2 == 0 encodes "no third term".
+_SCALE_S1 = tuple(s[0] for s in seltables.SCALING_SHIFTS)
+_SCALE_S2 = tuple(0 if s[1] is None else s[1] for s in seltables.SCALING_SHIFTS)
+
+
+def _scale_operand(v, didx):
+    c1, c2, c3 = v >> 1, v >> 2, v >> 3
+    s1 = _lut8(_SCALE_S1, didx)
+    s2 = _lut8(_SCALE_S2, didx)
+    t1 = jnp.where(s1 == 1, c1, jnp.where(s1 == 2, c2, c3))
+    t2 = jnp.where(s2 == 1, c1, jnp.where(s2 == 3, c3, jnp.zeros_like(v)))
+    return v + t1 + t2
+
+
+def _divide_block(fmt: PositFormat, px, pd, variant: str = DEFAULT_KERNEL_VARIANT):
     """The divider datapath on one block (pure jnp; used inside the kernel)."""
+    assert kernel_variant_supported(fmt, variant), (fmt, variant)
+    scaled = variant == "srt_r4_scaled"
+    r = 2 if variant == "srt_r2_cs_of_fr" else 4
+    lr = 1 if r == 2 else 2
+
     F = fmt.F
     FRAC = F + 1
-    It = -(-(fmt.n - 1) // 2)  # ceil(h/2), h = n-1 (rho = 2/3)
+    h = fmt.n - 1  # quotient bits (Eq 30); rho = 1 (r2) or 2/3 (r4)
+    It = -(-h // lr)  # Eq 31
     SH = _WPOINT - FRAC
-    assert SH >= 1, fmt
+    assert SH >= (3 if scaled else 1), (fmt, variant)
 
     dx = posit_decode(fmt, px)
     dd = posit_decode(fmt, pd)
 
     x_al = (dx.sig << SH).astype(_I32)   # x in [1/2,1) at 29 frac bits
     d_al = (dd.sig << SH).astype(_I32)
-    didx = ((dd.sig >> (FRAC - 4)) & 7).astype(_I32)
+    didx = ((dd.sig >> (FRAC - 4)) & 7).astype(_I32) if FRAC >= 4 else \
+        ((dd.sig << (4 - FRAC)) & 7).astype(_I32)
+    if scaled:
+        # Both operands times the same M (Table I): quotient is unchanged,
+        # the divisor lands in [1 - 1/64, 1 + 1/8] so selection constants
+        # become divisor-independent.  Exact: SH >= 3 guarantees no bits
+        # fall off the bottom.
+        x_al = _scale_operand(x_al, didx)
+        d_al = _scale_operand(d_al, didx)
     d2 = d_al << 1
+
+    gbits = 1 if r == 2 else (seltables.SCALED_G_FRAC if scaled
+                              else seltables.G_FRAC)
+
+    def select(rws, rwc):
+        est = _cs_est(rws, rwc, gbits)
+        if r == 2:
+            return _sel_r2(est)
+        if scaled:
+            return _sel_r4_scaled(est)
+        return _sel_r4(est, didx)
 
     def addend_for(digit):
         add = jnp.where(
-            digit == 2, ~d2,
-            jnp.where(digit == 1, ~d_al,
-                      jnp.where(digit == -1, d_al,
-                                jnp.where(digit == -2, d2, _I32(0)))))
+            digit == 1, ~d_al,
+            jnp.where(digit == -1, d_al, _I32(0)))
+        if r == 4:
+            add = jnp.where(
+                digit == 2, ~d2, jnp.where(digit == -2, d2, add))
         cin = (digit > 0).astype(_I32)
         return add, cin
 
-    # Iteration 1 folded: y_1 = 4*w(0) = x exactly (w(0) = x/4).
-    est = _cs_est(x_al, jnp.zeros_like(x_al))
-    digit = _sel_r4(est, didx)
+    # Iteration 1 folded: y_1 = r*w(0) = x exactly (w(0) = x/r).
+    digit = select(x_al, jnp.zeros_like(x_al))
     add, cin = addend_for(digit)
     ws = x_al ^ add
     wc = ((x_al & add) << 1) | cin
-    Q, QD = _otf(jnp.zeros_like(px), jnp.zeros_like(px), digit)
+    Q, QD = _otf(jnp.zeros_like(px), jnp.zeros_like(px), digit, r)
 
     def body(_, carry):
         ws, wc, Q, QD = carry
-        rws, rwc = ws << 2, wc << 2
-        digit = _sel_r4(_cs_est(rws, rwc), didx)
+        rws, rwc = ws << lr, wc << lr
+        digit = select(rws, rwc)
         add, cin = addend_for(digit)
         s = rws ^ rwc ^ add
         c = (((rws & rwc) | (rws & add) | (rwc & add)) << 1) | cin
-        Qn, QDn = _otf(Q, QD, digit)
+        Qn, QDn = _otf(Q, QD, digit, r)
         return s, c, Qn, QDn
 
     ws, wc, Q, QD = jax.lax.fori_loop(0, It - 1, body, (ws, wc, Q, QD))
@@ -123,8 +207,8 @@ def _divide_block(fmt: PositFormat, px, pd):
     rem = jnp.where(neg, wfull + d_al, wfull)
     rem_nz = rem != 0
 
-    # q = qf * 2^-(2It-2) in (1/2, 2); normalize and round.
-    FP = 2 * It - 2
+    # q = qf * 2^-FP in (1/2, 2); normalize and round.
+    FP = It * lr - lr  # p_shift == log2(r): first iteration is folded
     intbit = ((qf >> FP) & 1).astype(jnp.bool_)
     qn = jnp.where(intbit, qf, qf << 1)
     t_adj = jnp.where(intbit, _I32(0), _I32(-1))
@@ -139,11 +223,11 @@ def _divide_block(fmt: PositFormat, px, pd):
     return posit_encode(fmt, sign, scale, frac, round_bit, sticky, out_zero, out_nar)
 
 
-def _kernel(x_ref, d_ref, o_ref, *, fmt: PositFormat):
-    o_ref[...] = _divide_block(fmt, x_ref[...], d_ref[...])
+def _kernel(x_ref, d_ref, o_ref, *, fmt: PositFormat, variant: str):
+    o_ref[...] = _divide_block(fmt, x_ref[...], d_ref[...], variant)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5))
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6))
 def posit_div_pallas(
     fmt: PositFormat,
     px,
@@ -151,6 +235,7 @@ def posit_div_pallas(
     block=(64, 256),
     interpret: bool = True,
     vmem_limit_bytes: int = 64 * 1024 * 1024,
+    variant: str = DEFAULT_KERNEL_VARIANT,
 ):
     """Tiled Pallas divider over a 2D uint32 array (pre-padded by ops.py)."""
     assert px.ndim == 2 and px.shape == pd.shape
@@ -160,7 +245,7 @@ def posit_div_pallas(
     grid = (m // bm, n // bn)
     spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
     return pl.pallas_call(
-        functools.partial(_kernel, fmt=fmt),
+        functools.partial(_kernel, fmt=fmt, variant=variant),
         out_shape=jax.ShapeDtypeStruct(px.shape, jnp.uint32),
         grid=grid,
         in_specs=[spec, spec],

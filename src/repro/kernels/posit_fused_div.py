@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: fused float32 -> posit -> SRT divide -> float32.
+
+The numerics layer's hot path (`posit_div_values` behind softmax / RMSNorm /
+MoE-router normalization) is a chain of three elementwise kernels:
+
+    posit_quantize(a), posit_quantize(b)  ->  posit_div_pallas  ->
+    posit_dequantize
+
+which launches 4 kernels and round-trips two uint32 bit-pattern arrays
+through HBM between every stage.  This module fuses the whole chain into ONE
+``pallas_call``: quantization (RNE float->posit), the folded-first-iteration
+carry-save SRT recurrence, and dequantization all happen in-register on each
+VMEM block — no intermediate posit arrays ever materialize.
+
+Bit-exactness: the kernel body literally composes the same
+``float_to_posit`` / ``_divide_block`` / ``posit_to_float`` primitives the
+chained path runs, so outputs are bit-identical by construction (verified by
+``tests/test_fused_div.py`` against the chained path for every supported
+variant).  Mirrors how FPPU/PVU integrate posit division as one pipelined
+unit instead of a chain of format conversions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.posit import PositFormat, float_to_posit, posit_to_float
+from .posit_div import DEFAULT_KERNEL_VARIANT, _divide_block
+
+_U32 = jnp.uint32
+
+
+def _fused_kernel(a_ref, b_ref, o_ref, *, fmt: PositFormat, variant: str):
+    pa = float_to_posit(fmt, a_ref[...])
+    pb = float_to_posit(fmt, b_ref[...])
+    q = _divide_block(fmt, pa, pb, variant)
+    o_ref[...] = posit_to_float(fmt, q)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6))
+def posit_fused_div_pallas(
+    fmt: PositFormat,
+    a,
+    b,
+    block=(64, 256),
+    interpret: bool = True,
+    vmem_limit_bytes: int = 64 * 1024 * 1024,
+    variant: str = DEFAULT_KERNEL_VARIANT,
+):
+    """Tiled fused divider over 2D float32 arrays (pre-padded by ops.py)."""
+    assert a.ndim == 2 and a.shape == b.shape
+    bm, bn = block
+    m, n = a.shape
+    assert m % bm == 0 and n % bn == 0, (a.shape, block)
+    grid = (m // bm, n // bn)
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, fmt=fmt, variant=variant),
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

@@ -67,6 +67,9 @@ class ModelConfig:
     def __post_init__(self):
         if self.head_dim is None and self.n_heads:
             object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        # fail fast at model build, not mid-trace: unknown formats/variants
+        # and fused-backend support for the chosen posit format
+        self.numerics.validate()
 
     @property
     def padded_vocab(self) -> int:

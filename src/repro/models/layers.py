@@ -3,7 +3,9 @@
 All layers are pure functions over parameter pytrees (dicts of jnp arrays).
 Compute dtype is bf16 by default with f32 accumulation for reductions; params
 stay f32 (the trainer holds the master copy).  Division sites optionally run
-through the posit digit-recurrence divider (`cfg.numerics.posit_division`).
+through the posit digit-recurrence divider (`cfg.numerics.posit_division`),
+either BitVec-emulated or as one fused Pallas kernel
+(`cfg.numerics.div_backend`).
 """
 
 from __future__ import annotations
@@ -14,7 +16,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.numerics.posit_ops import posit_div_values, posit_softmax
+from repro.numerics.posit_ops import (
+    posit_div_values,
+    posit_rmsnorm_div,
+    posit_softmax,
+)
 from .config import ModelConfig
 from .sharding import constrain
 
@@ -34,7 +40,7 @@ def rmsnorm(x, w, cfg: ModelConfig):
     xf = x.astype(jnp.float32)
     ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
     if cfg.numerics.posit_division:
-        y = posit_div_values(xf, jnp.sqrt(ms + cfg.norm_eps), cfg.numerics)
+        y = posit_rmsnorm_div(xf, jnp.sqrt(ms + cfg.norm_eps), cfg.numerics)
     else:
         y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
     return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)

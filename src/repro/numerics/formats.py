@@ -35,6 +35,8 @@ class NumericsConfig:
     posit_division: bool = False
     div_format: str = "posit16"
     div_algo: str = "srt_r4_cs_of_fr"
+    div_backend: str = "emulate"   # emulate (BitVec, bit-exactness audits)
+    #                                | fused (single Pallas kernel hot path)
     div_unroll: bool = False   # unroll the recurrence (analysis/TPU perf)
     grad_compress_format: Optional[str] = None
     kv_cache_format: Optional[str] = None
@@ -42,3 +44,29 @@ class NumericsConfig:
     @property
     def div_fmt(self) -> PositFormat:
         return resolve_format(self.div_format)
+
+    def validate(self) -> "NumericsConfig":
+        """Fail fast on inconsistent switches (called at model build)."""
+        from repro.core.divider import VARIANTS
+
+        if self.div_backend not in ("emulate", "fused"):
+            raise ValueError(f"unknown div_backend {self.div_backend!r}; "
+                             "expected 'emulate' or 'fused'")
+        if self.div_algo not in VARIANTS:
+            raise ValueError(f"unknown div_algo {self.div_algo!r}; "
+                             f"have {list(VARIANTS)}")
+        if self.div_backend == "fused":
+            from repro.kernels.ops import (FUSED_DIV_VARIANTS,
+                                           fused_variant_supported)
+
+            if not fused_variant_supported(self.div_fmt, self.div_algo):
+                raise ValueError(
+                    f"div_backend='fused' has no datapath for "
+                    f"{self.div_fmt} / {self.div_algo!r}; fused variants: "
+                    f"{FUSED_DIV_VARIANTS} (srt_r4_scaled needs n <= 30)")
+        self.div_fmt  # raises KeyError on unknown format name
+        if self.grad_compress_format:
+            resolve_format(self.grad_compress_format)
+        if self.kv_cache_format:
+            resolve_format(self.kv_cache_format)
+        return self

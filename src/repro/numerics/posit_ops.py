@@ -3,9 +3,19 @@
 These are the integration points of the paper's contribution inside real
 models: softmax denominators, RMSNorm reciprocals and MoE router
 normalization.  Values are quantized to the configured posit format, divided
-with the configured Table IV variant (bit-exact datapath emulation), and
-dequantized.  Gradients flow straight-through (the quantized division is a
-fake-quant of the true division).
+with the configured Table IV variant, and dequantized.  Gradients flow
+straight-through (the quantized division is a fake-quant of the true
+division).
+
+Two backends, selected by ``NumericsConfig.div_backend``:
+
+  * ``emulate`` — the bit-exact BitVec datapath emulation
+    (:func:`repro.core.divider.posit_divide`) bracketed by XLA-level
+    float<->posit casts.  Slow; every Table IV variant; the audit path.
+  * ``fused``   — one Pallas kernel fusing quantize -> SRT recurrence ->
+    dequantize in-register (:func:`repro.kernels.ops.posit_div_fused`).
+    One launch instead of four, no uint32 bit-pattern arrays in HBM;
+    bit-identical to the chained path for the supported variants.
 """
 
 from __future__ import annotations
@@ -20,20 +30,24 @@ from repro.core.posit import PositFormat, float_to_posit, posit_to_float
 from .formats import NumericsConfig
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _posit_div_ste(fmt_n: int, variant: str, unroll: bool, a, b):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _posit_div_ste(fmt_n: int, variant: str, unroll: bool, backend: str, a, b):
     fmt = PositFormat(fmt_n)
+    if backend == "fused":
+        from repro.kernels.ops import posit_div_fused
+
+        return posit_div_fused(fmt, a, b, variant=variant)
     pa = float_to_posit(fmt, a)
     pb = float_to_posit(fmt, b)
     return posit_to_float(fmt, posit_divide(fmt, pa, pb, variant, unroll))
 
 
-def _div_fwd(fmt_n, variant, unroll, a, b):
-    out = _posit_div_ste(fmt_n, variant, unroll, a, b)
+def _div_fwd(fmt_n, variant, unroll, backend, a, b):
+    out = _posit_div_ste(fmt_n, variant, unroll, backend, a, b)
     return out, (a, b, out)
 
 
-def _div_bwd(fmt_n, variant, unroll, res, g):
+def _div_bwd(fmt_n, variant, unroll, backend, res, g):
     a, b, out = res
     ga = g / b
     gb = -g * out / b
@@ -46,7 +60,8 @@ _posit_div_ste.defvjp(_div_fwd, _div_bwd)
 def posit_div_values(a, b, cfg: NumericsConfig):
     """a / b computed in posit arithmetic (float in, float out, STE grads)."""
     a, b = jnp.broadcast_arrays(a, b)
-    return _posit_div_ste(cfg.div_fmt.n, cfg.div_algo, cfg.div_unroll, a, b)
+    return _posit_div_ste(cfg.div_fmt.n, cfg.div_algo, cfg.div_unroll,
+                          cfg.div_backend, a, b)
 
 
 def posit_softmax(x, cfg: NumericsConfig, axis: int = -1):

@@ -38,7 +38,9 @@ def posit_ring_all_reduce(x, axis_name: str, fmt: PositFormat):
 
     Must run inside shard_map with ``axis_name`` unreduced.  x: f32 array.
     """
-    n = jax.lax.axis_size(axis_name)
+    # psum of a python scalar folds to the (static) axis size at trace time;
+    # jax.lax.axis_size does not exist in the pinned JAX version.
+    n = jax.lax.psum(1, axis_name)
     if n == 1:
         return x
     perm = [(i, (i + 1) % n) for i in range(n)]

@@ -1,0 +1,85 @@
+"""Fallback for the optional ``hypothesis`` dependency.
+
+The property tests prefer real hypothesis (shrinking, example database).
+When it is not installed — the tier-1 container only guarantees jax, numpy
+and pytest — this module provides a minimal drop-in subset: ``@given`` runs
+the test body over deterministic pseudo-random examples drawn from the same
+strategy shapes the tests use (``st.integers``, ``st.floats``), and
+``@settings`` only honours ``max_examples``.
+
+Usage in tests::
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+import random
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 100
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+            boundary = [v for v in (min_value, max_value, 0.0, 1.0, -1.0)
+                        if min_value <= v <= max_value]
+
+            def draw(rng):
+                # mix uniform draws with boundary/zero cases the way
+                # hypothesis biases toward "nasty" floats
+                pick = rng.random()
+                if pick < 0.1:
+                    return rng.choice(boundary)
+                if pick < 0.4:
+                    # log-uniform magnitude sweep across the range
+                    mag = 10.0 ** rng.uniform(-30, 30)
+                    val = mag if rng.random() < 0.5 else -mag
+                    return min(max(val, min_value), max_value)
+                return rng.uniform(min_value, max_value)
+
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+            # not the example parameters (it would resolve them as fixtures).
+            def wrapper():
+                n = getattr(fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+                # deterministic per-test seed so failures reproduce
+                rng = random.Random(fn.__name__)
+                for _ in range(n):
+                    ex = tuple(s.example(rng) for s in strategies)
+                    fn(*ex)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -21,6 +21,7 @@ def posit8_golden():
     return px, pd, gold
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("variant", ALL_VARIANTS)
 def test_posit8_exhaustive(variant, posit8_golden):
     px, pd, gold = posit8_golden
@@ -30,6 +31,7 @@ def test_posit8_exhaustive(variant, posit8_golden):
     assert (out == gold).all(), f"{variant}: {(out != gold).sum()} mismatches"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("n", [16, 32])
 @pytest.mark.parametrize("variant", ["nrd", "srt_r2_cs_of_fr",
                                      "srt_r4_cs_of_fr", "srt_r4_scaled"])
@@ -46,6 +48,7 @@ def test_random_sample_vs_golden(n, variant):
     assert (out == gold).all()
 
 
+@pytest.mark.slow
 def test_variants_mutually_identical_posit10():
     """All Table IV variants compute the same correctly-rounded quotient."""
     n = 10

@@ -1,0 +1,132 @@
+"""Fused quantize->divide->dequantize kernel: equivalence + backend switch.
+
+The fused kernel must be BIT-identical to the chained
+posit_quantize -> posit_div -> posit_dequantize path (same floats out, NaN
+patterns included) for every supported (format, variant) pair — correctly
+rounded posit division is unique, so all variants must also agree with each
+other.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.posit import PositFormat
+from repro.kernels import ops
+from repro.numerics import NumericsConfig, posit_div_values, posit_softmax
+from repro.numerics.posit_ops import posit_rmsnorm_div, posit_router_norm
+
+RNG = np.random.default_rng(7)
+
+
+def _bits(x):
+    return np.asarray(x).view(np.uint32)
+
+
+def _chained(fmt, a, b):
+    pa = ops.posit_quantize(fmt, a)
+    pb = ops.posit_quantize(fmt, b)
+    return ops.posit_dequantize(fmt, ops.posit_div(fmt, pa, pb))
+
+
+def _rand_operands(shape):
+    """Mixed-magnitude floats incl. zeros/denormals/inf/nan edge lanes."""
+    a = (RNG.normal(0, 1, shape) * 10.0 ** RNG.uniform(-8, 8, shape))
+    a = a.astype(np.float32).reshape(-1)
+    edges = [0.0, -0.0, np.inf, -np.inf, np.nan, 1e-30, -1e-30, 1e30]
+    a[: len(edges)] = edges[: a.size]
+    return jnp.asarray(a.reshape(shape))
+
+
+@pytest.mark.parametrize("n", [8, 16, 32])
+@pytest.mark.parametrize("variant", ops.FUSED_DIV_VARIANTS)
+def test_fused_bit_identical_to_chained(n, variant):
+    fmt = PositFormat(n)
+    if not ops.fused_variant_supported(fmt, variant):
+        pytest.skip(f"no fused datapath for {fmt}/{variant}")
+    a = _rand_operands((37, 53))
+    b = _rand_operands((37, 53))
+    fused = ops.posit_div_fused(fmt, a, b, variant=variant)
+    chained = _chained(fmt, a, b)
+    np.testing.assert_array_equal(_bits(fused), _bits(chained))
+
+
+@pytest.mark.parametrize("shape", [(257,), (5, 7, 11), (1, 1)])
+def test_fused_shape_polymorphism(shape):
+    fmt = PositFormat(16)
+    a = _rand_operands(shape)
+    b = _rand_operands(shape)
+    fused = ops.posit_div_fused(fmt, a, b)
+    assert fused.shape == shape
+    np.testing.assert_array_equal(_bits(fused), _bits(_chained(fmt, a, b)))
+
+
+def test_fused_unsupported_variant_raises():
+    with pytest.raises(ValueError, match="fused"):
+        ops.posit_div_fused(PositFormat(32), jnp.ones((4,)), jnp.ones((4,)),
+                            variant="srt_r4_scaled")
+    with pytest.raises(ValueError, match="fused"):
+        ops.posit_div_fused(PositFormat(16), jnp.ones((4,)), jnp.ones((4,)),
+                            variant="nrd")
+
+
+# --------------------------------------------------------------- backends
+
+
+CFG_EMULATE = NumericsConfig(posit_division=True, div_backend="emulate")
+CFG_FUSED = NumericsConfig(posit_division=True, div_backend="fused")
+
+
+def test_backends_bit_identical_through_div_values():
+    a = jnp.asarray(RNG.uniform(0.01, 100, (64, 32)).astype(np.float32))
+    b = jnp.asarray(RNG.uniform(0.01, 100, (64, 1)).astype(np.float32))
+    e = posit_div_values(a, b, CFG_EMULATE)
+    f = posit_div_values(a, b, CFG_FUSED)
+    np.testing.assert_array_equal(_bits(e), _bits(f))
+
+
+def test_backends_bit_identical_through_model_ops():
+    x = jnp.asarray(RNG.normal(0, 3, (8, 64)).astype(np.float32))
+    np.testing.assert_array_equal(
+        _bits(posit_softmax(x, CFG_EMULATE)), _bits(posit_softmax(x, CFG_FUSED)))
+    rms = jnp.sqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6)
+    np.testing.assert_array_equal(
+        _bits(posit_rmsnorm_div(x, rms, CFG_EMULATE)),
+        _bits(posit_rmsnorm_div(x, rms, CFG_FUSED)))
+    w = jnp.asarray(RNG.uniform(0, 1, (8, 4)).astype(np.float32))
+    np.testing.assert_array_equal(
+        _bits(posit_router_norm(w, CFG_EMULATE)),
+        _bits(posit_router_norm(w, CFG_FUSED)))
+
+
+@pytest.mark.parametrize("variant", ops.FUSED_DIV_VARIANTS)
+def test_fused_backend_variants_through_config(variant):
+    cfg = NumericsConfig(posit_division=True, div_backend="fused",
+                         div_algo=variant).validate()
+    a = jnp.asarray(RNG.uniform(0.1, 10, 256).astype(np.float32))
+    b = jnp.asarray(RNG.uniform(0.1, 10, 256).astype(np.float32))
+    f = posit_div_values(a, b, cfg)
+    np.testing.assert_array_equal(_bits(f),
+                                  _bits(posit_div_values(a, b, CFG_EMULATE)))
+
+
+def test_fused_backend_ste_gradients():
+    a = jnp.asarray(RNG.uniform(0.5, 2, 64).astype(np.float32))
+    b = jnp.asarray(RNG.uniform(0.5, 2, 64).astype(np.float32))
+    ga = jax.grad(lambda a: posit_div_values(a, b, CFG_FUSED).sum())(a)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(1 / b), rtol=1e-5)
+    gb = jax.grad(lambda b: posit_div_values(a, b, CFG_FUSED).sum())(b)
+    want = np.asarray(-posit_div_values(a, b, CFG_FUSED) / b)
+    np.testing.assert_allclose(np.asarray(gb), want, rtol=1e-5)
+
+
+def test_config_validation_rejects_bad_backend():
+    with pytest.raises(ValueError, match="div_backend"):
+        NumericsConfig(posit_division=True, div_backend="warp").validate()
+    with pytest.raises(ValueError, match="fused"):
+        NumericsConfig(posit_division=True, div_backend="fused",
+                       div_format="posit32",
+                       div_algo="srt_r4_scaled").validate()
+    # emulate accepts every Table IV variant, including non-fused ones
+    NumericsConfig(posit_division=True, div_algo="nrd").validate()

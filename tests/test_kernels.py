@@ -16,6 +16,7 @@ def _rand(n, shape):
     return RNG.integers(0, 1 << n, cnt, dtype=np.uint64).astype(np.uint32).reshape(shape)
 
 
+@pytest.mark.slow
 def test_posit8_div_kernel_exhaustive():
     n = 8
     fmt = PositFormat(n)

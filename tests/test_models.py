@@ -11,6 +11,13 @@ from repro.models import transformer as T
 
 B, S = 2, 96
 
+# fast lane covers one dense arch (GQA attention + rmsnorm + softmax); MoE
+# forward stays covered by test_moe_capacity_drops_are_bounded and the
+# full arch cross-product runs under -m slow in CI
+_FAST_ARCHES = ("granite_8b",)
+_ARCH_PARAMS = [a if a in _FAST_ARCHES else pytest.param(a, marks=pytest.mark.slow)
+                for a in ARCH_IDS]
+
 
 def _batch(cfg, seq=S):
     batch = {"tokens": (jnp.arange(B * seq, dtype=jnp.int32).reshape(B, seq)
@@ -24,7 +31,7 @@ def _batch(cfg, seq=S):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_smoke_forward_and_train_step(arch):
     """Reduced config: one forward + one grad step, shapes + finiteness."""
     cfg = get_config(arch, smoke=True)
@@ -44,7 +51,7 @@ def test_smoke_forward_and_train_step(arch):
     assert np.isfinite(gn) and gn > 0
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_smoke_decode_step(arch):
     cfg = get_config(arch, smoke=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -57,6 +64,7 @@ def test_smoke_decode_step(arch):
     assert bool(jnp.isfinite(lg.astype(jnp.float32)).all())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["granite_8b", "olmoe_1b_7b", "mamba2_2p7b",
                                   "recurrentgemma_2b", "seamless_m4t_medium"])
 def test_decode_matches_forward(arch, monkeypatch):

@@ -4,6 +4,7 @@ from fractions import Fraction
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import goldens, quire
 from repro.core.posit import PositFormat
@@ -57,6 +58,7 @@ def test_single_product_is_correctly_rounded_mul():
         assert int(out[i]) == want, (hex(pa[i]), hex(pb[i]))
 
 
+@pytest.mark.slow
 def test_fused_dot_single_rounding():
     """quire dot == exact rational dot rounded ONCE (the fused-op guarantee)."""
     K, B = 17, 64
@@ -69,6 +71,7 @@ def test_fused_dot_single_rounding():
         assert int(out[i]) == _golden_round(exact), i
 
 
+@pytest.mark.slow
 def test_fused_beats_sequential_rounding():
     """Cancellation case: sequential MACs lose the tiny term, the quire keeps it."""
     big = goldens.from_float(1024.0, N)
@@ -87,6 +90,7 @@ def test_fused_beats_sequential_rounding():
     assert goldens.to_float(seq, N) == 0.0
 
 
+@pytest.mark.slow
 def test_accumulate_many_zeros_and_signs():
     pa = np.array([0, 0x4000, (~0x4000 + 1) & 0xFFFF, 0], dtype=np.uint32)
     pb = np.array([0x4000, 0x4000, 0x4000, 0], dtype=np.uint32)

@@ -28,6 +28,7 @@ def test_loss_decreases(smoke_cfg):
     assert res["history"][-1]["loss"] < res["history"][0]["loss"]
 
 
+@pytest.mark.slow
 def test_microbatching_equivalent(smoke_cfg):
     """2 microbatches == 1 big batch (same grads up to accumulation order)."""
     ds = SyntheticLMDataset(DataConfig(8, 64), smoke_cfg)
@@ -59,6 +60,7 @@ def test_checkpoint_atomic_resume(smoke_cfg):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_checkpoint_rejects_mismatched_tree(smoke_cfg):
     ds = SyntheticLMDataset(DataConfig(4, 32), smoke_cfg)
     with tempfile.TemporaryDirectory() as d:
@@ -71,6 +73,7 @@ def test_checkpoint_rejects_mismatched_tree(smoke_cfg):
             mgr.restore(mgr.all_steps()[-1], like=tr.state)
 
 
+@pytest.mark.slow
 def test_checkpoint_gc_keeps_last(smoke_cfg):
     ds = SyntheticLMDataset(DataConfig(4, 32), smoke_cfg)
     with tempfile.TemporaryDirectory() as d:
@@ -86,6 +89,7 @@ def test_interrupted_save_is_invisible(smoke_cfg):
         assert CheckpointManager(d).all_steps() == []
 
 
+@pytest.mark.slow
 def test_elastic_remesh_roundtrip(smoke_cfg):
     ds = SyntheticLMDataset(DataConfig(4, 32), smoke_cfg)
     tc = TrainConfig(steps=2, lr=1e-3)
@@ -122,6 +126,7 @@ def test_data_determinism_and_host_sharding(smoke_cfg):
     np.testing.assert_array_equal(both, a)
 
 
+@pytest.mark.slow
 def test_grad_compression_trains(smoke_cfg):
     cfg = smoke_cfg.with_numerics(grad_compress_format="posit16")
     ds = SyntheticLMDataset(DataConfig(8, 64), cfg)
