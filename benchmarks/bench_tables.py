@@ -272,6 +272,130 @@ def fused_vs_chained_rows():
     return rows
 
 
+def rowwise_vs_broadcast_rows():
+    """Rowwise fused kernels vs PR 1's broadcast fused path.
+
+    PR 1's path broadcast the per-row denominator to full shape before the
+    elementwise fused kernel (O(rows*cols) divisor quantize/decode and a
+    materialized broadcast in HBM); the rowwise kernels keep the divisor an
+    O(rows) column and fuse the surrounding softmax reductions into the
+    same launch.  Rows report launch counts (from the jaxpr) and measured
+    wall time on the softmax / rmsnorm hot-path shapes (interpret mode on
+    CPU hosts; launch counts are backend-independent).
+    """
+    from repro.kernels import ops
+    from repro.numerics import NumericsConfig, posit_softmax
+    from repro.numerics.posit_ops import posit_rmsnorm_div
+
+    rows = []
+    rng = np.random.default_rng(0)
+    fmt = PositFormat(16)
+    cfg_f = NumericsConfig(posit_division=True, div_backend="fused")
+
+    # --- launch counts -------------------------------------------------
+    x = jnp.asarray(rng.normal(0, 3, (16, 64, 128)).astype(np.float32))
+    n_soft = _count_pallas_calls(lambda v: posit_softmax(v, cfg_f), x)
+    rows.append(("rowwise/softmax_kernel_launches", float("nan"),
+                 f"fused_softmax_launches={n_soft} (PR1: 1 div launch + "
+                 f"XLA max/exp/sum + materialized broadcast)"))
+    a = jnp.asarray(rng.normal(0, 1, (512, 512)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(0.5, 2, (512, 1)).astype(np.float32))
+    n_row = _count_pallas_calls(
+        lambda a, b: ops.posit_div_fused_rowwise(fmt, a, b), a, b)
+    rows.append(("rowwise/div_kernel_launches", float("nan"),
+                 f"rowwise_launches={n_row} broadcast_free=True"))
+
+    # --- raw rowwise divide vs broadcast fused divide ------------------
+    us_bc = _time_call(
+        lambda a, b: ops.posit_div_fused(fmt, a, jnp.broadcast_to(b, a.shape)),
+        a, b)
+    us_rw = _time_call(lambda a, b: ops.posit_div_fused_rowwise(fmt, a, b),
+                       a, b)
+    rows.append(("rowwise/div_512x512", us_rw,
+                 f"broadcast_us={us_bc:.1f} speedup={us_bc / us_rw:.2f}x"))
+
+    # --- softmax hot path: PR1 broadcast chain vs single-launch fused --
+    def pr1_softmax(v):
+        m = jnp.max(v, -1, keepdims=True)
+        e = jnp.exp(v - m)
+        s = jnp.sum(e, -1, keepdims=True)
+        return ops.posit_div_fused(fmt, e, jnp.broadcast_to(s, e.shape))
+
+    us_pr1 = _time_call(pr1_softmax, x)
+    us_f = _time_call(lambda v: posit_softmax(v, cfg_f), x)
+    rows.append(("rowwise/softmax_hot_path", us_f,
+                 f"pr1_broadcast_us={us_pr1:.1f} "
+                 f"speedup={us_pr1 / us_f:.2f}x shape={tuple(x.shape)}"))
+
+    # --- rmsnorm hot path: broadcast fused divide vs rowwise -----------
+    xf = jnp.asarray(rng.normal(0, 1, (4, 256, 512)).astype(np.float32))
+    rms = jnp.sqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    us_pr1 = _time_call(
+        lambda v, r: ops.posit_div_fused(fmt, v, jnp.broadcast_to(r, v.shape)),
+        xf, rms)
+    us_f = _time_call(lambda v, r: posit_rmsnorm_div(v, r, cfg_f), xf, rms)
+    rows.append(("rowwise/rmsnorm_hot_path", us_f,
+                 f"pr1_broadcast_us={us_pr1:.1f} "
+                 f"speedup={us_pr1 / us_f:.2f}x shape={tuple(xf.shape)}"))
+
+    # --- flash-attention normalizer through the posit kernel ----------
+    from repro.core.posit import PositFormat as _PF
+    from repro.kernels.posit_flash_attn import posit_flash_attention
+
+    B, S, H, KV, hd = 2, 128, 4, 2, 32
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (B, S, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (B, S, KV, hd)).astype(np.float32))
+    n_fa = _count_pallas_calls(
+        lambda q, k, v: posit_flash_attention(_PF(16), q, k, v), q, k, v)
+    us_fa = _time_call(
+        lambda q, k, v: posit_flash_attention(_PF(16), q, k, v), q, k, v)
+    rows.append(("rowwise/flash_attention_kernel", us_fa,
+                 f"launches={n_fa} shape=({B},{S},{H},{hd}) "
+                 f"normalizer=in-kernel-SRT"))
+    return rows
+
+
+def train_step_fused_rows():
+    """Full train step on the smoke model under the fused posit backend.
+
+    Times one optimizer step (fwd + bwd + AdamW) of the smollm smoke config
+    with (a) float division, (b) posit division on the fused backend, and
+    (c) fused backend + the Pallas flash-attention kernel.  Closes the
+    ROADMAP item on benchmarking a train step with div_backend='fused'.
+    """
+    import jax as _jax
+
+    from repro.configs import get_config
+    from repro.data import DataConfig, SyntheticLMDataset
+    from repro.numerics import NumericsConfig
+    from repro.train import TrainConfig
+    from repro.train.trainer import init_train_state, make_train_step
+
+    rows = []
+    base = get_config("smollm-360m", smoke=True)
+    variants = [
+        ("float_div", base),
+        ("posit_fused", base.replace(numerics=NumericsConfig(
+            posit_division=True, div_backend="fused"))),
+        ("posit_fused_flash_attn", base.replace(
+            attn_backend="fused",
+            numerics=NumericsConfig(posit_division=True,
+                                    div_backend="fused"))),
+    ]
+    tc = TrainConfig(steps=1, microbatches=1, lr=1e-3, warmup=1)
+    for name, cfg in variants:
+        ds = SyntheticLMDataset(DataConfig(2, 32), cfg)
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
+        state = init_train_state(cfg, tc, _jax.random.PRNGKey(0))
+        step = _jax.jit(make_train_step(cfg, tc))
+        us = _time_call(lambda s, b: step(s, b)[1]["loss"], state, batch,
+                        reps=2)
+        rows.append((f"train_step/{name}", us,
+                     f"smoke_model batch=2x32 backend={name}"))
+    return rows
+
+
 def posit64_throughput_rows():
     """Posit64 wide-datapath divider (3-limb BitVec) throughput + validation."""
     import numpy as _np

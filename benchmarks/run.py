@@ -4,50 +4,93 @@ Prints ``name,us_per_call,derived`` CSV.  Analytic artifacts (tables/figures
 reproduced from the cost model) carry NaN timing; throughput rows time the
 actual JAX/Pallas dividers on this host.
 
-Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--only SUBSTR[,SUBSTR]]
+     [--json PATH]
+
+``--json`` additionally writes every emitted row to a machine-readable JSON
+file (section, name, us_per_call, derived) — CI uploads it as the
+``BENCH_PR2.json`` workflow artifact.  ``--only`` filters sections by
+case-insensitive title substring (comma-separated alternatives) and
+overrides ``--quick``'s timed-section skip for the sections it selects.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import math
 import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="skip the timed throughput section")
+                    help="skip the timed throughput sections")
+    ap.add_argument("--only", default="",
+                    help="run only sections whose title contains one of "
+                         "these comma-separated substrings")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write rows to a machine-readable JSON file")
     args = ap.parse_args()
 
     from . import bench_tables as B
 
-    sections = [
-        ("Table II (iterations/latency)", B.table2_rows),
-        ("Table III (termination/rounding examples)", B.table3_rows),
-        ("Figs 4-9 (synthesis cost model)", B.figs_synthesis_rows),
-        ("Section IV deltas vs prior work [14]", B.prior_work_rows),
-        ("Table II in compiled HLO (flops/division)", B.divider_hlo_flops_rows),
-        ("Beyond-paper: radix-16 overlapped design point", B.radix16_rows),
+    # (title, fn, timed): timed sections are skipped under --quick.
+    all_sections = [
+        ("Table II (iterations/latency)", B.table2_rows, False),
+        ("Table III (termination/rounding examples)", B.table3_rows, False),
+        ("Figs 4-9 (synthesis cost model)", B.figs_synthesis_rows, False),
+        ("Section IV deltas vs prior work [14]", B.prior_work_rows, False),
+        ("Table II in compiled HLO (flops/division)",
+         B.divider_hlo_flops_rows, False),
+        ("Beyond-paper: radix-16 overlapped design point",
+         B.radix16_rows, False),
+        ("Rowwise vs broadcast fused division",
+         B.rowwise_vs_broadcast_rows, True),
+        ("Train step under the fused backend", B.train_step_fused_rows, True),
+        ("Fused vs chained posit-division path",
+         B.fused_vs_chained_rows, True),
+        ("Posit64 wide-datapath divider", B.posit64_throughput_rows, True),
+        ("Divider throughput (this host)", B.divider_throughput_rows, True),
     ]
-    if not args.quick:
-        sections.append(("Fused vs chained posit-division path",
-                         B.fused_vs_chained_rows))
-        sections.append(("Posit64 wide-datapath divider", B.posit64_throughput_rows))
-        sections.append(("Divider throughput (this host)",
-                         B.divider_throughput_rows))
+    if args.only:
+        keys = [k.strip().lower() for k in args.only.split(",") if k.strip()]
+        sections = [(t, f) for t, f, _ in all_sections
+                    if any(k in t.lower() for k in keys)]
+        if not sections:
+            titles = [t for t, _, _ in all_sections]
+            print(f"--only {args.only!r} matched no section; have {titles}",
+                  file=sys.stderr)
+            sys.exit(2)
+    else:
+        sections = [(t, f) for t, f, timed in all_sections
+                    if not (args.quick and timed)]
 
     print("name,us_per_call,derived")
     ok = True
+    json_rows = []
     for title, fn in sections:
         print(f"# --- {title} ---")
         try:
             for name, us, derived in fn():
                 print(f'{name},{us:.3f},"{derived}"')
+                json_rows.append({
+                    "section": title, "name": name,
+                    "us_per_call": None if math.isnan(us) else us,
+                    "derived": derived,
+                })
                 if "match" in derived and "False" in derived:
                     ok = False
         except Exception as e:  # noqa: BLE001
             ok = False
             print(f'{title},nan,"ERROR: {type(e).__name__}: {e}"')
+            json_rows.append({"section": title, "name": "ERROR",
+                              "us_per_call": None,
+                              "derived": f"{type(e).__name__}: {e}"})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"ok": ok, "rows": json_rows}, f, indent=2)
+        print(f"# wrote {len(json_rows)} rows to {args.json}")
     if not ok:
         sys.exit(1)
 

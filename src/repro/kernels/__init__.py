@@ -1,10 +1,14 @@
 """Pallas TPU kernels for the posit numerics hot paths.
 
-  * ``posit_cast``      — float32 <-> posit quantize/dequantize
-  * ``posit_div``       — SRT digit-recurrence division on bit patterns
-                          (variant-dispatched: r4 / r2 / scaled-r4)
-  * ``posit_fused_div`` — quantize -> divide -> dequantize in ONE kernel
-  * ``ops``             — shape-polymorphic jit'd wrappers (public API)
+  * ``posit_cast``       — float32 <-> posit quantize/dequantize
+  * ``posit_div``        — SRT digit-recurrence division on bit patterns
+                           (variant-dispatched: r4 / r2 / scaled-r4)
+  * ``posit_fused_div``  — quantize -> divide -> dequantize in ONE kernel
+                           (elementwise, rowwise-broadcast, and fused
+                           softmax flavors)
+  * ``posit_flash_attn`` — flash attention with the in-kernel posit SRT
+                           normalizer (online softmax, kv-scan)
+  * ``ops``              — shape-polymorphic jit'd wrappers (public API)
 """
 
 from .ops import (  # noqa: F401
@@ -14,5 +18,8 @@ from .ops import (  # noqa: F401
     posit_dequantize,
     posit_div,
     posit_div_fused,
+    posit_div_fused_rowwise,
     posit_quantize,
+    posit_softmax_fused,
+    rowwise_applicable,
 )

@@ -31,6 +31,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import seltables
 from repro.core.posit import PositFormat, posit_decode, posit_encode
@@ -131,7 +132,16 @@ def _scale_operand(v, didx):
 
 
 def _divide_block(fmt: PositFormat, px, pd, variant: str = DEFAULT_KERNEL_VARIANT):
-    """The divider datapath on one block (pure jnp; used inside the kernel)."""
+    """The divider datapath on one block (pure jnp; used inside the kernel).
+
+    ``pd`` may be any shape that broadcasts against ``px`` — in particular a
+    ``(bm, 1)`` per-row divisor column against a ``(bm, bn)`` dividend block.
+    Every divisor-side quantity (decode, alignment, the ``didx`` selection
+    index, operand scaling) is then computed ONCE per row on the narrow
+    shape; only the recurrence itself runs at full block width.  All datapath
+    ops are elementwise, so the broadcast result is bit-identical to running
+    the full-width divisor.
+    """
     assert kernel_variant_supported(fmt, variant), (fmt, variant)
     scaled = variant == "srt_r4_scaled"
     r = 2 if variant == "srt_r2_cs_of_fr" else 4
@@ -250,5 +260,7 @@ def posit_div_pallas(
         grid=grid,
         in_specs=[spec, spec],
         out_specs=spec,
+        compiler_params=pltpu.TPUCompilerParams(
+            vmem_limit_bytes=vmem_limit_bytes),
         interpret=interpret,
     )(px.astype(_U32), pd.astype(_U32))

@@ -1,0 +1,208 @@
+"""Pallas TPU kernel: flash attention with a posit SRT-divided normalizer.
+
+One ``pallas_call`` per attention: each grid step owns one (batch*head,
+q-tile) pair and scans the KV sequence in chunks with the online-softmax
+running statistics ``(m, l, acc)`` carried in-register — the standard flash
+pattern, so no ``(Sq, Sk)`` score tensor and no broadcast denominator ever
+materialize in HBM.  The final ``o = acc / l`` normalizer runs through the
+in-kernel digit-recurrence datapath (:func:`repro.kernels.posit_div._divide_block`)
+as a rowwise posit division: ``l`` is quantized/decoded once per query row
+(a ``(bq, 1)`` column), exactly like the dedicated rowwise divider kernel.
+
+GQA is handled by the BlockSpec index map: the KV block index is derived
+from the query-head index (``h // G``), so grouped K/V are never repeated
+in memory.
+
+Gradients: the kernel is forward-only; :func:`posit_flash_attention_ste`
+wraps it in a ``custom_vjp`` whose backward pass differentiates a plain
+float attention reference (straight-through the posit quantization, the
+same STE convention as the rest of the numerics layer).  The reference
+materializes the score tensor, which is fine at this repo's validation
+scale; a fused backward kernel is future work.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.posit import PositFormat, float_to_posit, posit_to_float
+from .ops import _on_tpu, _round_up
+from .posit_div import DEFAULT_KERNEL_VARIANT, _divide_block
+
+_NEG_INF = -1e30  # matches the jnp flash path's mask fill
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, fmt: PositFormat,
+                  variant: str, causal: bool, window: int, q_offset: int,
+                  scale: float, bq: int, bk: int, nk: int, sk_valid: int):
+    q = q_ref[0]                                    # (bq, hdp) f32
+    iq = pl.program_id(1)
+    q_pos = q_offset + iq * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, 1), 0)
+
+    m0 = jnp.full((bq, 1), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq, 1), dtype=jnp.float32)
+    a0 = jnp.zeros(q.shape, dtype=jnp.float32)
+
+    def kv_step(j, carry):
+        m, l, acc = carry
+        kj = k_ref[0, pl.ds(j * bk, bk), :]         # (bk, hdp)
+        vj = v_ref[0, pl.ds(j * bk, bk), :]
+        s = jax.lax.dot_general(
+            q, kj, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale     # (bq, bk)
+        k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = k_pos < sk_valid
+        if causal:
+            mask &= q_pos >= k_pos
+        if window:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jax.lax.dot_general(
+            p, vj, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, nk, kv_step, (m0, l0, a0))
+
+    # Final normalizer through the SRT datapath: l is a (bq, 1) per-row
+    # divisor, quantized and decoded once per query row (rowwise division).
+    pe = float_to_posit(fmt, acc)
+    pd = float_to_posit(fmt, l + 1e-30)
+    o_ref[0] = posit_to_float(fmt, _divide_block(fmt, pe, pd, variant))
+
+
+@functools.partial(jax.jit,
+                   static_argnums=(0,) + tuple(range(4, 13)))
+def posit_flash_attention(
+    fmt: PositFormat,
+    q,
+    k,
+    v,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    scale: float = 0.0,
+    variant: str = DEFAULT_KERNEL_VARIANT,
+    interpret: bool = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    vmem_limit_bytes: int = 128 * 1024 * 1024,
+):
+    """Flash attention with the posit SRT normalizer, one kernel launch.
+
+    ``q``: (B, Sq, H, hd); ``k``/``v``: (B, Sk, KV, hd) with H % KV == 0
+    (GQA via the index map — no repeated KV in memory).  All compute f32.
+    ``scale`` <= 0 means the default 1/sqrt(hd); ``interpret=None``
+    auto-selects (interpret off TPU, compiled on TPU) like the other
+    kernel wrappers.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    assert k.shape == v.shape and H % KV == 0, (q.shape, k.shape)
+    G = H // KV
+    if scale <= 0.0:
+        scale = 1.0 / math.sqrt(hd)
+
+    bq = min(block_q, _round_up(Sq, 8))
+    bk = min(block_k, _round_up(Sk, 8))
+    Sqp, Skp = _round_up(Sq, bq), _round_up(Sk, bk)
+    hdp = _round_up(hd, 128)
+    nk = Skp // bk
+
+    qf = jnp.transpose(q.astype(jnp.float32), (0, 2, 1, 3)).reshape(
+        B * H, Sq, hd)
+    kf = jnp.transpose(k.astype(jnp.float32), (0, 2, 1, 3)).reshape(
+        B * KV, Sk, hd)
+    vf = jnp.transpose(v.astype(jnp.float32), (0, 2, 1, 3)).reshape(
+        B * KV, Sk, hd)
+    qf = jnp.pad(qf, ((0, 0), (0, Sqp - Sq), (0, hdp - hd)))
+    kf = jnp.pad(kf, ((0, 0), (0, Skp - Sk), (0, hdp - hd)))
+    vf = jnp.pad(vf, ((0, 0), (0, Skp - Sk), (0, hdp - hd)))
+
+    kernel = functools.partial(
+        _flash_kernel, fmt=fmt, variant=variant, causal=causal,
+        window=window, q_offset=q_offset, scale=scale, bq=bq, bk=bk,
+        nk=nk, sk_valid=Sk)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((B * H, Sqp, hdp), jnp.float32),
+        grid=(B * H, Sqp // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hdp), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Skp, hdp),
+                         lambda b, i: (b // H * KV + (b % H) // G, 0, 0)),
+            pl.BlockSpec((1, Skp, hdp),
+                         lambda b, i: (b // H * KV + (b % H) // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hdp), lambda b, i: (b, i, 0)),
+        compiler_params=pltpu.TPUCompilerParams(
+            vmem_limit_bytes=vmem_limit_bytes),
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    out = out[:, :Sq, :hd].reshape(B, H, Sq, hd)
+    return jnp.transpose(out, (0, 2, 1, 3))
+
+
+def _attention_reference(q, k, v, causal, window, q_offset, scale):
+    """Differentiable float attention (plain softmax/divide) for the STE
+    backward; numerics mirror the jnp flash path with exact division."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qg = q.astype(jnp.float32).reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
+def posit_flash_attention_ste(fmt_n: int, variant: str, causal: bool,
+                              window: int, q_offset: int, scale: float,
+                              q, k, v):
+    """Differentiable wrapper: fused posit kernel forward, STE backward
+    through a float attention reference."""
+    return posit_flash_attention(
+        PositFormat(fmt_n), q, k, v, causal, window, q_offset, scale,
+        variant)
+
+
+def _flash_fwd(fmt_n, variant, causal, window, q_offset, scale, q, k, v):
+    out = posit_flash_attention_ste(fmt_n, variant, causal, window,
+                                    q_offset, scale, q, k, v)
+    return out, (q, k, v)
+
+
+def _flash_bwd(fmt_n, variant, causal, window, q_offset, scale, res, g):
+    q, k, v = res
+    if scale <= 0.0:
+        scale = 1.0 / math.sqrt(q.shape[-1])
+    _, vjp = jax.vjp(
+        lambda q, k, v: _attention_reference(q, k, v, causal, window,
+                                             q_offset, scale), q, k, v)
+    return vjp(g.astype(jnp.float32))
+
+
+posit_flash_attention_ste.defvjp(_flash_fwd, _flash_bwd)

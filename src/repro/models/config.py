@@ -63,6 +63,9 @@ class ModelConfig:
     tp_disable: bool = False     # replicate over the model axis (pure DP)
     attn_q_chunk: int = 1024
     attn_kv_chunk: int = 1024
+    attn_backend: str = "xla"    # xla (jnp chunked flash) | fused (single
+    #                              Pallas kernel with the in-kernel posit
+    #                              SRT normalizer; needs div_backend='fused')
 
     def __post_init__(self):
         if self.head_dim is None and self.n_heads:
@@ -70,6 +73,16 @@ class ModelConfig:
         # fail fast at model build, not mid-trace: unknown formats/variants
         # and fused-backend support for the chosen posit format
         self.numerics.validate()
+        if self.attn_backend not in ("xla", "fused"):
+            raise ValueError(f"unknown attn_backend {self.attn_backend!r}; "
+                             "expected 'xla' or 'fused'")
+        if self.attn_backend == "fused" and not (
+                self.numerics.posit_division
+                and self.numerics.div_backend == "fused"):
+            raise ValueError(
+                "attn_backend='fused' runs the posit flash-attention kernel "
+                "and requires numerics with posit_division=True and "
+                "div_backend='fused'")
 
     @property
     def padded_vocab(self) -> int:

@@ -119,7 +119,22 @@ def flash_attention(q, k, v, cfg: ModelConfig, *, causal: bool,
     q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd).  Scans q-chunks in an outer loop
     and kv-chunks in an inner loop with running (max, denom, acc) — the
     standard flash pattern, so no (Sq, Sk) tensor is ever materialized.
+
+    With ``cfg.attn_backend == "fused"`` the whole thing is ONE Pallas
+    kernel (`repro.kernels.posit_flash_attn`): the kv-scan accumulates l
+    in-register and the final o/l normalizer runs through the in-kernel
+    posit SRT datapath.  Otherwise, when posit division is on, the o/l
+    division below still dispatches shape-aware (rowwise fused kernel under
+    div_backend='fused' — no materialized broadcast denominator).
     """
+    if cfg.attn_backend == "fused":
+        from repro.kernels.posit_flash_attn import posit_flash_attention_ste
+
+        nm = cfg.numerics
+        out = posit_flash_attention_ste(
+            nm.div_fmt.n, nm.div_algo, causal, window, q_offset, 0.0,
+            q, k, v)
+        return out.astype(q.dtype)
     B, Sq, H, hd = q.shape
     _, Sk, KV, _ = k.shape
     G = H // KV  # query heads per kv head

@@ -13,9 +13,22 @@ Two backends, selected by ``NumericsConfig.div_backend``:
     (:func:`repro.core.divider.posit_divide`) bracketed by XLA-level
     float<->posit casts.  Slow; every Table IV variant; the audit path.
   * ``fused``   — one Pallas kernel fusing quantize -> SRT recurrence ->
-    dequantize in-register (:func:`repro.kernels.ops.posit_div_fused`).
-    One launch instead of four, no uint32 bit-pattern arrays in HBM;
-    bit-identical to the chained path for the supported variants.
+    dequantize in-register (:mod:`repro.kernels.ops`).  One launch instead
+    of four, no uint32 bit-pattern arrays in HBM; bit-identical to the
+    chained path for the supported variants.
+
+The fused backend dispatches on broadcast SHAPE (see
+:mod:`repro.kernels.ops` for the full rules):
+
+  * ``posit_softmax``       -> the single-launch softmax kernel (row max,
+    exp, row sum and SRT divide fused; nothing materializes in HBM).
+  * row-broadcast ``a / b`` (divisor with a size-1/absent last axis, e.g.
+    RMSNorm, router norms, flash-attention ``o / l``) -> the rowwise kernel;
+    the divisor stays an O(rows) column end to end.
+  * same-shape ``a / b``    -> the elementwise fused kernel.
+
+The ``emulate`` backend always broadcasts to full shape first — it is the
+reference the fused paths are bit-compared against.
 """
 
 from __future__ import annotations
@@ -57,15 +70,99 @@ def _div_bwd(fmt_n, variant, unroll, backend, res, g):
 _posit_div_ste.defvjp(_div_fwd, _div_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _posit_div_rowwise_ste(fmt_n: int, variant: str, a, bcol):
+    """STE division ``a[..., C] / bcol[..., 1]`` on the rowwise fused kernel."""
+    from repro.kernels.ops import posit_div_fused_rowwise
+
+    return posit_div_fused_rowwise(PositFormat(fmt_n), a, bcol,
+                                   variant=variant)
+
+
+def _div_rowwise_fwd(fmt_n, variant, a, bcol):
+    out = _posit_div_rowwise_ste(fmt_n, variant, a, bcol)
+    return out, (bcol, out)
+
+
+def _div_rowwise_bwd(fmt_n, variant, res, g):
+    bcol, out = res
+    ga = g / bcol
+    gb = jnp.sum(-g * out / bcol, axis=-1, keepdims=True)
+    return ga, gb
+
+
+_posit_div_rowwise_ste.defvjp(_div_rowwise_fwd, _div_rowwise_bwd)
+
+
+def _fused_ok(cfg: NumericsConfig) -> bool:
+    from repro.kernels.ops import fused_variant_supported
+
+    return (cfg.div_backend == "fused"
+            and fused_variant_supported(cfg.div_fmt, cfg.div_algo))
+
+
 def posit_div_values(a, b, cfg: NumericsConfig):
-    """a / b computed in posit arithmetic (float in, float out, STE grads)."""
+    """a / b computed in posit arithmetic (float in, float out, STE grads).
+
+    Shape-aware on the fused backend: a row-broadcast divisor (size-1 or
+    absent last axis) runs on the rowwise kernel with no materialized
+    broadcast; everything else broadcasts and runs elementwise.
+    """
+    from repro.kernels.ops import rowwise_applicable
+
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    if _fused_ok(cfg) and rowwise_applicable(a.shape, b.shape):
+        bcol = jnp.broadcast_to(b, a.shape[:-1] + (1,))
+        return _posit_div_rowwise_ste(cfg.div_fmt.n, cfg.div_algo, a, bcol)
     a, b = jnp.broadcast_arrays(a, b)
     return _posit_div_ste(cfg.div_fmt.n, cfg.div_algo, cfg.div_unroll,
                           cfg.div_backend, a, b)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _posit_softmax_ste(fmt_n: int, variant: str, x):
+    """Last-axis softmax on the single-launch fused kernel (STE grads)."""
+    from repro.kernels.ops import posit_softmax_fused
+
+    return posit_softmax_fused(PositFormat(fmt_n), x, variant=variant)
+
+
+def _softmax_fwd(fmt_n, variant, x):
+    out = _posit_softmax_ste(fmt_n, variant, x)
+    return out, (x, out)
+
+
+def _softmax_bwd(fmt_n, variant, res, g):
+    # Mirror the emulate path's composition exactly: STE through the posit
+    # divide (d out/d e = 1/s, d out/d s = -y/s summed), chain rule through
+    # e = exp(x - stop_grad(m)) and s = sum(e).  With p = e/s (the float
+    # softmax) that collapses to dx = p * (g - sum(g * y)).
+    x, y = res
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    dx = p * (g - jnp.sum(g * y, axis=-1, keepdims=True))
+    return (dx,)
+
+
+_posit_softmax_ste.defvjp(_softmax_fwd, _softmax_bwd)
+
+
 def posit_softmax(x, cfg: NumericsConfig, axis: int = -1):
-    """Numerically-stable softmax with a posit-divided normalizer."""
+    """Numerically-stable softmax with a posit-divided normalizer.
+
+    On the fused backend this is ONE kernel launch (max/exp/sum/divide all
+    in-register); otherwise max/exp/sum are XLA ops around the divider.
+    """
+    if _fused_ok(cfg):
+        x = jnp.asarray(x)
+        ax = axis % x.ndim
+        if ax != x.ndim - 1:
+            xt = jnp.moveaxis(x, ax, -1)
+            return jnp.moveaxis(
+                _posit_softmax_ste(cfg.div_fmt.n, cfg.div_algo, xt), -1, ax)
+        return _posit_softmax_ste(cfg.div_fmt.n, cfg.div_algo, x)
     m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
     e = jnp.exp(x - m)
     s = jnp.sum(e, axis=axis, keepdims=True)
@@ -73,7 +170,11 @@ def posit_softmax(x, cfg: NumericsConfig, axis: int = -1):
 
 
 def posit_rmsnorm_div(x, rms, cfg: NumericsConfig):
-    """x / rms via the posit divider (rms broadcast along the last axis)."""
+    """x / rms via the posit divider (rms broadcast along the last axis).
+
+    Fused backend: rowwise kernel — the per-row rms is quantized/decoded
+    once per row and never broadcast in HBM.
+    """
     return posit_div_values(x, rms, cfg)
 
 

@@ -4,3 +4,26 @@ import sys
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
 # single real device; only launch/dryrun.py forces 512 host devices.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def count_pallas_calls(fn, *args):
+    """Number of pallas_call launches in the lowered jaxpr of fn(*args)."""
+    import jax
+
+    def walk(jaxpr):
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    n += walk(v.jaxpr if hasattr(v.jaxpr, "eqns")
+                              else v.jaxpr.jaxpr)
+                elif isinstance(v, (list, tuple)):
+                    for w in v:
+                        if hasattr(w, "jaxpr"):
+                            n += walk(w.jaxpr if hasattr(w.jaxpr, "eqns")
+                                      else w.jaxpr.jaxpr)
+        return n
+
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)

@@ -1,0 +1,153 @@
+"""Posit flash-attention kernel: accuracy, GQA, masking, grads, routing."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.posit import PositFormat
+from repro.kernels.posit_flash_attn import (
+    posit_flash_attention,
+    posit_flash_attention_ste,
+)
+from repro.models import layers as L
+from repro.numerics import NumericsConfig
+
+RNG = np.random.default_rng(5)
+FMT = PositFormat(16)
+B, S, H, KV, HD = 2, 67, 4, 2, 32
+
+
+def _qkv(seq=S, kv_seq=None):
+    kv_seq = kv_seq or seq
+    q = jnp.asarray(RNG.normal(0, 1, (B, seq, H, HD)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(0, 1, (B, kv_seq, KV, HD)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(0, 1, (B, kv_seq, KV, HD)).astype(np.float32))
+    return q, k, v
+
+
+def _plain(q, k, v, causal, window, q_offset=0):
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    sc = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / math.sqrt(hd)
+    qp = q_offset + jnp.arange(sq)
+    kp = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if window:
+        mask &= qp[:, None] - kp[None, :] < window
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, -1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 16)])
+def test_kernel_matches_plain_attention(causal, window):
+    q, k, v = _qkv()
+    f = posit_flash_attention(FMT, q, k, v, causal, window, 0, 0.0,
+                              "srt_r4_cs_of_fr", True, 32, 32)
+    p = _plain(q, k, v, causal, window)
+    # posit16 quantizes only the final o/l normalizer: ~2^-10 relative
+    assert float(jnp.max(jnp.abs(f - p))) < 3e-3
+
+
+def test_kernel_gqa_via_index_map():
+    """Grouped heads must read the right KV block (no repeat in memory)."""
+    q, k, v = _qkv()
+    f = posit_flash_attention(FMT, q, k, v, True, 0, 0.0, 0.0)
+    # repeat kv to full heads and run MHA: must agree exactly in structure
+    kr = jnp.repeat(k, H // KV, axis=2)
+    vr = jnp.repeat(v, H // KV, axis=2)
+    fr = posit_flash_attention(FMT, q, kr, vr, True, 0, 0.0, 0.0)
+    np.testing.assert_array_equal(np.asarray(f), np.asarray(fr))
+
+
+def test_kernel_q_offset_decode_window():
+    """Cross-length q/k with q_offset (decode-style suffix query block)."""
+    q, k, v = _qkv(seq=8, kv_seq=64)
+    off = 56  # the 8 queries sit at positions 56..63 of the kv stream
+    f = posit_flash_attention(FMT, q, k, v, True, 0, off, 0.0,
+                              "srt_r4_cs_of_fr", True, 8, 16)
+    p = _plain(q, k, v, True, 0, q_offset=off)
+    assert float(jnp.max(jnp.abs(f - p))) < 3e-3
+
+
+def test_kernel_single_launch():
+    from conftest import count_pallas_calls
+
+    q, k, v = _qkv()
+    assert count_pallas_calls(
+        lambda q, k, v: posit_flash_attention(FMT, q, k, v), q, k, v) == 1
+
+
+def test_ste_gradients_close_to_float_reference():
+    q, k, v = _qkv(seq=32)
+    co = jnp.asarray(RNG.normal(0, 1, (B, 32, H, HD)).astype(np.float32))
+
+    def fused_loss(q, k, v):
+        out = posit_flash_attention_ste(16, "srt_r4_cs_of_fr", True, 0, 0,
+                                        0.0, q, k, v)
+        return (out * co).sum()
+
+    def ref_loss(q, k, v):
+        return (_plain(q, k, v, True, 0) * co).sum()
+
+    gf = jax.grad(fused_loss, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(ref_loss, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        assert bool(jnp.isfinite(a).all())
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=5e-3)
+
+
+# ----------------------------------------------------------- layer routing
+
+
+def _fused_cfg():
+    return get_config("smollm-360m", smoke=True).replace(
+        attn_backend="fused",
+        numerics=NumericsConfig(posit_division=True, div_backend="fused"))
+
+
+def test_layer_routes_fused_attention():
+    cfg = _fused_cfg()
+    q = jnp.asarray(RNG.normal(0, 1, (B, 64, cfg.n_heads, cfg.head_dim))
+                    .astype(np.float32))
+    k = jnp.asarray(RNG.normal(0, 1, (B, 64, cfg.n_kv_heads, cfg.head_dim))
+                    .astype(np.float32))
+    v = jnp.asarray(RNG.normal(0, 1, (B, 64, cfg.n_kv_heads, cfg.head_dim))
+                    .astype(np.float32))
+    f = L.flash_attention(q, k, v, cfg, causal=True)
+    x = L.flash_attention(q, k, v, cfg.replace(attn_backend="xla"),
+                          causal=True)
+    assert float(jnp.max(jnp.abs(f - x))) < 3e-3
+
+
+def test_layer_forward_and_grad_with_fused_attention():
+    cfg = _fused_cfg()
+    params = L.init_attention(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.normal(0, 1, (1, 32, cfg.d_model)).astype(np.float32))
+    pos = jnp.arange(32)[None]
+    out = L.attention_block(params, x, cfg, pos)
+    assert out.shape == x.shape and bool(jnp.isfinite(out).all())
+    g = jax.grad(lambda x: L.attention_block(params, x, cfg, pos).sum())(x)
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_config_rejects_fused_attn_without_fused_numerics():
+    base = get_config("smollm-360m", smoke=True)
+    with pytest.raises(ValueError, match="attn_backend"):
+        base.replace(attn_backend="fused")
+    with pytest.raises(ValueError, match="attn_backend"):
+        base.replace(attn_backend="warp")
+    with pytest.raises(ValueError, match="attn_backend"):
+        base.replace(attn_backend="fused",
+                     numerics=NumericsConfig(posit_division=True,
+                                             div_backend="emulate"))

@@ -1,0 +1,223 @@
+"""Rowwise fused division + single-launch softmax: equivalence and dispatch.
+
+The rowwise kernel carries a (rows, 1) divisor column into VMEM and must be
+BIT-identical to broadcasting the divisor to full shape and running the
+elementwise fused kernel (all datapath ops are elementwise, so the broadcast
+is exact).  The fused softmax kernel must be bit-identical to the chained
+emulate path (max/exp/sum in XLA around the BitVec divider).  Sweeps cover
+(B, H, S, D)-style shapes, odd row lengths, and every supported variant.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import count_pallas_calls as _count_pallas_calls
+from repro.core.posit import PositFormat
+from repro.kernels import ops
+from repro.numerics import NumericsConfig, posit_div_values, posit_softmax
+from repro.numerics.posit_ops import posit_rmsnorm_div, posit_router_norm
+
+RNG = np.random.default_rng(11)
+
+CFG_EMULATE = NumericsConfig(posit_division=True, div_backend="emulate")
+CFG_FUSED = NumericsConfig(posit_division=True, div_backend="fused")
+
+
+def _bits(x):
+    return np.asarray(x).view(np.uint32)
+
+
+# ----------------------------------------------------------- rowwise kernel
+
+
+@pytest.mark.parametrize("shape", [(2, 3, 5, 37), (4, 2, 9, 64), (37, 53),
+                                   (1, 7), (129, 2)])
+def test_rowwise_bit_identical_to_broadcast(shape):
+    fmt = PositFormat(16)
+    a = jnp.asarray(RNG.normal(0, 3, shape).astype(np.float32))
+    b = jnp.asarray(
+        RNG.uniform(0.1, 10, shape[:-1] + (1,)).astype(np.float32))
+    rw = ops.posit_div_fused_rowwise(fmt, a, b)
+    bc = ops.posit_div_fused(fmt, a, jnp.broadcast_to(b, a.shape))
+    np.testing.assert_array_equal(_bits(rw), _bits(bc))
+
+
+@pytest.mark.parametrize("n", [8, 16, 32])
+@pytest.mark.parametrize("variant", ops.FUSED_DIV_VARIANTS)
+def test_rowwise_variants_and_formats(n, variant):
+    fmt = PositFormat(n)
+    if not ops.fused_variant_supported(fmt, variant):
+        pytest.skip(f"no fused datapath for {fmt}/{variant}")
+    a = jnp.asarray(RNG.normal(0, 5, (23, 41)).astype(np.float32))
+    b = jnp.asarray(RNG.uniform(0.01, 100, (23, 1)).astype(np.float32))
+    rw = ops.posit_div_fused_rowwise(fmt, a, b, variant=variant)
+    bc = ops.posit_div_fused(fmt, a, jnp.broadcast_to(b, a.shape),
+                             variant=variant)
+    np.testing.assert_array_equal(_bits(rw), _bits(bc))
+
+
+def test_rowwise_edge_values():
+    """Zeros / infs / NaNs in the dividend; zero divisor rows -> NaR."""
+    fmt = PositFormat(16)
+    a = np.zeros((8, 16), np.float32)
+    a[0, :4] = [0.0, -0.0, np.inf, np.nan]
+    a[1] = 1e30
+    a[2] = 1e-30
+    b = np.ones((8, 1), np.float32)
+    b[3, 0] = 0.0        # whole row divides by zero -> NaR -> NaN
+    b[4, 0] = np.inf
+    rw = ops.posit_div_fused_rowwise(fmt, jnp.asarray(a), jnp.asarray(b))
+    bc = ops.posit_div_fused(fmt, jnp.asarray(a),
+                             jnp.broadcast_to(jnp.asarray(b), a.shape))
+    np.testing.assert_array_equal(_bits(rw), _bits(bc))
+    assert np.isnan(np.asarray(rw)[3]).all()
+
+
+def test_rowwise_single_launch_no_broadcast():
+    fmt = PositFormat(16)
+    a = jnp.ones((64, 256), jnp.float32)
+    b = jnp.full((64, 1), 2.0, jnp.float32)
+    assert _count_pallas_calls(
+        lambda a, b: ops.posit_div_fused_rowwise(fmt, a, b), a, b) == 1
+
+
+def test_rowwise_applicable_rules():
+    ok = ops.rowwise_applicable
+    assert ok((4, 8), (4, 1))
+    assert ok((2, 3, 5, 37), (2, 3, 5, 1))
+    assert ok((2, 3, 5, 37), (1,))
+    assert ok((2, 3, 5, 37), ())          # scalar divisor
+    assert ok((2, 3, 5, 37), (3, 1, 1))   # broadcasting leading dims
+    assert not ok((4, 8), (4, 8))         # elementwise, not rowwise
+    assert not ok((4, 1), (4, 1))         # no real last axis
+    assert not ok((8,), (4, 1))           # divisor has more dims
+    assert not ok((4, 8), (3, 1))         # incompatible broadcast
+
+
+def test_rowwise_rejects_bad_shapes_and_variants():
+    fmt = PositFormat(16)
+    with pytest.raises(ValueError, match="rowwise"):
+        ops.posit_div_fused_rowwise(fmt, jnp.ones((4, 8)), jnp.ones((4, 8)))
+    with pytest.raises(ValueError, match="fused"):
+        ops.posit_div_fused_rowwise(PositFormat(32), jnp.ones((4, 8)),
+                                    jnp.ones((4, 1)),
+                                    variant="srt_r4_scaled")
+
+
+def test_padding_lanes_stay_nan_free():
+    """Divisor lanes pad with 1 (not 0): no 0/0 -> NaR under debug_nans."""
+    fmt = PositFormat(16)
+    a = jnp.asarray(RNG.normal(0, 1, (5, 37)).astype(np.float32))
+    b = jnp.asarray(RNG.uniform(0.5, 2, (5, 1)).astype(np.float32))
+    x = jnp.asarray(RNG.normal(0, 3, (3, 29)).astype(np.float32))
+    with jax.debug_nans(True):
+        ops.posit_div_fused_rowwise(fmt, a, b).block_until_ready()
+        ops.posit_div_fused(fmt, a, jnp.broadcast_to(b, a.shape)
+                            ).block_until_ready()
+        ops.posit_softmax_fused(fmt, x).block_until_ready()
+        posit_softmax(x, CFG_FUSED).block_until_ready()
+        posit_rmsnorm_div(a, b, CFG_FUSED).block_until_ready()
+
+
+# ----------------------------------------------------------- fused softmax
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (2, 3, 5, 37), (16, 127),
+                                   (3, 1, 129), (5, 200)])
+def test_softmax_fused_bit_identical_to_emulate(shape):
+    x = jnp.asarray(RNG.normal(0, 3, shape).astype(np.float32))
+    np.testing.assert_array_equal(
+        _bits(posit_softmax(x, CFG_FUSED)),
+        _bits(posit_softmax(x, CFG_EMULATE)))
+
+
+@pytest.mark.parametrize("variant", ops.FUSED_DIV_VARIANTS)
+def test_softmax_fused_variants(variant):
+    cfg = NumericsConfig(posit_division=True, div_backend="fused",
+                         div_algo=variant).validate()
+    cfg_e = NumericsConfig(posit_division=True, div_algo=variant)
+    x = jnp.asarray(RNG.normal(0, 5, (7, 53)).astype(np.float32))
+    np.testing.assert_array_equal(
+        _bits(posit_softmax(x, cfg)), _bits(posit_softmax(x, cfg_e)))
+
+
+def test_softmax_fused_nonlast_axis():
+    x = jnp.asarray(RNG.normal(0, 3, (4, 19, 8)).astype(np.float32))
+    np.testing.assert_array_equal(
+        _bits(posit_softmax(x, CFG_FUSED, axis=1)),
+        _bits(posit_softmax(x, CFG_EMULATE, axis=1)))
+
+
+def test_softmax_fused_single_launch():
+    x = jnp.ones((16, 64, 128), jnp.float32)
+    assert _count_pallas_calls(
+        lambda v: posit_softmax(v, CFG_FUSED), x) == 1
+
+
+def test_softmax_fused_masked_rows():
+    """Rows fully masked to the -1e30 fill behave like the emulate path."""
+    x = np.full((4, 33), -1e30, np.float32)
+    x[1, :7] = RNG.normal(0, 1, 7)
+    x = jnp.asarray(x)
+    np.testing.assert_array_equal(
+        _bits(posit_softmax(x, CFG_FUSED)),
+        _bits(posit_softmax(x, CFG_EMULATE)))
+
+
+def test_softmax_fused_gradients_match_emulate():
+    x = jnp.asarray(RNG.normal(0, 2, (6, 37)).astype(np.float32))
+    co = jnp.asarray(RNG.normal(0, 1, (6, 37)).astype(np.float32))
+    gf = jax.grad(lambda v: (posit_softmax(v, CFG_FUSED) * co).sum())(x)
+    ge = jax.grad(lambda v: (posit_softmax(v, CFG_EMULATE) * co).sum())(x)
+    np.testing.assert_allclose(np.asarray(gf), np.asarray(ge),
+                               rtol=1e-5, atol=1e-7)
+
+
+# ----------------------------------------------------------- dispatch / STE
+
+
+def test_div_values_dispatches_rowwise_and_elementwise():
+    a = jnp.ones((32, 64), jnp.float32)
+    brow = jnp.full((32, 1), 2.0, jnp.float32)
+    bfull = jnp.full((32, 64), 2.0, jnp.float32)
+    # rowwise: one launch, and the jaxpr must not materialize (32, 64)
+    # from the divisor side before the kernel
+    assert _count_pallas_calls(
+        lambda a, b: posit_div_values(a, b, CFG_FUSED), a, brow) == 1
+    # same-shape operands go elementwise (also one launch)
+    assert _count_pallas_calls(
+        lambda a, b: posit_div_values(a, b, CFG_FUSED), a, bfull) == 1
+    np.testing.assert_array_equal(
+        _bits(posit_div_values(a, brow, CFG_FUSED)),
+        _bits(posit_div_values(a, bfull, CFG_FUSED)))
+
+
+@pytest.mark.parametrize("bshape", [(2, 3, 5, 1), (5, 1), (1,), ()])
+def test_div_values_rowwise_vs_emulate_broadcast_shapes(bshape):
+    a = jnp.asarray(RNG.uniform(0.1, 10, (2, 3, 5, 19)).astype(np.float32))
+    b = jnp.asarray(RNG.uniform(0.1, 10, bshape).astype(np.float32))
+    np.testing.assert_array_equal(
+        _bits(posit_div_values(a, b, CFG_FUSED)),
+        _bits(posit_div_values(a, b, CFG_EMULATE)))
+
+
+def test_rowwise_ste_gradients():
+    a = jnp.asarray(RNG.uniform(0.5, 2, (8, 16)).astype(np.float32))
+    b = jnp.asarray(RNG.uniform(0.5, 2, (8, 1)).astype(np.float32))
+    ga = jax.grad(lambda a: posit_div_values(a, b, CFG_FUSED).sum())(a)
+    np.testing.assert_allclose(np.asarray(ga),
+                               np.broadcast_to(1 / np.asarray(b), a.shape),
+                               rtol=1e-5)
+    gb = jax.grad(lambda b: posit_div_values(a, b, CFG_FUSED).sum())(b)
+    out = posit_div_values(a, b, CFG_FUSED)
+    want = np.sum(-np.asarray(out) / np.asarray(b), axis=-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(gb), want, rtol=1e-4)
+
+
+def test_router_norm_rowwise_matches_emulate():
+    w = jnp.asarray(RNG.uniform(0, 1, (4, 7, 9)).astype(np.float32))
+    np.testing.assert_array_equal(
+        _bits(posit_router_norm(w, CFG_FUSED)),
+        _bits(posit_router_norm(w, CFG_EMULATE)))
