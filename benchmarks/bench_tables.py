@@ -396,6 +396,70 @@ def train_step_fused_rows():
     return rows
 
 
+def multiword_rows():
+    """Two-word residual datapath: posit64 fused vs BitVec emulate, plus the
+    scaled-variant design points (Table V) now served by the W-word plan.
+
+    The fused path runs the whole quantize -> 2-word SRT recurrence ->
+    dequantize in one Pallas launch; the emulate path chains the multi-limb
+    BitVec divider between XLA-level wide casts.  Timed in interpret mode on
+    CPU hosts (the launch-count/datapath-width reductions are backend-
+    independent); the acceptance gate is the ``fused_faster_match`` key —
+    run.py fails the job when any derived string carries ``match``+``False``,
+    so a fused-slower-than-emulate regression exits nonzero.
+    """
+    from repro.core.posit import PositFormat as _PF
+    from repro.kernels import ops
+    from repro.kernels.posit_div import kernel_datapath_plan
+    from repro.numerics import NumericsConfig
+    from repro.numerics.posit_ops import posit_div_values
+
+    rows = []
+    rng = np.random.default_rng(0)
+    shape = (128, 512)
+    a = jnp.asarray((rng.normal(0, 1, shape)
+                     * 10.0 ** rng.uniform(-6, 6, shape)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(0.1, 10, shape).astype(np.float32))
+
+    # posit64: fused 2-word kernel vs BitVec emulate, same variant
+    for variant in ("srt_r4_cs_of_fr", "srt_r2_cs_of_fr"):
+        cfg_e = NumericsConfig(posit_division=True, div_format="posit64",
+                               div_algo=variant, div_backend="emulate")
+        cfg_f = NumericsConfig(posit_division=True, div_format="posit64",
+                               div_algo=variant, div_backend="fused")
+        us_e = _time_call(lambda x, y, c=cfg_e: posit_div_values(x, y, c),
+                          a, b, reps=3)
+        us_f = _time_call(lambda x, y, c=cfg_f: posit_div_values(x, y, c),
+                          a, b, reps=3)
+        rows.append((f"multiword/posit64/{variant}", us_f,
+                     f"emulate_us={us_e:.1f} speedup={us_e / us_f:.2f}x "
+                     f"fused_faster_match={us_f < us_e} n={a.size}"))
+
+    # full-width srt_r4_scaled: posit32 now runs the fused path (2-word)
+    cfg_e = NumericsConfig(posit_division=True, div_format="posit32",
+                           div_algo="srt_r4_scaled", div_backend="emulate")
+    cfg_f = NumericsConfig(posit_division=True, div_format="posit32",
+                           div_algo="srt_r4_scaled", div_backend="fused")
+    us_e = _time_call(lambda x, y: posit_div_values(x, y, cfg_e), a, b, reps=3)
+    us_f = _time_call(lambda x, y: posit_div_values(x, y, cfg_f), a, b, reps=3)
+    rows.append(("multiword/posit32/srt_r4_scaled", us_f,
+                 f"emulate_us={us_e:.1f} speedup={us_e / us_f:.2f}x "
+                 f"fused_faster_match={us_f < us_e} words=2"))
+
+    # Table V design points: scaled-variant iterations + plan width per fmt
+    for n in (16, 32, 64):
+        fmt = _PF(n)
+        it_sc = VARIANTS["srt_r4_scaled"].iterations(fmt)
+        it_r4 = VARIANTS["srt_r4_cs_of_fr"].iterations(fmt)
+        plan = kernel_datapath_plan(fmt, "srt_r4_scaled")
+        rows.append((
+            f"multiword/tableV/posit{n}", float("nan"),
+            f"scaled_it={it_sc} r4_it={it_r4} "
+            f"plan_words={plan.words if plan else 'unplanned'} "
+            f"fused={ops.fused_variant_supported(fmt, 'srt_r4_scaled')}"))
+    return rows
+
+
 def posit64_throughput_rows():
     """Posit64 wide-datapath divider (3-limb BitVec) throughput + validation."""
     import numpy as _np

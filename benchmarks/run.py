@@ -50,6 +50,8 @@ def main() -> None:
         ("Train step under the fused backend", B.train_step_fused_rows, True),
         ("Fused vs chained posit-division path",
          B.fused_vs_chained_rows, True),
+        ("Multiword residual datapath (posit64 fused vs emulate)",
+         B.multiword_rows, True),
         ("Posit64 wide-datapath divider", B.posit64_throughput_rows, True),
         ("Divider throughput (this host)", B.divider_throughput_rows, True),
     ]

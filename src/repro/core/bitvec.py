@@ -19,7 +19,10 @@ import jax
 import jax.numpy as jnp
 
 _U32 = jnp.uint32
-_FULL = jnp.uint32(0xFFFFFFFF)
+# NOTE: no module-level jnp scalars here — they would become captured
+# constants when BitVec ops run inside a Pallas kernel trace (the wide
+# fused divider does exactly that).  Limb ops on uint32 wrap mod 2^32
+# natively, so the old 0xFFFFFFFF mask after combining shifts is moot.
 
 
 def _nlimbs(width: int) -> int:
@@ -177,7 +180,7 @@ def bv_shl(a: BitVec, k: int) -> BitVec:
             out.append(lo)
         else:
             hi = a.limbs[i - ls - 1] if 0 <= i - ls - 1 < n else z
-            out.append(((lo << bs) | (hi >> (32 - bs))) & _FULL)
+            out.append((lo << bs) | (hi >> (32 - bs)))
     return bv_mask(BitVec(out, a.width))
 
 
@@ -196,7 +199,7 @@ def bv_shr(a: BitVec, k: int) -> BitVec:
             out.append(lo)
         else:
             hi = a.limbs[i + ls + 1] if i + ls + 1 < n else z
-            out.append(((lo >> bs) | (hi << (32 - bs))) & _FULL)
+            out.append((lo >> bs) | (hi << (32 - bs)))
     return BitVec(out, a.width)
 
 

@@ -71,6 +71,32 @@ class PositFormat:
 POSIT8 = PositFormat(8)
 POSIT16 = PositFormat(16)
 POSIT32 = PositFormat(32)
+# Wide format: patterns/significands exceed one uint32 word, so this module's
+# u32 codecs do NOT apply — posit64 runs on the BitVec/word-tuple paths in
+# :mod:`repro.core.wide` and :mod:`repro.kernels.posit_div`.
+POSIT64 = PositFormat(64)
+
+
+def _pow2_f32(e):
+    """Exact 2^e for int32 e in [-126, 127], built from exponent bits."""
+    return jax.lax.bitcast_convert_type(
+        ((e.astype(_I32) + 127) << 23), jnp.float32)
+
+
+def ldexp_f32(m, e):
+    """``m * 2^e`` in float32 via two exact power-of-two factors.
+
+    ``jnp.ldexp`` materializes 2^e as a single f32 factor, which is
+    SUBNORMAL for e < -126 and gets flushed to zero on FTZ backends (XLA
+    CPU) — so e.g. posit32 minpos-region values (true magnitude ~1e-36,
+    comfortably NORMAL in f32) dequantized to 0.  Splitting e across two
+    in-range factors keeps every intermediate normal whenever the final
+    result is; only genuinely subnormal results remain at the mercy of the
+    backend's flush mode (identically for every caller).
+    """
+    e = jnp.clip(e.astype(_I32), -252, 254)
+    e1 = e >> 1           # arithmetic shift == floor(e / 2)
+    return m.astype(jnp.float32) * _pow2_f32(e1) * _pow2_f32(e - e1)
 
 
 def _safe_shl(x, s):
@@ -252,32 +278,46 @@ def posit_encode(
 def posit_to_float(fmt: PositFormat, p):
     """Posit bits -> float32. Exact for n <= 16; Posit32 rounds to f32."""
     d = posit_decode(fmt, p)
-    sigf = jnp.ldexp(d.sig.astype(jnp.float32), d.scale - fmt.F)
+    sigf = ldexp_f32(d.sig.astype(jnp.float32), d.scale - fmt.F)
     val = jnp.where(d.sign, -sigf, sigf)
     val = jnp.where(d.is_zero, 0.0, val)
     val = jnp.where(d.is_nar, jnp.nan, val)
     return val
 
 
+def float_decompose(x):
+    """Exact integer decomposition of float32: (sign, scale, ti, is_zero, is_nar).
+
+    ``ti`` is the 25-bit significand with the hidden bit at bit 24 (the low
+    bit is 0 for normals), so the value is ``ti * 2^(scale - 24)``.  All
+    classification and normalization run on the BIT FIELDS, never on float
+    compares or ``frexp``: XLA flushes f32 subnormals in float comparisons
+    (and ``frexp`` mis-normalizes them), and when a whole kernel body is
+    compiled as one unit the optimizer can even rewrite a bitwise zero test
+    back into a flushing float compare — integer field arithmetic is immune.
+    Subnormals decompose exactly (clz-normalized), NaN and Inf both map to
+    ``is_nar``.
+    """
+    x = x.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    exp_f = ((bits >> 23) & _U32(0xFF)).astype(_I32)
+    mant_f = bits & _U32(0x7FFFFF)
+    is_sub = exp_f == 0
+    is_zero = is_sub & (mant_f == 0)
+    is_nar = exp_f == 255
+    sign = ((bits >> 31) == 1) & ~is_zero
+    blen = _I32(32) - jax.lax.clz(mant_f.astype(_I32))  # bitlength(mant_f)
+    scale = jnp.where(is_sub, blen - 150, exp_f - 127)
+    ti = jnp.where(is_sub,
+                   mant_f << (_I32(25) - blen).astype(_U32),
+                   (_U32(1 << 23) | mant_f) << 1)
+    return sign, scale, ti, is_zero, is_nar
+
+
 def float_to_posit(fmt: PositFormat, x):
     """float32 -> posit bits with correct RNE (via exact scaled integer)."""
     n, F = fmt.n, fmt.F
-    x = x.astype(jnp.float32)
-    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
-    # bit-level zero test: XLA CPU flushes subnormals to zero in f32
-    # comparisons, but a subnormal is a nonzero real and must round to minpos
-    is_zero = (bits & _U32(0x7FFFFFFF)) == 0
-    is_nar = jnp.isnan(x) | jnp.isinf(x)
-    sign = (bits >> 31) == 1
-    sign = sign & ~is_zero
-    ax = jnp.abs(jnp.where(is_zero | is_nar, 1.0, x))
-
-    mant, ex = jnp.frexp(ax)  # ax = mant * 2^ex, mant in [0.5, 1)
-    scale = ex - 1            # ax = (2*mant) * 2^scale, 2*mant in [1, 2)
-
-    # f32 mantissa has 24 bits; take 25 so we always capture a round bit.
-    t = mant * jnp.float32(1 << 25)  # in [2^24, 2^25), exact (power-of-2 scale)
-    ti = t.astype(jnp.uint32)        # exact: fits 25 bits
+    sign, scale, ti, is_zero, is_nar = float_decompose(x)
     keep = F + 1                     # hidden bit + F fraction bits
     drop = 25 - keep
     if drop >= 1:

@@ -21,6 +21,7 @@ from .bitvec import (
     BitVec,
     bv_add_bit,
     bv_and,
+    bv_bit,
     bv_bit_dyn,
     bv_const,
     bv_eq,
@@ -40,7 +41,7 @@ from .bitvec import (
     bv_ult,
     bv_zeros,
 )
-from .posit import PositFormat
+from .posit import PositFormat, float_decompose
 
 _U32 = jnp.uint32
 _I32 = jnp.int32
@@ -166,6 +167,61 @@ def encode_wide(fmt: PositFormat, sign, scale, frac: BitVec, round_bit, sticky,
     out = bv_select(is_zero, bv_zeros(n, like), out)
     out = bv_select(is_nar, bv_const(1 << (n - 1), n, like), out)
     return out
+
+
+# ---------------------------------------------------------------------------
+# float32 <-> wide-posit casts (the quantization entry points for n > 32)
+# ---------------------------------------------------------------------------
+
+
+def float_to_posit_wide(fmt: PositFormat, x) -> BitVec:
+    """float32 -> n-bit posit patterns as a BitVec (n > 32).
+
+    Every finite float32 value is exactly representable in posit64 except
+    deep in the regime tails, where ``encode_wide`` applies the standard
+    value-nearest rounding — so this is the correct RNE quantization for the
+    whole f32 range, used identically by the emulate backend and (inside the
+    kernel body) by the fused wide datapath.
+    """
+    n, F = fmt.n, fmt.F
+    assert n > 32 and F >= 24, fmt
+    # Integer-only f32 decomposition (see posit.float_decompose): subnormals
+    # normalize exactly and none of the classification can be rewritten into
+    # a flushing float compare when a kernel body compiles as one unit.
+    sign, scale, ti, is_zero, is_nar = float_decompose(x)
+    frac = bv_shl(bv_from_u32(ti & _U32((1 << 24) - 1), F), F - 24)
+    zero = jnp.zeros_like(ti)
+    return encode_wide(fmt, sign, scale, frac, zero,
+                       jnp.zeros_like(is_zero), is_zero, is_nar)
+
+
+def posit_wide_to_float(fmt: PositFormat, p: BitVec):
+    """n-bit posit patterns (BitVec) -> float32 with RNE to 24 bits.
+
+    The G/R/S extraction on the wide significand is exact; the final
+    scaling (``ldexp_f32``) multiplies an exactly-representable 24-bit
+    integer by two exact power-of-two factors, so normal-range outputs are
+    correctly rounded (subnormal outputs inherit the backend's flush mode,
+    identically for the emulate and fused paths).
+    """
+    from .posit import ldexp_f32
+
+    F = fmt.F
+    sign, scale, sig, is_zero, is_nar = decode_wide(fmt, p)
+    if F + 1 > 24:
+        sh = F + 1 - 24  # discarded low bits of the wide significand
+        m24 = bv_to_u32(bv_shr(sig, sh))
+        guard = bv_bit(sig, sh - 1)
+        low = bv_and(sig, bv_const((1 << (sh - 1)) - 1, sig.width,
+                                   bv_to_u32(sig)))
+        sticky = (~bv_is_zero(low)).astype(_U32)
+        m24 = m24 + (guard & (sticky | (m24 & 1)))
+        val = ldexp_f32(m24, scale - 23)
+    else:
+        val = ldexp_f32(bv_to_u32(sig), scale - F)
+    val = jnp.where(sign, -val, val)
+    val = jnp.where(is_zero, 0.0, val)
+    return jnp.where(is_nar, jnp.nan, val)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3))

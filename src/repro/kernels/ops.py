@@ -21,10 +21,27 @@ Dispatch rules for the fused division family (what the numerics layer's
 
 All three are bit-identical to the chained
 ``posit_quantize -> posit_div -> posit_dequantize`` path (and therefore to
-the BitVec ``emulate`` backend) for the supported variants:
-``srt_r4_cs_of_fr``, ``srt_r2_cs_of_fr``, and ``srt_r4_scaled`` for
-n <= 30 only (its 3 extra operand-scaling fraction bits must fit under the
-int32 residual binary point).
+the BitVec ``emulate`` backend) for every (format, variant) with a datapath
+plan (:func:`repro.kernels.posit_div.kernel_datapath_plan`): all Table IV
+rows — ``nrd``, ``srt_r2``, the carry-save/OTF ladder, ``srt_r4_scaled`` —
+on a 1- or 2-word residual frame.  Posit64 runs the two-word plan through
+the float-level entry points (its 60-bit significand spans two words);
+``srt_r4_scaled`` is planless only above n = 62, where its 3 extra
+operand-scaling fraction bits overflow the two-word frame.  Unsupported
+combinations raise with the reason derived from the plan
+(:func:`repro.kernels.posit_div.kernel_plan_error`), so the messages stay
+truthful as the plan table evolves.
+
+The pattern-level :func:`posit_div` is the one n <= 32 API (wide patterns do
+not fit a uint32 word); the float-in/float-out fused entry points accept
+every planned format including posit64.
+
+One caveat on the softmax kernel: its f32 row SUM runs over the padded tile,
+and f32 addition order is compilation-dependent, so the sum can differ from
+the emulate path's unpadded ``jnp.sum`` by an ulp.  Formats with F < 23
+absorb that in quantization (the bit-identity sweeps hold); posit64 keeps
+every f32 mantissa bit, so its softmax agrees to 1 f32 ulp while the
+division stage itself stays bit-exact.
 
 Padding convention: dividend lanes pad with 0, **divisor lanes pad with 1**
 (float 1.0, posit pattern ``0b01…0``), so padding computes ``0 / 1 = 0``
@@ -36,7 +53,6 @@ from __future__ import annotations
 
 import functools
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -54,12 +70,19 @@ _LANE = 128        # TPU lane width: last-dim padding multiple
 
 
 def fused_variant_supported(fmt: PositFormat, variant: str) -> bool:
-    """Does (fmt, variant) have a single-kernel fused datapath?"""
+    """Does (fmt, variant) have a single-kernel fused datapath plan?"""
     return _div.kernel_variant_supported(fmt, variant)
 
 
+def _check_fused(fmt: PositFormat, variant: str) -> None:
+    """Raise with the plan-derived reason when no fused datapath exists."""
+    err = _div.kernel_plan_error(fmt, variant)
+    if err is not None:
+        raise ValueError(f"no fused datapath: {err}")
+
+
 def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+    return _div.on_tpu()
 
 
 def _round_up(x: int, m: int) -> int:
@@ -129,12 +152,13 @@ def rowwise_applicable(a_shape, b_shape) -> bool:
 
 def posit_div(fmt: PositFormat, px, pd, block=_DEFAULT_BLOCK, interpret=None,
               variant: str = DEFAULT_DIV_VARIANT):
-    """Elementwise posit division on bit-pattern arrays (any shape)."""
-    if not fused_variant_supported(fmt, variant):
+    """Elementwise posit division on bit-pattern arrays (n <= 32, any shape)."""
+    if fmt.n > 32:
         raise ValueError(
-            f"no in-register kernel datapath for {fmt} variant {variant!r}; "
-            f"supported variants: {FUSED_DIV_VARIANTS} "
-            f"(srt_r4_scaled needs n <= 30)")
+            f"posit_div takes uint32 bit patterns, which cannot hold {fmt}; "
+            "wide formats divide through the float-level fused entry points "
+            "(posit_div_fused / posit_div_fused_rowwise / posit_softmax_fused)")
+    _check_fused(fmt, variant)
     if interpret is None:
         interpret = not _on_tpu()
     shape = px.shape
@@ -153,11 +177,7 @@ def posit_div_fused(fmt: PositFormat, a, b, block=_DEFAULT_BLOCK,
     One kernel launch; bit-identical to
     ``posit_dequantize(posit_div(posit_quantize(a), posit_quantize(b)))``.
     """
-    if not fused_variant_supported(fmt, variant):
-        raise ValueError(
-            f"no fused datapath for {fmt} variant {variant!r}; "
-            f"supported variants: {FUSED_DIV_VARIANTS} "
-            f"(srt_r4_scaled needs n <= 30)")
+    _check_fused(fmt, variant)
     if interpret is None:
         interpret = not _on_tpu()
     shape = a.shape
@@ -180,11 +200,7 @@ def posit_div_fused_rowwise(fmt: PositFormat, a, b, interpret=None,
     O(rows * C) broadcast of the chained path never materializes.
     Bit-identical to ``posit_div_fused(a, broadcast(b))``.
     """
-    if not fused_variant_supported(fmt, variant):
-        raise ValueError(
-            f"no fused datapath for {fmt} variant {variant!r}; "
-            f"supported variants: {FUSED_DIV_VARIANTS} "
-            f"(srt_r4_scaled needs n <= 30)")
+    _check_fused(fmt, variant)
     if not rowwise_applicable(a.shape, jnp.shape(b)):
         raise ValueError(
             f"rowwise division needs a per-row divisor; got a.shape="
@@ -211,11 +227,7 @@ def posit_softmax_fused(fmt: PositFormat, x, interpret=None,
     ``posit_div_fused(exp(x - max), sum(exp(x - max)))`` and hence to the
     chained emulate path.
     """
-    if not fused_variant_supported(fmt, variant):
-        raise ValueError(
-            f"no fused datapath for {fmt} variant {variant!r}; "
-            f"supported variants: {FUSED_DIV_VARIANTS} "
-            f"(srt_r4_scaled needs n <= 30)")
+    _check_fused(fmt, variant)
     if interpret is None:
         interpret = not _on_tpu()
     shape = x.shape

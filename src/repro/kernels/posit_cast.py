@@ -9,12 +9,14 @@ shared with the exhaustively-validated :mod:`repro.core.posit`.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.posit import PositFormat, float_to_posit, posit_to_float
+from .posit_div import resolve_interpret
 
 _U32 = jnp.uint32
 
@@ -28,8 +30,10 @@ def _dequant_kernel(p_ref, o_ref, *, fmt: PositFormat):
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2, 3))
-def posit_quantize_pallas(fmt: PositFormat, x, block=(64, 256), interpret: bool = True):
+def posit_quantize_pallas(fmt: PositFormat, x, block=(64, 256),
+                          interpret: Optional[bool] = None):
     assert x.ndim == 2
+    interpret = resolve_interpret(interpret)
     bm, bn = block
     m, n = x.shape
     assert m % bm == 0 and n % bn == 0
@@ -45,8 +49,10 @@ def posit_quantize_pallas(fmt: PositFormat, x, block=(64, 256), interpret: bool 
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2, 3))
-def posit_dequantize_pallas(fmt: PositFormat, p, block=(64, 256), interpret: bool = True):
+def posit_dequantize_pallas(fmt: PositFormat, p, block=(64, 256),
+                            interpret: Optional[bool] = None):
     assert p.ndim == 2
+    interpret = resolve_interpret(interpret)
     bm, bn = block
     m, n = p.shape
     assert m % bm == 0 and n % bn == 0

@@ -5,9 +5,12 @@ q-tile) pair and scans the KV sequence in chunks with the online-softmax
 running statistics ``(m, l, acc)`` carried in-register — the standard flash
 pattern, so no ``(Sq, Sk)`` score tensor and no broadcast denominator ever
 materialize in HBM.  The final ``o = acc / l`` normalizer runs through the
-in-kernel digit-recurrence datapath (:func:`repro.kernels.posit_div._divide_block`)
-as a rowwise posit division: ``l`` is quantized/decoded once per query row
-(a ``(bq, 1)`` column), exactly like the dedicated rowwise divider kernel.
+in-kernel digit-recurrence datapath
+(:func:`repro.kernels.posit_div.divide_floats_block`, so any planned format
+including posit64 works) as a rowwise posit division: ``l`` is
+quantized/decoded once per query row (a ``(bq, 1)`` column), exactly like
+the dedicated rowwise divider kernel.  Fully-masked rows (l == 0) divide by
+the format's minpos instead (see :func:`_minpos_eps`) and come out 0.
 
 GQA is handled by the BlockSpec index map: the KV block index is derived
 from the query-head index (``h // G``), so grouped K/V are never repeated
@@ -31,11 +34,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.posit import PositFormat, float_to_posit, posit_to_float
+from repro.core.posit import PositFormat
 from .ops import _on_tpu, _round_up
-from .posit_div import DEFAULT_KERNEL_VARIANT, _divide_block
+from .posit_div import DEFAULT_KERNEL_VARIANT, divide_floats_block
 
 _NEG_INF = -1e30  # matches the jnp flash path's mask fill
+
+
+def _minpos_eps(fmt: PositFormat) -> float:
+    """Format-aware normalizer epsilon: the format's minpos, clamped to the
+    f32 normal range.
+
+    A fully-masked query row accumulates ``l == 0``; dividing by a guaranteed
+    -nonzero posit (any float >= minpos quantizes to at least minpos) keeps
+    the row at ``0 / eps = 0`` instead of ``0 / 0 -> NaR``.  Tying the value
+    to the FORMAT's minpos (2^-max_scale) rather than an arbitrary constant
+    keeps it meaningful across posit8..posit64 and documents the invariant.
+    """
+    return float(2.0 ** -min(fmt.max_scale, 126))
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, fmt: PositFormat,
@@ -77,9 +93,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, fmt: PositFormat,
 
     # Final normalizer through the SRT datapath: l is a (bq, 1) per-row
     # divisor, quantized and decoded once per query row (rowwise division).
-    pe = float_to_posit(fmt, acc)
-    pd = float_to_posit(fmt, l + 1e-30)
-    o_ref[0] = posit_to_float(fmt, _divide_block(fmt, pe, pd, variant))
+    # Fully-masked rows have l == 0 and acc == 0: substitute the format's
+    # minpos so they normalize to 0 instead of 0/0 -> NaR.
+    l_safe = jnp.where(l > 0, l, _minpos_eps(fmt))
+    o_ref[0] = divide_floats_block(fmt, acc, l_safe, variant)
 
 
 @functools.partial(jax.jit,

@@ -6,10 +6,10 @@ MoE-router normalization) is a chain of three elementwise kernels:
     posit_quantize(a), posit_quantize(b)  ->  posit_div_pallas  ->
     posit_dequantize
 
-which launches 4 kernels and round-trips two uint32 bit-pattern arrays
-through HBM between every stage.  This module fuses the whole chain into ONE
+which launches 4 kernels and round-trips two bit-pattern arrays through HBM
+between every stage.  This module fuses the whole chain into ONE
 ``pallas_call``: quantization (RNE float->posit), the folded-first-iteration
-carry-save SRT recurrence, and dequantization all happen in-register on each
+W-word SRT recurrence, and dequantization all happen in-register on each
 VMEM block — no intermediate posit arrays ever materialize.
 
 Three kernels, by broadcast structure of the division:
@@ -28,32 +28,43 @@ Three kernels, by broadcast structure of the division:
     in a single launch.  The tile holds complete rows, so the reductions
     stay in VMEM and the only HBM traffic is the input and output.
 
-Bit-exactness: every kernel body literally composes the same
-``float_to_posit`` / ``_divide_block`` / ``posit_to_float`` primitives the
-chained path runs (broadcasting is exact: all datapath ops are elementwise),
-so outputs are bit-identical by construction — verified by
-``tests/test_fused_div.py`` / ``tests/test_rowwise_div.py`` against the
-chained and emulate paths for every supported variant.  Mirrors how
+Every kernel body composes :func:`repro.kernels.posit_div.divide_floats_block`,
+which lowers through the (fmt, variant) datapath plan: the uint32 pattern
+datapath for n <= 32 and the two-word significand/residual datapath above it
+(posit64).  Bit-exactness: the float path literally runs the same
+quantize / recurrence / encode primitives the chained and emulate paths run
+(broadcasting is exact: all datapath ops are elementwise), so outputs are
+bit-identical by construction — verified by ``tests/test_fused_div.py`` /
+``tests/test_rowwise_div.py`` / ``tests/test_multiword_div.py`` against the
+chained and BitVec-emulate paths for every planned variant.  Mirrors how
 FPPU (arXiv:2308.03425) / PVU (arXiv:2503.01313) integrate posit division as
 one pipelined unit instead of a chain of format conversions.
 
-Variant support is inherited from the in-register datapath
-(:mod:`repro.kernels.posit_div`): ``srt_r4_cs_of_fr``, ``srt_r2_cs_of_fr``,
-and ``srt_r4_scaled`` for n <= 30 (the scaled variant carries 3 extra
-fraction bits which must fit under the int32 binary point).
+Variant support is the datapath plan's (:mod:`repro.kernels.posit_div`):
+every Table IV row, with ``srt_r4_scaled`` limited to n <= 62 (its 3 extra
+operand-scaling fraction bits must fit the two-word residual frame).
+
+``interpret=None`` (the default everywhere) auto-selects: interpret mode off
+TPU, compiled on TPU — direct kernel callers get the same backend selection
+as the :mod:`repro.kernels.ops` wrappers.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.posit import PositFormat, float_to_posit, posit_to_float
-from .posit_div import DEFAULT_KERNEL_VARIANT, _divide_block
+from repro.core.posit import PositFormat
+from .posit_div import (
+    DEFAULT_KERNEL_VARIANT,
+    divide_floats_block,
+    resolve_interpret,
+)
 
 _U32 = jnp.uint32
 
@@ -68,10 +79,7 @@ def _compiler_params(vmem_limit_bytes: int):
 
 
 def _fused_kernel(a_ref, b_ref, o_ref, *, fmt: PositFormat, variant: str):
-    pa = float_to_posit(fmt, a_ref[...])
-    pb = float_to_posit(fmt, b_ref[...])
-    q = _divide_block(fmt, pa, pb, variant)
-    o_ref[...] = posit_to_float(fmt, q)
+    o_ref[...] = divide_floats_block(fmt, a_ref[...], b_ref[...], variant)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6))
@@ -80,12 +88,13 @@ def posit_fused_div_pallas(
     a,
     b,
     block=(64, 256),
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     vmem_limit_bytes: int = 64 * 1024 * 1024,
     variant: str = DEFAULT_KERNEL_VARIANT,
 ):
     """Tiled fused divider over 2D float32 arrays (pre-padded by ops.py)."""
     assert a.ndim == 2 and a.shape == b.shape
+    interpret = resolve_interpret(interpret)
     bm, bn = block
     m, n = a.shape
     assert m % bm == 0 and n % bn == 0, (a.shape, block)
@@ -108,12 +117,10 @@ def posit_fused_div_pallas(
 
 
 def _rowwise_kernel(a_ref, b_ref, o_ref, *, fmt: PositFormat, variant: str):
-    pa = float_to_posit(fmt, a_ref[...])      # (bm, bn)
-    pb = float_to_posit(fmt, b_ref[...])      # (bm, 1): one divisor per row
-    # _divide_block broadcasts the (bm, 1) divisor: decode / didx / operand
-    # scaling happen once per row, the recurrence at full block width.
-    q = _divide_block(fmt, pa, pb, variant)
-    o_ref[...] = posit_to_float(fmt, q)
+    # The (bm, 1) divisor broadcasts through the datapath: quantize / decode
+    # / didx / operand scaling happen once per row, the recurrence at full
+    # block width.
+    o_ref[...] = divide_floats_block(fmt, a_ref[...], b_ref[...], variant)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3, 4, 5, 6))
@@ -122,7 +129,7 @@ def posit_fused_div_rowwise_pallas(
     a,
     b,
     block=(8, 256),
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     vmem_limit_bytes: int = 64 * 1024 * 1024,
     variant: str = DEFAULT_KERNEL_VARIANT,
 ):
@@ -134,6 +141,7 @@ def posit_fused_div_rowwise_pallas(
     ever written to HBM.
     """
     assert a.ndim == 2 and b.shape == (a.shape[0], 1), (a.shape, b.shape)
+    interpret = resolve_interpret(interpret)
     bm, bn = block
     m, n = a.shape
     assert m % bm == 0 and n % bn == 0, (a.shape, block)
@@ -167,10 +175,7 @@ def _softmax_kernel(x_ref, o_ref, *, fmt: PositFormat, variant: str,
     # zeros keeps the f32 accumulation bit-identical to the unpadded sum.
     e = jnp.where(valid, jnp.exp(x - m), 0.0)
     s = jnp.sum(e, axis=-1, keepdims=True)            # (bm, 1)
-    pe = float_to_posit(fmt, e)
-    ps = float_to_posit(fmt, s)
-    q = _divide_block(fmt, pe, ps, variant)
-    o_ref[...] = posit_to_float(fmt, q)
+    o_ref[...] = divide_floats_block(fmt, e, s, variant)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2, 3, 4, 5, 6))
@@ -179,7 +184,7 @@ def posit_softmax_fused_pallas(
     x,
     cols_valid: int,
     block_rows: int = 8,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     vmem_limit_bytes: int = 64 * 1024 * 1024,
     variant: str = DEFAULT_KERNEL_VARIANT,
 ):
@@ -191,6 +196,7 @@ def posit_softmax_fused_pallas(
     VMEM and the SRT divide consumes the ``(bm, 1)`` row sums directly.
     """
     assert x.ndim == 2
+    interpret = resolve_interpret(interpret)
     m, n = x.shape
     bm = block_rows
     assert m % bm == 0, (x.shape, block_rows)

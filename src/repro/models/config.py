@@ -65,7 +65,12 @@ class ModelConfig:
     attn_kv_chunk: int = 1024
     attn_backend: str = "xla"    # xla (jnp chunked flash) | fused (single
     #                              Pallas kernel with the in-kernel posit
-    #                              SRT normalizer; needs div_backend='fused')
+    #                              SRT normalizer; needs div_backend='fused'.
+    #                              Any planned numerics.div_format works,
+    #                              posit8..posit64 — the normalizer lowers
+    #                              through the same W-word datapath plan the
+    #                              division kernels use, validated below via
+    #                              numerics.validate())
 
     def __post_init__(self):
         if self.head_dim is None and self.n_heads:

@@ -5,12 +5,16 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.core.posit import POSIT8, POSIT16, POSIT32, PositFormat
+from repro.core.posit import POSIT8, POSIT16, POSIT32, POSIT64, PositFormat
 
 NUMERIC_FORMATS = {
     "posit8": POSIT8,
     "posit16": POSIT16,
     "posit32": POSIT32,
+    # posit64 divides through the wide (two-word) datapaths: BitVec emulate
+    # or the W-word fused kernel.  It is a DIVISION format only — storage /
+    # wire formats (grad compression, KV cache) stay n <= 32 (uint32 codecs).
+    "posit64": POSIT64,
 }
 
 
@@ -56,17 +60,16 @@ class NumericsConfig:
             raise ValueError(f"unknown div_algo {self.div_algo!r}; "
                              f"have {list(VARIANTS)}")
         if self.div_backend == "fused":
-            from repro.kernels.ops import (FUSED_DIV_VARIANTS,
-                                           fused_variant_supported)
+            from repro.kernels.posit_div import kernel_plan_error
 
-            if not fused_variant_supported(self.div_fmt, self.div_algo):
-                raise ValueError(
-                    f"div_backend='fused' has no datapath for "
-                    f"{self.div_fmt} / {self.div_algo!r}; fused variants: "
-                    f"{FUSED_DIV_VARIANTS} (srt_r4_scaled needs n <= 30)")
+            err = kernel_plan_error(self.div_fmt, self.div_algo)
+            if err is not None:
+                raise ValueError(f"div_backend='fused' has no datapath: {err}")
         self.div_fmt  # raises KeyError on unknown format name
-        if self.grad_compress_format:
-            resolve_format(self.grad_compress_format)
-        if self.kv_cache_format:
-            resolve_format(self.kv_cache_format)
+        for field, name in (("grad_compress_format", self.grad_compress_format),
+                            ("kv_cache_format", self.kv_cache_format)):
+            if name and resolve_format(name).n > 32:
+                raise ValueError(
+                    f"{field}={name!r} is a storage/wire format and must fit "
+                    "a uint32 word (n <= 32); posit64 is division-only")
         return self

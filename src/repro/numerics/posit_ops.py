@@ -10,12 +10,15 @@ division).
 Two backends, selected by ``NumericsConfig.div_backend``:
 
   * ``emulate`` — the bit-exact BitVec datapath emulation
-    (:func:`repro.core.divider.posit_divide`) bracketed by XLA-level
-    float<->posit casts.  Slow; every Table IV variant; the audit path.
+    (:func:`repro.core.divider.posit_divide`, or the multi-limb
+    :func:`repro.core.wide.posit_divide_wide` for posit64) bracketed by
+    XLA-level float<->posit casts.  Slow; every Table IV variant; the audit
+    path.
   * ``fused``   — one Pallas kernel fusing quantize -> SRT recurrence ->
-    dequantize in-register (:mod:`repro.kernels.ops`).  One launch instead
-    of four, no uint32 bit-pattern arrays in HBM; bit-identical to the
-    chained path for the supported variants.
+    dequantize in-register (:mod:`repro.kernels.ops`), lowered through the
+    W-word datapath plan: every Table IV variant, posit8 through posit64
+    (``srt_r4_scaled`` up to n = 62).  One launch instead of four, no
+    bit-pattern arrays in HBM; bit-identical to the emulate path.
 
 The fused backend dispatches on broadcast SHAPE (see
 :mod:`repro.kernels.ops` for the full rules):
@@ -50,6 +53,15 @@ def _posit_div_ste(fmt_n: int, variant: str, unroll: bool, backend: str, a, b):
         from repro.kernels.ops import posit_div_fused
 
         return posit_div_fused(fmt, a, b, variant=variant)
+    if fmt.n > 32:
+        # Wide formats (posit64): patterns/significands exceed one uint32
+        # word, so the emulate path runs the multi-limb BitVec datapath.
+        from repro.core.wide import (float_to_posit_wide, posit_divide_wide,
+                                     posit_wide_to_float)
+
+        pa = float_to_posit_wide(fmt, a)
+        pb = float_to_posit_wide(fmt, b)
+        return posit_wide_to_float(fmt, posit_divide_wide(fmt, pa, pb, variant))
     pa = float_to_posit(fmt, a)
     pb = float_to_posit(fmt, b)
     return posit_to_float(fmt, posit_divide(fmt, pa, pb, variant, unroll))

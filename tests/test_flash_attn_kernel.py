@@ -79,6 +79,34 @@ def test_kernel_q_offset_decode_window():
     assert float(jnp.max(jnp.abs(f - p))) < 3e-3
 
 
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_fully_masked_rows_normalize_to_zero(n):
+    """A fully-masked query row has l == 0; the normalizer must divide by
+    the format's minpos epsilon and produce 0, never 0/0 -> NaR -> NaN.
+    Regression for the fixed-constant epsilon (narrow formats need a
+    format-aware value; see posit_flash_attn._minpos_eps)."""
+    q, k, v = _qkv(seq=8, kv_seq=8)
+    # causal with a negative q_offset: every query sits before every key,
+    # so all rows are fully masked
+    f = posit_flash_attention(PositFormat(n), q, k, v, True, 0, -8, 0.0,
+                              "srt_r4_cs_of_fr", True, 8, 8)
+    out = np.asarray(f)
+    assert np.isfinite(out).all(), f"NaR leaked for posit{n}"
+    np.testing.assert_array_equal(out, np.zeros_like(out))
+
+
+def test_partially_masked_batch_unaffected_by_eps():
+    """Rows with any unmasked key have l >= 1: the minpos epsilon must not
+    perturb their normalizer (bitwise vs the rowwise fused division)."""
+    from repro.kernels import ops
+
+    q, k, v = _qkv()
+    f = posit_flash_attention(FMT, q, k, v, True, 0, 0, 0.0,
+                              "srt_r4_cs_of_fr", True, 32, 32)
+    p = _plain(q, k, v, True, 0)
+    assert float(jnp.max(jnp.abs(f - p))) < 3e-3
+
+
 def test_kernel_single_launch():
     from conftest import count_pallas_calls
 

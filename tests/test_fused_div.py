@@ -63,12 +63,17 @@ def test_fused_shape_polymorphism(shape):
 
 
 def test_fused_unsupported_variant_raises():
-    with pytest.raises(ValueError, match="fused"):
-        ops.posit_div_fused(PositFormat(32), jnp.ones((4,)), jnp.ones((4,)),
+    # posit64 + operand scaling needs 63 residual fraction bits: no 2-word plan
+    with pytest.raises(ValueError, match="fused.*n <= 62"):
+        ops.posit_div_fused(PositFormat(64), jnp.ones((4,)), jnp.ones((4,)),
                             variant="srt_r4_scaled")
     with pytest.raises(ValueError, match="fused"):
         ops.posit_div_fused(PositFormat(16), jnp.ones((4,)), jnp.ones((4,)),
-                            variant="nrd")
+                            variant="srt_r7_made_up")
+    # pattern-level API cannot hold wide patterns in uint32 words
+    with pytest.raises(ValueError, match="uint32"):
+        ops.posit_div(PositFormat(64), jnp.ones((4,), jnp.uint32),
+                      jnp.ones((4,), jnp.uint32))
 
 
 # --------------------------------------------------------------- backends
@@ -124,9 +129,19 @@ def test_fused_backend_ste_gradients():
 def test_config_validation_rejects_bad_backend():
     with pytest.raises(ValueError, match="div_backend"):
         NumericsConfig(posit_division=True, div_backend="warp").validate()
-    with pytest.raises(ValueError, match="fused"):
+    # the one planless fused combination: posit64 + operand scaling
+    with pytest.raises(ValueError, match="n <= 62"):
         NumericsConfig(posit_division=True, div_backend="fused",
-                       div_format="posit32",
+                       div_format="posit64",
                        div_algo="srt_r4_scaled").validate()
-    # emulate accepts every Table IV variant, including non-fused ones
+    # every Table IV row now has a fused plan for n <= 32 (posit32-scaled
+    # and nrd ride the W-word datapath); emulate accepts them all too
+    NumericsConfig(posit_division=True, div_backend="fused",
+                   div_format="posit32", div_algo="srt_r4_scaled").validate()
+    NumericsConfig(posit_division=True, div_backend="fused",
+                   div_algo="nrd").validate()
     NumericsConfig(posit_division=True, div_algo="nrd").validate()
+    # posit64 is division-only: storage/wire formats must fit uint32
+    with pytest.raises(ValueError, match="storage"):
+        NumericsConfig(posit_division=True,
+                       kv_cache_format="posit64").validate()

@@ -1,0 +1,278 @@
+"""Two-word residual datapath: posit64 + full-width srt_r4_scaled sweeps.
+
+The W-word kernel datapath must be bit-identical to the BitVec goldens in
+``core/divider.py`` / ``core/wide.py`` everywhere a plan exists:
+
+  * posit31/posit32 ``srt_r4_scaled`` (two-word residual, one-word pattern)
+    against :func:`repro.core.divider.posit_divide`,
+  * posit64 (two-word pattern/significand/residual) fused float path against
+    the wide BitVec emulate path, including NaR, zero, and f32 min/max edge
+    operands,
+  * ``nrd``/``srt_r2`` (non-redundant, non-OTF) parity across formats —
+    the n <= 32 fused sweeps in ``test_fused_div.py``/``test_rowwise_div.py``
+    pick these up automatically via ``ops.FUSED_DIV_VARIANTS``.
+
+A pure-Python exact-rational oracle (``core.goldens``) independently checks
+the fused posit64 float path end to end on a sample.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import divider, goldens, wide
+from repro.core.bitvec import bv_from_ints, bv_to_ints
+from repro.core.posit import PositFormat
+from repro.kernels import ops
+from repro.kernels.posit_div import kernel_datapath_plan, kernel_plan_error
+from repro.numerics import NumericsConfig, posit_div_values, posit_softmax
+from repro.numerics.posit_ops import posit_rmsnorm_div
+
+RNG = np.random.default_rng(23)
+
+P64 = PositFormat(64)
+
+CFG64_EMULATE = NumericsConfig(posit_division=True, div_format="posit64",
+                               div_backend="emulate")
+CFG64_FUSED = NumericsConfig(posit_division=True, div_format="posit64",
+                             div_backend="fused")
+
+# Representative posit64 variants covering every datapath feature axis:
+# radix 2/4, carry-save vs non-redundant residual, OTF vs plain quotient,
+# and the nonrestoring digit set.
+P64_VARIANTS = ("srt_r4_cs_of_fr", "srt_r2_cs_of_fr", "srt_r4_cs", "srt_r2",
+                "nrd")
+
+
+def _bits(x):
+    return np.asarray(x).view(np.uint32)
+
+
+def _edge_floats(shape):
+    """Mixed magnitudes + every operand edge the plan must survive: zeros,
+    NaR sources (inf/nan), f32 max/min normals, subnormals."""
+    a = (RNG.normal(0, 1, shape) * 10.0 ** RNG.uniform(-12, 12, shape))
+    a = a.astype(np.float32).reshape(-1)
+    edges = [0.0, -0.0, np.inf, -np.inf, np.nan, 3.4028235e38, -3.4028235e38,
+             1.1754944e-38, 1e-45, -1e-44, 1e30, -1e-30, 1.0, 2.0]
+    a[: len(edges)] = edges[: a.size]
+    return jnp.asarray(a.reshape(shape))
+
+
+# ------------------------------------------------------------- plan table
+
+
+def test_datapath_plan_widths():
+    assert kernel_datapath_plan(PositFormat(16), "srt_r4_cs_of_fr").words == 1
+    assert kernel_datapath_plan(PositFormat(30), "srt_r4_scaled").words == 1
+    assert kernel_datapath_plan(PositFormat(31), "srt_r4_scaled").words == 2
+    assert kernel_datapath_plan(PositFormat(32), "srt_r4_scaled").words == 2
+    assert kernel_datapath_plan(P64, "srt_r4_cs_of_fr").words == 2
+    assert kernel_datapath_plan(P64, "nrd").words == 2
+    assert kernel_datapath_plan(P64, "srt_r4_scaled") is None
+
+
+def test_plan_error_messages_derive_from_plan():
+    assert kernel_plan_error(PositFormat(32), "srt_r4_scaled") is None
+    err = kernel_plan_error(P64, "srt_r4_scaled")
+    assert "n <= 62" in err and "63" in err  # needed bits stated, not stale
+    assert kernel_plan_error(PositFormat(16), "no_such_row") is not None
+    # every Table IV row is planned for every registered n <= 32 format
+    for n in (8, 16, 32):
+        for v in divider.VARIANTS:
+            assert kernel_plan_error(PositFormat(n), v) is None, (n, v)
+
+
+# ------------------------------------- full-width srt_r4_scaled (2-word)
+
+
+@pytest.mark.parametrize("n", [31, 32])
+def test_scaled_two_word_vs_bitvec_golden(n):
+    """posit31/32 scaled: 2-word residual kernel == BitVec core divider."""
+    fmt = PositFormat(n)
+    cnt = 4096
+    px = RNG.integers(0, 1 << n, cnt, dtype=np.uint64).astype(np.uint32)
+    pd = RNG.integers(0, 1 << n, cnt, dtype=np.uint64).astype(np.uint32)
+    # edge patterns: zero, NaR, minpos, maxpos, -minpos, one
+    edges = [0, 1 << (n - 1), 1, (1 << (n - 1)) - 1, (1 << n) - 1,
+             1 << (n - 2)]
+    px[: len(edges)] = edges
+    pd[len(edges): 2 * len(edges)] = edges
+    k = np.asarray(ops.posit_div(fmt, jnp.asarray(px), jnp.asarray(pd),
+                                 variant="srt_r4_scaled"))
+    c = np.asarray(divider.posit_divide(fmt, jnp.asarray(px), jnp.asarray(pd),
+                                        "srt_r4_scaled"))
+    np.testing.assert_array_equal(k, c)
+
+
+@pytest.mark.parametrize("variant", ["nrd", "srt_r2", "srt_r2_cs",
+                                     "srt_r4_cs", "srt_r4_cs_of"])
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_new_variant_rows_vs_bitvec_golden(n, variant):
+    """The non-redundant / non-OTF Table IV rows folded into the kernel."""
+    fmt = PositFormat(n)
+    px = RNG.integers(0, 1 << n, 2048, dtype=np.uint64).astype(np.uint32)
+    pd = RNG.integers(0, 1 << n, 2048, dtype=np.uint64).astype(np.uint32)
+    k = np.asarray(ops.posit_div(fmt, jnp.asarray(px), jnp.asarray(pd),
+                                 variant=variant))
+    c = np.asarray(divider.posit_divide(fmt, jnp.asarray(px), jnp.asarray(pd),
+                                        variant))
+    np.testing.assert_array_equal(k, c)
+
+
+# --------------------------------------------------- posit64 fused path
+
+
+@pytest.mark.parametrize("variant", P64_VARIANTS)
+def test_posit64_fused_vs_bitvec_emulate(variant):
+    """Fused 2-word kernel == wide BitVec emulate, bitwise, incl. edges."""
+    a = _edge_floats((23, 29))
+    b = _edge_floats((23, 29))
+    ce = NumericsConfig(posit_division=True, div_format="posit64",
+                        div_algo=variant)
+    cf = NumericsConfig(posit_division=True, div_format="posit64",
+                        div_algo=variant, div_backend="fused").validate()
+    e = posit_div_values(a, b, ce)
+    f = posit_div_values(a, b, cf)
+    np.testing.assert_array_equal(_bits(e), _bits(f))
+
+
+def test_posit64_nar_zero_semantics():
+    """x/0 -> NaR(NaN), NaR/x -> NaR, 0/x -> 0 on the fused path."""
+    a = jnp.asarray([1.0, np.nan, 0.0, np.inf, 0.0], jnp.float32)
+    b = jnp.asarray([0.0, 2.0, 3.0, 2.0, 0.0], jnp.float32)
+    out = np.asarray(ops.posit_div_fused(P64, a, b))
+    assert np.isnan(out[[0, 1, 3, 4]]).all()
+    assert out[2] == 0.0
+
+
+def test_posit64_fused_vs_python_golden():
+    """End-to-end f32 oracle: quantize/div/round entirely in exact Python
+    rationals (``core.goldens``), independent of every JAX datapath."""
+    vals = np.concatenate([
+        np.asarray([1.0, -2.0, 3.0, 0.5, 1e30, 1e-30, 3.4e38, 1.18e-38],
+                   np.float32),
+        (RNG.normal(0, 1, 56) * 10.0 ** RNG.uniform(-30, 30, 56)
+         ).astype(np.float32)])
+    a, b = vals[: 32], vals[32:]
+    got = np.asarray(ops.posit_div_fused(P64, jnp.asarray(a), jnp.asarray(b)))
+    for i in range(a.size):
+        q = goldens.div(goldens.from_float(float(a[i]), 64),
+                        goldens.from_float(float(b[i]), 64), 64)
+        d = goldens.decode(q, 64)
+        assert d[0] == "num", (a[i], b[i])
+        _, s, T, sig = d
+        # exact RNE of sig * 2^(T - 59) to 24 bits (normal f32 range only)
+        m24 = sig >> 36
+        g, st = (sig >> 35) & 1, (sig & ((1 << 35) - 1)) != 0
+        m24 += g & (int(st) | (m24 & 1))
+        with np.errstate(over="ignore"):
+            want = np.float32(
+                (-1.0 if s else 1.0) * float(m24) * 2.0 ** (T - 23))
+        if np.isfinite(want) and abs(want) >= 1.1754944e-38:
+            assert got[i] == want, (i, a[i], b[i], got[i], want)
+
+
+def test_posit64_numerics_backends_and_shapes():
+    x = jnp.asarray(RNG.normal(0, 3, (8, 33)).astype(np.float32))
+    # softmax: the f32 row SUM may associate differently between the padded
+    # in-kernel reduction and the emulate path's unpadded jnp.sum; posit64
+    # keeps all 24 f32 mantissa bits, so that 1-ulp wobble is visible here
+    # (n <= 32 formats absorb it in quantization).  The division stage
+    # itself is bit-exact — covered by the sweeps above and the reductions-
+    # free ops below, which must match bitwise.
+    np.testing.assert_allclose(
+        np.asarray(posit_softmax(x, CFG64_EMULATE)),
+        np.asarray(posit_softmax(x, CFG64_FUSED)), rtol=3e-7, atol=0)
+    rms = jnp.sqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6)
+    np.testing.assert_array_equal(
+        _bits(posit_rmsnorm_div(x, rms, CFG64_EMULATE)),
+        _bits(posit_rmsnorm_div(x, rms, CFG64_FUSED)))
+
+
+def test_posit64_ste_gradients():
+    a = jnp.asarray(RNG.uniform(0.5, 2, 32).astype(np.float32))
+    b = jnp.asarray(RNG.uniform(0.5, 2, 32).astype(np.float32))
+    ga = jax.grad(lambda a: posit_div_values(a, b, CFG64_FUSED).sum())(a)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(1 / b), rtol=1e-5)
+
+
+# --------------------------------------------------------- wide f32 casts
+
+
+def test_wide_quantize_matches_python_golden():
+    xs = np.concatenate([
+        np.asarray([0.0, -0.0, np.inf, -np.inf, np.nan, 3.4028235e38,
+                    1e-45, -1e-44, 1.1754944e-38, 1.0], np.float32),
+        (RNG.normal(0, 1, 200) * 10.0 ** RNG.uniform(-44, 38, 200)
+         ).astype(np.float32)])
+    pat = bv_to_ints(wide.float_to_posit_wide(P64, jnp.asarray(xs))).reshape(-1)
+    for i, v in enumerate(xs):
+        assert int(pat[i]) == goldens.from_float(float(v), 64), (i, v)
+
+
+def test_wide_float_roundtrip_exact_in_normal_range():
+    """Every normal f32 is exactly representable in posit64: the roundtrip
+    f32 -> posit64 -> f32 must be the identity (NaR for inf/nan)."""
+    xs = np.concatenate([
+        np.asarray([0.0, -0.0, 3.4028235e38, -3.4028235e38, 1.1754944e-38,
+                    1.0, -1.0], np.float32),
+        (RNG.normal(0, 1, 300) * 10.0 ** RNG.uniform(-38, 38, 300)
+         ).astype(np.float32)])
+    xs = xs[np.isfinite(xs) & ((np.abs(xs) >= 1.1754944e-38) | (xs == 0))]
+    back = np.asarray(wide.posit_wide_to_float(
+        P64, wide.float_to_posit_wide(P64, jnp.asarray(xs))))
+    np.testing.assert_array_equal(
+        back.view(np.uint32),
+        np.where(xs == 0, np.float32(0), xs).view(np.uint32))
+
+
+def test_subnormal_operands_quantize_to_minpos_everywhere():
+    """f32 subnormals are nonzero reals: no format may quantize them to 0 —
+    regression for the in-kernel flush (bit test rewritten to a float
+    compare when the kernel body compiles as one XLA computation)."""
+    x = jnp.asarray([1e-45, -1e-44, 1e-40], jnp.float32)
+    for n in (8, 16, 32):
+        fmt = PositFormat(n)
+        q = np.asarray(ops.posit_quantize(fmt, x))
+        assert (q != 0).all(), n
+        assert q[0] == 1 and q[1] == fmt.mask  # +/- minpos
+    wide_pat = bv_to_ints(wide.float_to_posit_wide(P64, x)).reshape(-1)
+    assert all(int(p) != 0 for p in wide_pat)
+
+
+def test_posit32_minpos_dequantize_not_flushed():
+    """Regression: ldexp's single 2^e factor went subnormal and FTZ'd the
+    result to 0 although e.g. posit32 pattern 7 is ~1.5e-33 (normal f32)."""
+    for n, pats in ((32, [1, 2, 7, 100]), (16, [1, 2])):
+        fmt = PositFormat(n)
+        got = np.asarray(ops.posit_dequantize(fmt, jnp.asarray(pats,
+                                                               jnp.uint32)))
+        want = [goldens.to_float(p, n) for p in pats]
+        np.testing.assert_array_equal(got, np.asarray(want, np.float32))
+
+
+# ------------------------------------------------------- wide emulate oracle
+
+
+def test_posit64_emulate_path_matches_pattern_divider():
+    """The float-level emulate path == dividing the quantized patterns."""
+    a = _edge_floats((64,))
+    b = _edge_floats((64,))
+    out = np.asarray(posit_div_values(a, b, CFG64_EMULATE))
+    pa = wide.float_to_posit_wide(P64, a)
+    pb = wide.float_to_posit_wide(P64, b)
+    q = wide.posit_divide_wide(P64, pa, pb, "srt_r4_cs_of_fr")
+    want = np.asarray(wide.posit_wide_to_float(P64, q))
+    np.testing.assert_array_equal(out.view(np.uint32), want.view(np.uint32))
+
+
+def test_posit64_pattern_divider_vs_python_golden_spotcheck():
+    pats_x = [int(RNG.integers(0, 1 << 63)) for _ in range(64)]
+    pats_d = [int(RNG.integers(0, 1 << 63)) | (1 << 63) for _ in range(64)]
+    out = bv_to_ints(wide.posit_divide_wide(
+        P64, bv_from_ints(np.array(pats_x, dtype=object), 64),
+        bv_from_ints(np.array(pats_d, dtype=object), 64), "srt_r4_cs_of_fr"))
+    for i in range(len(pats_x)):
+        assert int(out.reshape(-1)[i]) == goldens.div(pats_x[i], pats_d[i], 64)

@@ -100,8 +100,9 @@ def test_rowwise_rejects_bad_shapes_and_variants():
     fmt = PositFormat(16)
     with pytest.raises(ValueError, match="rowwise"):
         ops.posit_div_fused_rowwise(fmt, jnp.ones((4, 8)), jnp.ones((4, 8)))
+    # posit64 + operand scaling is the one planless combination
     with pytest.raises(ValueError, match="fused"):
-        ops.posit_div_fused_rowwise(PositFormat(32), jnp.ones((4, 8)),
+        ops.posit_div_fused_rowwise(PositFormat(64), jnp.ones((4, 8)),
                                     jnp.ones((4, 1)),
                                     variant="srt_r4_scaled")
 
