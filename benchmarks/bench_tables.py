@@ -480,3 +480,67 @@ def posit64_throughput_rows():
         rows.append((f"throughput/posit64/{v}", us,
                      f"{cnt / us:.2f} Mdiv/s it={VARIANTS[v].iterations(fmt)}"))
     return rows
+
+
+def flash_bwd_rows():
+    """Flash-attention backward: fused recompute kernels vs the float
+    reference, plus fwd+bwd train-step numbers under attn_backend='fused'.
+
+    The fused backward saves O(B*H*Sq) (m, l) residuals and recomputes
+    score tiles blockwise with the p = exp(s - m) / l renormalization on
+    the in-kernel posit SRT datapath; the reference backward materializes
+    the (Sq, Sk) score tensor.  ``grads_match`` gates the job: run.py
+    exits nonzero when a derived string carries ``match``+``False``, so a
+    fused-vs-reference gradient divergence fails CI.  Timed in interpret
+    mode on CPU hosts (the memory-footprint reduction is what the section
+    certifies; compiled-TPU numbers are a ROADMAP item).
+    """
+    import jax as _jax
+
+    from repro.configs import get_config
+    from repro.data import DataConfig, SyntheticLMDataset
+    from repro.kernels.posit_flash_attn import posit_flash_attention_ste
+    from repro.train import TrainConfig
+    from repro.train.trainer import init_train_state, make_train_step
+
+    rows = []
+    rng = np.random.default_rng(0)
+    B, S, H, KV, hd = 2, 64, 4, 2, 32
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (B, S, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (B, S, KV, hd)).astype(np.float32))
+    co = jnp.asarray(rng.normal(0, 1, q.shape).astype(np.float32))
+
+    def grad_fn(bwd_impl):
+        def loss(q, k, v):
+            out = posit_flash_attention_ste(16, "srt_r4_cs_of_fr", True, 0,
+                                            0, 0.0, q, k, v, bwd_impl)
+            return (out * co).sum()
+        return _jax.jit(_jax.grad(loss, argnums=(0, 1, 2)))
+
+    gf, gr = grad_fn("fused"), grad_fn("reference")
+    us_f = _time_call(lambda q, k, v: gf(q, k, v)[0], q, k, v, reps=3)
+    us_r = _time_call(lambda q, k, v: gr(q, k, v)[0], q, k, v, reps=3)
+    diff = max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(gf(q, k, v), gr(q, k, v)))
+    rows.append((
+        "flash_bwd/grad_kernels", us_f,
+        f"reference_us={us_r:.1f} shape=({B},{S},{H},{hd}) "
+        f"maxdiff={diff:.2e} grads_match={diff < 5e-3} "
+        f"residual_mem=O(B*H*Sq) vs O(Sq*Sk)"))
+
+    # fwd+bwd train step on the smoke model, fused backward vs reference
+    base = get_config("smollm-360m", smoke=True, fused=True)
+    tc = TrainConfig(steps=1, microbatches=1, lr=1e-3, warmup=1)
+    for name, cfg in (("fused_bwd", base),
+                      ("reference_bwd", base.replace(attn_bwd="reference"))):
+        ds = SyntheticLMDataset(DataConfig(2, 32), cfg)
+        batch = {kk: jnp.asarray(vv) for kk, vv in ds.batch_at(0).items()}
+        state = init_train_state(cfg, tc, _jax.random.PRNGKey(0))
+        step = _jax.jit(make_train_step(cfg, tc))
+        us = _time_call(lambda s, b: step(s, b)[1]["loss"], state, batch,
+                        reps=2)
+        rows.append((f"flash_bwd/train_step_{name}", us,
+                     f"smoke_model batch=2x32 attn_backend=fused "
+                     f"attn_bwd={cfg.attn_bwd}"))
+    return rows

@@ -30,12 +30,25 @@ ALIASES = {
 }
 
 
-def get_config(name: str, smoke: bool = False):
+def get_config(name: str, smoke: bool = False, fused: bool = False):
+    """Resolve an arch config.  ``fused=True`` switches the config onto the
+    fused posit numerics stack: posit division through the Pallas SRT
+    kernels AND attention through the fused flash kernel (forward + the
+    recompute backward) — the launch entry points expose it as
+    ``--attn-backend fused``."""
     mod_name = ALIASES.get(name, name)
     if mod_name not in ARCH_IDS:
         raise KeyError(f"unknown arch {name!r}; have {sorted(ALIASES)}")
     mod = import_module(f"repro.configs.{mod_name}")
-    return mod.SMOKE if smoke else mod.CONFIG
+    cfg = mod.SMOKE if smoke else mod.CONFIG
+    if fused:
+        from repro.numerics.formats import NumericsConfig
+
+        cfg = cfg.replace(
+            attn_backend="fused",
+            numerics=NumericsConfig(posit_division=True,
+                                    div_backend="fused"))
+    return cfg
 
 
 def all_configs(smoke: bool = False):

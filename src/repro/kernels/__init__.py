@@ -7,7 +7,9 @@
                            (elementwise, rowwise-broadcast, and fused
                            softmax flavors)
   * ``posit_flash_attn`` — flash attention with the in-kernel posit SRT
-                           normalizer (online softmax, kv-scan)
+                           normalizer (online softmax, kv-scan), forward
+                           AND recompute-style fused backward (dq + dk/dv
+                           kernels over O(B*H*Sq) row residuals)
   * ``ops``              — shape-polymorphic jit'd wrappers (public API)
 """
 

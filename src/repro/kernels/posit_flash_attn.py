@@ -1,11 +1,12 @@
-"""Pallas TPU kernel: flash attention with a posit SRT-divided normalizer.
+"""Pallas TPU kernels: flash attention with a posit SRT-divided normalizer,
+forward AND backward.
 
-One ``pallas_call`` per attention: each grid step owns one (batch*head,
-q-tile) pair and scans the KV sequence in chunks with the online-softmax
-running statistics ``(m, l, acc)`` carried in-register — the standard flash
-pattern, so no ``(Sq, Sk)`` score tensor and no broadcast denominator ever
-materialize in HBM.  The final ``o = acc / l`` normalizer runs through the
-in-kernel digit-recurrence datapath
+Forward: one ``pallas_call`` per attention — each grid step owns one
+(batch*head, q-tile) pair and scans the KV sequence in chunks with the
+online-softmax running statistics ``(m, l, acc)`` carried in-register — the
+standard flash pattern, so no ``(Sq, Sk)`` score tensor and no broadcast
+denominator ever materialize in HBM.  The final ``o = acc / l`` normalizer
+runs through the in-kernel digit-recurrence datapath
 (:func:`repro.kernels.posit_div.divide_floats_block`, so any planned format
 including posit64 works) as a rowwise posit division: ``l`` is
 quantized/decoded once per query row (a ``(bq, 1)`` column), exactly like
@@ -14,14 +15,43 @@ the format's minpos instead (see :func:`_minpos_eps`) and come out 0.
 
 GQA is handled by the BlockSpec index map: the KV block index is derived
 from the query-head index (``h // G``), so grouped K/V are never repeated
-in memory.
+in memory.  ``kv_start`` optionally masks a per-sequence pad PREFIX
+(``k_pos < kv_start[b]`` is masked) — the serving engine's chunked ragged
+prefill uses this so left-padded short prompts never attend pad positions.
 
-Gradients: the kernel is forward-only; :func:`posit_flash_attention_ste`
-wraps it in a ``custom_vjp`` whose backward pass differentiates a plain
-float attention reference (straight-through the posit quantization, the
-same STE convention as the rest of the numerics layer).  The reference
-materializes the score tensor, which is fine at this repo's validation
-scale; a fused backward kernel is future work.
+Backward (recompute style, the flash-attention backward): the forward
+additionally saves per-row residuals ``(m, l)`` — the online-softmax row
+max and row sum, i.e. the logsumexp in factored form ``lse = m + log l`` —
+at O(B*H*Sq) memory, never O(Sq*Sk).  Two kernels then recompute score
+tiles blockwise:
+
+  * ``dq`` kernel — grid over (batch*head, q-tile), scans KV tiles:
+    ``s = q k^T``, ``p = (exp(s - m)) / l``, ``dp = dO v^T``,
+    ``ds = p * (dp - D)``, ``dq += ds k``.
+  * ``dk/dv`` kernel — grid over (batch*kv-head, kv-tile), scans the G
+    grouped query heads and q-tiles: ``dv += p^T dO``,
+    ``dk += ds^T q``.  GQA falls out of the layout: the G query heads of
+    kv-head b are rows [b*G, (b+1)*G) of the (B*H, ...) arrays, so one
+    leading-axis BlockSpec of size G covers them with no repeat in memory.
+
+Division routing: the ``p = exp(s - m) / l`` renormalization in BOTH
+backward kernels runs through :func:`divide_floats_block` with ``l`` as a
+``(bq, 1)`` per-row divisor (the rowwise W-word ``DatapathPlan`` path, so
+every Table IV variant including posit64 two-word works in the backward
+too).  The ``D = rowsum(dO ∘ o)`` correction is computed from the saved
+``o`` — whose ``acc / l`` division already ran on the in-kernel SRT
+datapath in the forward — with one O(B*H*Sq*hd) elementwise reduce, no
+(Sq, Sk) tensor.
+
+Gradients: :func:`posit_flash_attention_ste` wraps the kernels in a
+``custom_vjp`` (straight-through the posit quantization, the same STE
+convention as the rest of the numerics layer).  ``bwd_impl`` selects the
+backward: ``"fused"`` (default) runs the recompute kernels above;
+``"reference"`` differentiates a plain float attention reference that
+materializes the score tensor — kept for A/B validation only.  Fused vs
+reference gradients agree to ~5e-3 abs (posit16; the backward's per-tile p
+quantization is ~2^-10 relative) and ~1e-5 abs (posit32/posit64) on the
+test sweeps in ``tests/test_flash_attn_kernel.py``.
 """
 
 from __future__ import annotations
@@ -39,6 +69,7 @@ from .ops import _on_tpu, _round_up
 from .posit_div import DEFAULT_KERNEL_VARIANT, divide_floats_block
 
 _NEG_INF = -1e30  # matches the jnp flash path's mask fill
+_RES_LANES = 128  # lane width of the row-residual (m, l) kernel outputs
 
 
 def _minpos_eps(fmt: PositFormat) -> float:
@@ -54,10 +85,12 @@ def _minpos_eps(fmt: PositFormat) -> float:
     return float(2.0 ** -min(fmt.max_scale, 126))
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, fmt: PositFormat,
+def _flash_kernel(q_ref, k_ref, v_ref, ks_ref, *out_refs, fmt: PositFormat,
                   variant: str, causal: bool, window: int, q_offset: int,
-                  scale: float, bq: int, bk: int, nk: int, sk_valid: int):
+                  scale: float, bq: int, bk: int, nk: int, sk_valid: int,
+                  save_res: bool):
     q = q_ref[0]                                    # (bq, hdp) f32
+    kv_start = ks_ref[0, 0]                         # scalar int32
     iq = pl.program_id(1)
     q_pos = q_offset + iq * bq + jax.lax.broadcasted_iota(
         jnp.int32, (bq, 1), 0)
@@ -74,7 +107,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, fmt: PositFormat,
             q, kj, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale     # (bq, bk)
         k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
-        mask = k_pos < sk_valid
+        mask = (k_pos < sk_valid) & (k_pos >= kv_start)
         if causal:
             mask &= q_pos >= k_pos
         if window:
@@ -96,7 +129,91 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, fmt: PositFormat,
     # Fully-masked rows have l == 0 and acc == 0: substitute the format's
     # minpos so they normalize to 0 instead of 0/0 -> NaR.
     l_safe = jnp.where(l > 0, l, _minpos_eps(fmt))
-    o_ref[0] = divide_floats_block(fmt, acc, l_safe, variant)
+    out_refs[0][0] = divide_floats_block(fmt, acc, l_safe, variant)
+    if save_res:
+        # Row residuals for the recompute backward, broadcast across the
+        # lane axis (TPU-tileable): lse = m + log(l) in factored (m, l)
+        # form, so the backward can re-run exp(s - m) / l as a posit
+        # rowwise division instead of a float exp(s - lse).
+        out_refs[1][0] = jnp.broadcast_to(m, (bq, _RES_LANES))
+        out_refs[2][0] = jnp.broadcast_to(l, (bq, _RES_LANES))
+
+
+def _tile_params(Sq, Sk, hd, block_q, block_k):
+    """Static tile geometry shared by the forward and backward kernels."""
+    bq = min(block_q, _round_up(Sq, 8))
+    bk = min(block_k, _round_up(Sk, 8))
+    return bq, bk, _round_up(Sq, bq), _round_up(Sk, bk), _round_up(hd, 128)
+
+
+def _to_kernel_layout(x, Sp, hdp):
+    """Transpose/pad one (B, S, nh, hd) tensor into the (B*nh, Sp, hdp)
+    kernel layout."""
+    B, S, nh, hd = x.shape
+    xf = jnp.transpose(x.astype(jnp.float32), (0, 2, 1, 3)).reshape(
+        B * nh, S, hd)
+    return jnp.pad(xf, ((0, 0), (0, Sp - S), (0, hdp - hd)))
+
+
+def _flash_call(fmt, q, k, v, causal, window, q_offset, scale, variant,
+                interpret, block_q, block_k, vmem_limit_bytes, save_res,
+                kv_start):
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    assert k.shape == v.shape and H % KV == 0, (q.shape, k.shape)
+    G = H // KV
+    if scale <= 0.0:
+        scale = 1.0 / math.sqrt(hd)
+
+    bq, bk, Sqp, Skp, hdp = _tile_params(Sq, Sk, hd, block_q, block_k)
+    qf = _to_kernel_layout(q, Sqp, hdp)
+    kf = _to_kernel_layout(k, Skp, hdp)
+    vf = _to_kernel_layout(v, Skp, hdp)
+    nk = Skp // bk
+
+    if kv_start is None:
+        ksf = jnp.zeros((B * H, 1), jnp.int32)
+    else:
+        ksf = jnp.repeat(kv_start.astype(jnp.int32), H).reshape(B * H, 1)
+
+    kernel = functools.partial(
+        _flash_kernel, fmt=fmt, variant=variant, causal=causal,
+        window=window, q_offset=q_offset, scale=scale, bq=bq, bk=bk,
+        nk=nk, sk_valid=Sk, save_res=save_res)
+    out_shape = [jax.ShapeDtypeStruct((B * H, Sqp, hdp), jnp.float32)]
+    out_specs = [pl.BlockSpec((1, bq, hdp), lambda b, i: (b, i, 0))]
+    if save_res:
+        out_shape += 2 * [jax.ShapeDtypeStruct((B * H, Sqp, _RES_LANES),
+                                               jnp.float32)]
+        out_specs += 2 * [pl.BlockSpec((1, bq, _RES_LANES),
+                                       lambda b, i: (b, i, 0))]
+    outs = pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        grid=(B * H, Sqp // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hdp), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Skp, hdp),
+                         lambda b, i: (b // H * KV + (b % H) // G, 0, 0)),
+            pl.BlockSpec((1, Skp, hdp),
+                         lambda b, i: (b // H * KV + (b % H) // G, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
+        ],
+        out_specs=out_specs,
+        compiler_params=pltpu.TPUCompilerParams(
+            vmem_limit_bytes=vmem_limit_bytes),
+        interpret=interpret,
+    )(qf, kf, vf, ksf)
+
+    out = outs[0][:, :Sq, :hd].reshape(B, H, Sq, hd)
+    out = jnp.transpose(out, (0, 2, 1, 3))
+    if not save_res:
+        return out
+    # (B*H, Sqp) row residuals, kept PADDED so the backward kernels can
+    # consume them with the same (block_q-derived) tiling.
+    return out, outs[1][:, :, 0], outs[2][:, :, 0]
 
 
 @functools.partial(jax.jit,
@@ -115,6 +232,7 @@ def posit_flash_attention(
     block_q: int = 128,
     block_k: int = 128,
     vmem_limit_bytes: int = 128 * 1024 * 1024,
+    kv_start=None,
 ):
     """Flash attention with the posit SRT normalizer, one kernel launch.
 
@@ -122,61 +240,251 @@ def posit_flash_attention(
     (GQA via the index map — no repeated KV in memory).  All compute f32.
     ``scale`` <= 0 means the default 1/sqrt(hd); ``interpret=None``
     auto-selects (interpret off TPU, compiled on TPU) like the other
-    kernel wrappers.
+    kernel wrappers.  ``kv_start`` is an optional (B,) int32 array of
+    per-sequence pad-prefix lengths: key positions < kv_start[b] are
+    masked (ragged left-padded serving prefill).
+    """
+    return _flash_call(fmt, q, k, v, causal, window, q_offset, scale,
+                       variant, interpret, block_q, block_k,
+                       vmem_limit_bytes, False, kv_start)
+
+
+@functools.partial(jax.jit,
+                   static_argnums=(0,) + tuple(range(4, 13)))
+def posit_flash_attention_fwd(
+    fmt: PositFormat,
+    q,
+    k,
+    v,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    scale: float = 0.0,
+    variant: str = DEFAULT_KERNEL_VARIANT,
+    interpret: bool = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    vmem_limit_bytes: int = 128 * 1024 * 1024,
+):
+    """Forward pass that also returns the recompute-backward residuals.
+
+    Returns ``(o, m, l)``: the attention output plus the per-row online-
+    softmax max and sum in the (B*H, Sq_padded) kernel layout — O(B*H*Sq)
+    memory, the factored form of the row logsumexp ``lse = m + log l``.
+    """
+    return _flash_call(fmt, q, k, v, causal, window, q_offset, scale,
+                       variant, interpret, block_q, block_k,
+                       vmem_limit_bytes, True, None)
+
+
+# =====================================================================
+# fused recompute backward
+# =====================================================================
+
+
+def _bwd_tile(fmt, variant, q, go, kj, vj, mrow, l_safe, drow, mask, scale):
+    """Shared per-tile backward math: returns (p, ds) for one score tile.
+
+    ``p = exp(s - m) / l`` runs through the in-kernel SRT datapath as a
+    rowwise posit division (``l`` is a (bq, 1) column); masked entries are
+    exact zeros on both sides of the divide (0 / l == 0 in posit).
+    """
+    s = jax.lax.dot_general(
+        q, kj, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale          # (bq, bk)
+    e = jnp.where(mask, jnp.exp(s - mrow), 0.0)
+    p = divide_floats_block(fmt, e, l_safe, variant)
+    dp = jax.lax.dot_general(
+        go, vj, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (bq, bk)
+    ds = p * (dp - drow)
+    return p, ds
+
+
+def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, g_ref, m_ref, l_ref, d_ref,
+                         dq_ref, *, fmt: PositFormat, variant: str,
+                         causal: bool, window: int, q_offset: int,
+                         scale: float, bq: int, bk: int, nk: int,
+                         sk_valid: int):
+    q = q_ref[0]                                    # (bq, hdp)
+    go = g_ref[0]
+    mrow = m_ref[0][:, :1]                          # (bq, 1)
+    lrow = l_ref[0][:, :1]
+    drow = d_ref[0][:, :1]
+    l_safe = jnp.where(lrow > 0, lrow, _minpos_eps(fmt))
+    iq = pl.program_id(1)
+    q_pos = q_offset + iq * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, 1), 0)
+
+    def kv_step(j, dq):
+        kj = k_ref[0, pl.ds(j * bk, bk), :]
+        vj = v_ref[0, pl.ds(j * bk, bk), :]
+        k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = k_pos < sk_valid
+        if causal:
+            mask &= q_pos >= k_pos
+        if window:
+            mask &= q_pos - k_pos < window
+        _, ds = _bwd_tile(fmt, variant, q, go, kj, vj, mrow, l_safe, drow,
+                          mask, scale)
+        return dq + jax.lax.dot_general(
+            ds, kj, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    dq = jax.lax.fori_loop(0, nk, kv_step, jnp.zeros_like(q))
+    dq_ref[0] = dq * scale
+
+
+def _flash_bwd_dkv_kernel(q_ref, g_ref, m_ref, l_ref, d_ref, k_ref, v_ref,
+                          dk_ref, dv_ref, *, fmt: PositFormat, variant: str,
+                          causal: bool, window: int, q_offset: int,
+                          scale: float, bq: int, bk: int, nq: int, G: int,
+                          sk_valid: int):
+    kj = k_ref[0]                                   # (bk, hdp)
+    vj = v_ref[0]
+    jk = pl.program_id(1)
+    k_pos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    k_mask = k_pos < sk_valid
+
+    def q_step(t, carry):
+        dk, dv = carry
+        g, i = t // nq, t % nq
+        q = pl.load(q_ref, (pl.ds(g, 1), pl.ds(i * bq, bq),
+                            slice(None)))[0]        # (bq, hdp)
+        go = pl.load(g_ref, (pl.ds(g, 1), pl.ds(i * bq, bq),
+                             slice(None)))[0]
+        mrow = pl.load(m_ref, (pl.ds(g, 1), pl.ds(i * bq, bq),
+                               pl.ds(0, 1)))[0]     # (bq, 1)
+        lrow = pl.load(l_ref, (pl.ds(g, 1), pl.ds(i * bq, bq),
+                               pl.ds(0, 1)))[0]
+        drow = pl.load(d_ref, (pl.ds(g, 1), pl.ds(i * bq, bq),
+                               pl.ds(0, 1)))[0]
+        l_safe = jnp.where(lrow > 0, lrow, _minpos_eps(fmt))
+        q_pos = q_offset + i * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, 1), 0)
+        mask = k_mask
+        if causal:
+            mask &= q_pos >= k_pos
+        if window:
+            mask &= q_pos - k_pos < window
+        p, ds = _bwd_tile(fmt, variant, q, go, kj, vj, mrow, l_safe, drow,
+                          mask, scale)
+        dv_new = dv + jax.lax.dot_general(
+            p, go, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)     # (bk, hdp)
+        dk_new = dk + jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return dk_new, dv_new
+
+    z = jnp.zeros_like(kj)
+    dk, dv = jax.lax.fori_loop(0, G * nq, q_step, (z, z))
+    dk_ref[0] = dk * scale
+    dv_ref[0] = dv
+
+
+@functools.partial(jax.jit, static_argnums=(0,) + tuple(range(8, 17)))
+def _flash_backward(fmt: PositFormat, q, k, v, o, g, m, l,
+                    causal: bool, window: int, q_offset: int, scale: float,
+                    variant: str, interpret: bool = None,
+                    block_q: int = 128, block_k: int = 128,
+                    vmem_limit_bytes: int = 128 * 1024 * 1024):
+    """Recompute-style fused backward: (dq, dk, dv) from the saved row
+    residuals, with no (Sq, Sk) intermediate anywhere.
+
+    ``m``/``l`` are the (B*H, Sq_padded) residuals from
+    :func:`posit_flash_attention_fwd` (same ``block_q`` so the padding
+    agrees); ``o``/``g`` are the forward output and its cotangent in the
+    user (B, Sq, H, hd) layout.
     """
     if interpret is None:
         interpret = not _on_tpu()
     B, Sq, H, hd = q.shape
     _, Sk, KV, _ = k.shape
-    assert k.shape == v.shape and H % KV == 0, (q.shape, k.shape)
     G = H // KV
     if scale <= 0.0:
         scale = 1.0 / math.sqrt(hd)
 
-    bq = min(block_q, _round_up(Sq, 8))
-    bk = min(block_k, _round_up(Sk, 8))
-    Sqp, Skp = _round_up(Sq, bq), _round_up(Sk, bk)
-    hdp = _round_up(hd, 128)
-    nk = Skp // bk
+    bq, bk, Sqp, Skp, hdp = _tile_params(Sq, Sk, hd, block_q, block_k)
+    qf = _to_kernel_layout(q, Sqp, hdp)
+    kf = _to_kernel_layout(k, Skp, hdp)
+    vf = _to_kernel_layout(v, Skp, hdp)
+    gf = _to_kernel_layout(g, Sqp, hdp)
+    nq, nk = Sqp // bq, Skp // bk
+    assert m.shape == (B * H, Sqp), (m.shape, (B * H, Sqp))
 
-    qf = jnp.transpose(q.astype(jnp.float32), (0, 2, 1, 3)).reshape(
-        B * H, Sq, hd)
-    kf = jnp.transpose(k.astype(jnp.float32), (0, 2, 1, 3)).reshape(
-        B * KV, Sk, hd)
-    vf = jnp.transpose(v.astype(jnp.float32), (0, 2, 1, 3)).reshape(
-        B * KV, Sk, hd)
-    qf = jnp.pad(qf, ((0, 0), (0, Sqp - Sq), (0, hdp - hd)))
-    kf = jnp.pad(kf, ((0, 0), (0, Skp - Sk), (0, hdp - hd)))
-    vf = jnp.pad(vf, ((0, 0), (0, Skp - Sk), (0, hdp - hd)))
+    # D = rowsum(dO ∘ o): the o here is the posit forward output, whose
+    # acc/l division already ran on the in-kernel SRT datapath.  One
+    # O(B*H*Sq*hd) reduce — never a score tensor.
+    D = jnp.sum(g.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    D = jnp.pad(jnp.transpose(D, (0, 2, 1)).reshape(B * H, Sq),
+                ((0, 0), (0, Sqp - Sq)))
 
-    kernel = functools.partial(
-        _flash_kernel, fmt=fmt, variant=variant, causal=causal,
-        window=window, q_offset=q_offset, scale=scale, bq=bq, bk=bk,
-        nk=nk, sk_valid=Sk)
-    out = pl.pallas_call(
-        kernel,
+    def rows(x):  # (B*H, Sqp) -> lane-broadcast (B*H, Sqp, _RES_LANES)
+        return jnp.broadcast_to(x[:, :, None], (B * H, Sqp, _RES_LANES))
+
+    mb, lb, Db = rows(m), rows(l), rows(D)
+    params = pltpu.TPUCompilerParams(vmem_limit_bytes=vmem_limit_bytes)
+    kv_map = lambda b, i: (b // H * KV + (b % H) // G, 0, 0)  # noqa: E731
+    row_spec = pl.BlockSpec((1, bq, _RES_LANES), lambda b, i: (b, i, 0))
+
+    dqf = pl.pallas_call(
+        functools.partial(
+            _flash_bwd_dq_kernel, fmt=fmt, variant=variant, causal=causal,
+            window=window, q_offset=q_offset, scale=scale, bq=bq, bk=bk,
+            nk=nk, sk_valid=Sk),
         out_shape=jax.ShapeDtypeStruct((B * H, Sqp, hdp), jnp.float32),
-        grid=(B * H, Sqp // bq),
+        grid=(B * H, nq),
         in_specs=[
             pl.BlockSpec((1, bq, hdp), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, Skp, hdp),
-                         lambda b, i: (b // H * KV + (b % H) // G, 0, 0)),
-            pl.BlockSpec((1, Skp, hdp),
-                         lambda b, i: (b // H * KV + (b % H) // G, 0, 0)),
+            pl.BlockSpec((1, Skp, hdp), kv_map),
+            pl.BlockSpec((1, Skp, hdp), kv_map),
+            pl.BlockSpec((1, bq, hdp), lambda b, i: (b, i, 0)),
+            row_spec, row_spec, row_spec,
         ],
         out_specs=pl.BlockSpec((1, bq, hdp), lambda b, i: (b, i, 0)),
-        compiler_params=pltpu.TPUCompilerParams(
-            vmem_limit_bytes=vmem_limit_bytes),
+        compiler_params=params,
         interpret=interpret,
-    )(qf, kf, vf)
+    )(qf, kf, vf, gf, mb, lb, Db)
 
-    out = out[:, :Sq, :hd].reshape(B, H, Sq, hd)
-    return jnp.transpose(out, (0, 2, 1, 3))
+    # The G query heads of kv-head b are rows [b*G, (b+1)*G) of the
+    # (B*H, ...) arrays (h = kv*G + g), so a leading-axis block of size G
+    # at block index b covers exactly them.
+    g_spec = pl.BlockSpec((G, Sqp, hdp), lambda b, j: (b, 0, 0))
+    g_rows = pl.BlockSpec((G, Sqp, _RES_LANES), lambda b, j: (b, 0, 0))
+    kv_spec = pl.BlockSpec((1, bk, hdp), lambda b, j: (b, j, 0))
+    dkf, dvf = pl.pallas_call(
+        functools.partial(
+            _flash_bwd_dkv_kernel, fmt=fmt, variant=variant, causal=causal,
+            window=window, q_offset=q_offset, scale=scale, bq=bq, bk=bk,
+            nq=nq, G=G, sk_valid=Sk),
+        out_shape=2 * [jax.ShapeDtypeStruct((B * KV, Skp, hdp),
+                                            jnp.float32)],
+        grid=(B * KV, nk),
+        in_specs=[g_spec, g_spec, g_rows, g_rows, g_rows, kv_spec, kv_spec],
+        out_specs=[kv_spec, kv_spec],
+        compiler_params=params,
+        interpret=interpret,
+    )(qf, gf, mb, lb, Db, kf, vf)
+
+    def to_user(x, S, nh):
+        x = x[:, :S, :hd].reshape(B, nh, S, hd)
+        return jnp.transpose(x, (0, 2, 1, 3))
+
+    return (to_user(dqf, Sq, H).astype(q.dtype),
+            to_user(dkf, Sk, KV).astype(k.dtype),
+            to_user(dvf, Sk, KV).astype(v.dtype))
+
+
+# =====================================================================
+# differentiable wrapper (STE custom_vjp)
+# =====================================================================
 
 
 def _attention_reference(q, k, v, causal, window, q_offset, scale):
-    """Differentiable float attention (plain softmax/divide) for the STE
-    backward; numerics mirror the jnp flash path with exact division."""
+    """Differentiable float attention (plain softmax/divide) for the A/B
+    reference backward; numerics mirror the jnp flash path with exact
+    division.  Materializes the (Sq, Sk) score tensor — validation only."""
     B, Sq, H, hd = q.shape
     _, Sk, KV, _ = k.shape
     G = H // KV
@@ -195,31 +503,51 @@ def _attention_reference(q, k, v, causal, window, q_offset, scale):
     return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
-def posit_flash_attention_ste(fmt_n: int, variant: str, causal: bool,
-                              window: int, q_offset: int, scale: float,
-                              q, k, v):
-    """Differentiable wrapper: fused posit kernel forward, STE backward
-    through a float attention reference."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
+def _flash_ste(bwd_impl: str, fmt_n: int, variant: str, causal: bool,
+               window: int, q_offset: int, scale: float, q, k, v):
     return posit_flash_attention(
         PositFormat(fmt_n), q, k, v, causal, window, q_offset, scale,
         variant)
 
 
-def _flash_fwd(fmt_n, variant, causal, window, q_offset, scale, q, k, v):
-    out = posit_flash_attention_ste(fmt_n, variant, causal, window,
-                                    q_offset, scale, q, k, v)
-    return out, (q, k, v)
+def _flash_ste_fwd(bwd_impl, fmt_n, variant, causal, window, q_offset,
+                   scale, q, k, v):
+    if bwd_impl == "reference":
+        out = posit_flash_attention(
+            PositFormat(fmt_n), q, k, v, causal, window, q_offset, scale,
+            variant)
+        return out, (q, k, v, None, None, None)
+    out, m, l = posit_flash_attention_fwd(
+        PositFormat(fmt_n), q, k, v, causal, window, q_offset, scale,
+        variant)
+    return out, (q, k, v, out, m, l)
 
 
-def _flash_bwd(fmt_n, variant, causal, window, q_offset, scale, res, g):
-    q, k, v = res
+def _flash_ste_bwd(bwd_impl, fmt_n, variant, causal, window, q_offset,
+                   scale, res, g):
+    q, k, v, o, m, l = res
     if scale <= 0.0:
         scale = 1.0 / math.sqrt(q.shape[-1])
-    _, vjp = jax.vjp(
-        lambda q, k, v: _attention_reference(q, k, v, causal, window,
-                                             q_offset, scale), q, k, v)
-    return vjp(g.astype(jnp.float32))
+    if bwd_impl == "reference":
+        _, vjp = jax.vjp(
+            lambda q, k, v: _attention_reference(q, k, v, causal, window,
+                                                 q_offset, scale), q, k, v)
+        return vjp(g.astype(jnp.float32))
+    return _flash_backward(PositFormat(fmt_n), q, k, v, o, g, m, l,
+                           causal, window, q_offset, scale, variant)
 
 
-posit_flash_attention_ste.defvjp(_flash_fwd, _flash_bwd)
+_flash_ste.defvjp(_flash_ste_fwd, _flash_ste_bwd)
+
+
+def posit_flash_attention_ste(fmt_n: int, variant: str, causal: bool,
+                              window: int, q_offset: int, scale: float,
+                              q, k, v, bwd_impl: str = "fused"):
+    """Differentiable wrapper: fused posit kernel forward, recompute fused
+    backward (``bwd_impl="fused"``, default) or float-reference STE
+    backward (``bwd_impl="reference"``, A/B validation only — it
+    materializes the (Sq, Sk) score tensor the flash pattern avoids)."""
+    assert bwd_impl in ("fused", "reference"), bwd_impl
+    return _flash_ste(bwd_impl, fmt_n, variant, causal, window, q_offset,
+                      scale, q, k, v)

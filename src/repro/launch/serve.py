@@ -22,9 +22,13 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--posit-kv", type=str, default=None,
                     help="posit format for KV-cache quantization")
+    ap.add_argument("--attn-backend", choices=["xla", "fused"], default="xla",
+                    help="'fused' serves with posit division AND the fused "
+                         "posit flash-attention kernel in chunked prefill")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, smoke=args.smoke)
+    cfg = get_config(args.arch, smoke=args.smoke,
+                     fused=args.attn_backend == "fused")
     if args.posit_kv:
         cfg = cfg.with_numerics(kv_cache_format=args.posit_kv)
     params = T.init_params(cfg, jax.random.PRNGKey(0))

@@ -34,6 +34,10 @@ def main():
     ap.add_argument("--ckpt-dir", type=str, default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--posit-division", action="store_true")
+    ap.add_argument("--attn-backend", choices=["xla", "fused"], default="xla",
+                    help="'fused' trains with posit division on the fused "
+                         "Pallas backend and attention (fwd + recompute "
+                         "bwd) through the posit flash kernel")
     ap.add_argument("--grad-compress", type=str, default=None,
                     choices=[None, "posit16", "posit8"])
     ap.add_argument("--distributed", action="store_true",
@@ -43,10 +47,12 @@ def main():
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
 
-    cfg = get_config(args.arch, smoke=args.smoke)
+    cfg = get_config(args.arch, smoke=args.smoke,
+                     fused=args.attn_backend == "fused")
     if args.posit_division or args.grad_compress:
         cfg = cfg.with_numerics(
-            posit_division=args.posit_division,
+            posit_division=(args.posit_division
+                            or cfg.numerics.posit_division),
             grad_compress_format=args.grad_compress)
 
     tc = TrainConfig(steps=args.steps, microbatches=args.microbatches,

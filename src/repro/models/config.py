@@ -71,6 +71,13 @@ class ModelConfig:
     #                              through the same W-word datapath plan the
     #                              division kernels use, validated below via
     #                              numerics.validate())
+    attn_bwd: str = "fused"      # fused (recompute-style Pallas backward,
+    #                              O(B*H*Sq) residuals, p = e/l through the
+    #                              SRT datapath) | reference (differentiate
+    #                              a float attention reference that
+    #                              materializes the (Sq, Sk) score tensor —
+    #                              A/B validation only).  Only read when
+    #                              attn_backend == 'fused'.
 
     def __post_init__(self):
         if self.head_dim is None and self.n_heads:
@@ -88,6 +95,9 @@ class ModelConfig:
                 "attn_backend='fused' runs the posit flash-attention kernel "
                 "and requires numerics with posit_division=True and "
                 "div_backend='fused'")
+        if self.attn_bwd not in ("fused", "reference"):
+            raise ValueError(f"unknown attn_bwd {self.attn_bwd!r}; "
+                             "expected 'fused' or 'reference'")
 
     @property
     def padded_vocab(self) -> int:
@@ -113,7 +123,11 @@ class ModelConfig:
         return self.family in ("ssm", "hybrid")
 
     def with_numerics(self, **kw) -> "ModelConfig":
-        return dataclasses.replace(self, numerics=NumericsConfig(**kw))
+        """Merge ``kw`` into the existing numerics (replace semantics), so
+        e.g. a fused config keeps posit_division/div_backend when only
+        kv_cache_format is overridden."""
+        return dataclasses.replace(
+            self, numerics=dataclasses.replace(self.numerics, **kw))
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

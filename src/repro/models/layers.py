@@ -113,7 +113,7 @@ def _qkv(params, x, cfg: ModelConfig, positions, rope: bool = True):
 
 
 def flash_attention(q, k, v, cfg: ModelConfig, *, causal: bool,
-                    window: int = 0, q_offset: int = 0):
+                    window: int = 0, q_offset: int = 0, kv_start=None):
     """Chunked online-softmax attention (GQA via head grouping).
 
     q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd).  Scans q-chunks in an outer loop
@@ -123,17 +123,34 @@ def flash_attention(q, k, v, cfg: ModelConfig, *, causal: bool,
     With ``cfg.attn_backend == "fused"`` the whole thing is ONE Pallas
     kernel (`repro.kernels.posit_flash_attn`): the kv-scan accumulates l
     in-register and the final o/l normalizer runs through the in-kernel
-    posit SRT datapath.  Otherwise, when posit division is on, the o/l
-    division below still dispatches shape-aware (rowwise fused kernel under
-    div_backend='fused' — no materialized broadcast denominator).
+    posit SRT datapath; gradients run the fused recompute backward (or the
+    float-reference one, per ``cfg.attn_bwd``).  Otherwise, when posit
+    division is on, the o/l division below still dispatches shape-aware
+    (rowwise fused kernel under div_backend='fused' — no materialized
+    broadcast denominator).
+
+    ``kv_start`` is an optional (B,) int32 array of per-sequence pad-prefix
+    lengths: key positions < kv_start[b] are masked out.  The serving
+    engine's chunked ragged prefill uses it so left-padded short prompts
+    never attend pad positions (forward-only path).
     """
     if cfg.attn_backend == "fused":
-        from repro.kernels.posit_flash_attn import posit_flash_attention_ste
+        from repro.kernels.posit_flash_attn import (
+            posit_flash_attention,
+            posit_flash_attention_ste,
+        )
 
         nm = cfg.numerics
-        out = posit_flash_attention_ste(
-            nm.div_fmt.n, nm.div_algo, causal, window, q_offset, 0.0,
-            q, k, v)
+        if kv_start is not None:
+            # ragged serving prefill: forward-only kernel with the pad-
+            # prefix mask (the training path never carries kv_start)
+            out = posit_flash_attention(
+                nm.div_fmt, q, k, v, causal, window, q_offset, 0.0,
+                nm.div_algo, kv_start=kv_start)
+        else:
+            out = posit_flash_attention_ste(
+                nm.div_fmt.n, nm.div_algo, causal, window, q_offset, 0.0,
+                q, k, v, cfg.attn_bwd)
         return out.astype(q.dtype)
     B, Sq, H, hd = q.shape
     _, Sk, KV, _ = k.shape
@@ -175,6 +192,10 @@ def flash_attention(q, k, v, cfg: ModelConfig, *, causal: bool,
             if window:
                 mask &= qp[:, None] - kp[None, :] < window
             s = jnp.where(mask[None, None, None], s, -1e30)
+            if kv_start is not None:
+                # per-sequence pad prefix: keys before kv_start[b] masked
+                pad = kp[None, :] >= kv_start[:, None]        # (B, bk)
+                s = jnp.where(pad[:, None, None, None], s, -1e30)
             m_new = jnp.maximum(m, s.max(-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -219,14 +240,22 @@ def cross_attention_block(params, x, mem_kv, cfg: ModelConfig):
 
 
 def decode_attention(params, x, cache_k, cache_v, pos, cfg: ModelConfig,
-                     *, window: int = 0, rope: bool = True):
+                     *, window: int = 0, rope: bool = True, start=None):
     """Single-token attention against a (B, S, KV, hd) cache; returns output
-    and the updated cache entries (caller writes them)."""
+    and the updated cache entries (caller writes them).
+
+    ``start`` is an optional (B,) int32 array of per-sequence start offsets
+    (left-padded ragged serving batches): cache positions < start[b] are
+    masked out and RoPE positions are taken RELATIVE to start[b], so a
+    short prompt decodes identically alone or batched with longer ones.
+    """
     dt = x.dtype
     B, S, KV, hd = cache_k.shape
     H = cfg.n_heads
     G = H // KV
     positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    if start is not None:
+        positions = positions - start[:, None]
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
     k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
     v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
@@ -252,10 +281,49 @@ def decode_attention(params, x, cache_k, cache_v, pos, cfg: ModelConfig,
     mask = kpos[None, None, None, :] <= pos
     if window:
         mask &= kpos[None, None, None, :] > pos - window
+    if start is not None:
+        mask = mask & (kpos[None, None, None, :]
+                       >= start[:, None, None, None])
     s = jnp.where(mask, s, -1e30)
     p = _softmax(s, cfg, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p.astype(dt), cv.astype(dt))
     o = o.reshape(B, 1, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    return out, ck, cv
+
+
+def prefill_attention(params, x, cache_k, cache_v, cfg: ModelConfig,
+                      positions, start=None):
+    """Whole-prompt attention that fills cache slots [0, S) in ONE shot.
+
+    The chunked-prefill counterpart of :func:`decode_attention`: all S
+    prompt tokens are projected, roped (``positions`` already carries the
+    per-sequence relative offsets), optionally posit-quantized for KV
+    storage, written into the decode cache with a single
+    ``dynamic_update_slice``, and attended causally via
+    :func:`flash_attention` — which routes through the fused Pallas kernel
+    under ``cfg.attn_backend == "fused"``, so serving prefill exercises the
+    same kernel the trainer does.  ``start`` masks per-sequence pad
+    prefixes (left-padded ragged batches).
+    """
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.numerics.kv_cache_format:
+        from repro.numerics.formats import resolve_format
+        from repro.numerics.quant import posit_round_value
+
+        pf = resolve_format(cfg.numerics.kv_cache_format)
+        k = posit_round_value(pf, k.astype(jnp.float32)).astype(k.dtype)
+        v = posit_round_value(pf, v.astype(jnp.float32)).astype(v.dtype)
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                      (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                      (0, 0, 0, 0))
+    o = flash_attention(q, k, v, cfg, causal=True, kv_start=start)
     out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
     return out, ck, cv
 

@@ -328,15 +328,41 @@ def _scan_decode(params_stacked, cache_stacked, x, step, cfg: ModelConfig):
     return jax.lax.scan(step, x, (params_stacked, cache_stacked))
 
 
-def decode_step(params: Params, cfg: ModelConfig, cache, token, pos):
-    """One-token decode. token: (B, 1) int32; pos: scalar int32 array."""
+def _gate_state(new, old, pos, start):
+    """Freeze recurrent state for sequences whose prompt hasn't started.
+
+    Left-padded ragged serving batches feed pad tokens before position
+    start[b]; attention families mask them, recurrent families (SSM /
+    RG-LRU) would integrate them into the state.  Keeping the state at its
+    init until ``pos >= start[b]`` makes a short prompt's decode identical
+    alone or batched with longer ones.
+    """
+    if start is None:
+        return new
+    act = pos >= start  # (B,)
+    return jax.tree.map(
+        lambda n, o: jnp.where(act.reshape(act.shape + (1,) * (n.ndim - 1)),
+                               n, o), new, old)
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache, token, pos,
+                start=None):
+    """One-token decode. token: (B, 1) int32; pos: scalar int32 array.
+
+    ``start`` is an optional (B,) int32 array of per-sequence start offsets
+    for left-padded ragged batches: cache positions before start[b] are
+    masked out of attention, RoPE positions are relative to start[b], and
+    recurrent state is frozen until the sequence starts — pad tokens never
+    pollute the KV cache, the recurrent state, or the logits.
+    """
     x = L.embed(params["embed"], token, cfg)
 
     if cfg.family in ("dense", "moe", "vlm"):
         def step(h, inp):
             p, c = inp
             a = L.rmsnorm(h, p["ln1"], cfg)
-            o, ck, cv = L.decode_attention(p["attn"], a, c["k"], c["v"], pos, cfg)
+            o, ck, cv = L.decode_attention(p["attn"], a, c["k"], c["v"], pos,
+                                           cfg, start=start)
             h = h + o
             a = L.rmsnorm(h, p["ln2"], cfg)
             h = h + (L.moe_block(p["moe"], a, cfg) if "moe" in p else L.mlp_block(p["mlp"], a, cfg))
@@ -350,7 +376,8 @@ def decode_step(params: Params, cfg: ModelConfig, cache, token, pos):
             p, c = inp
             a = L.rmsnorm(h, p["ln1"], cfg)
             o, st = mamba2_block(p["ssm"], a, cfg, (c["conv"], c["h"]), decode=True)
-            return h + o, {"conv": st[0], "h": st[1]}
+            new = _gate_state({"conv": st[0], "h": st[1]}, c, pos, start)
+            return h + o, new
 
         x, new_layers = _scan_decode(params["blocks"], cache["layers"], x, step, cfg)
         new_cache = {"layers": new_layers}
@@ -363,13 +390,15 @@ def decode_step(params: Params, cfg: ModelConfig, cache, token, pos):
             a = L.rmsnorm(x, p["ln1"], cfg)
             if cfg.is_attn_layer(i):
                 ring = jnp.minimum(jnp.mod(pos, c["k"].shape[1]), c["k"].shape[1] - 1)
-                o, ck, cv = _ring_decode_attention(p["attn"], a, c, pos, ring, cfg)
+                o, ck, cv = _ring_decode_attention(p["attn"], a, c, pos, ring,
+                                                   cfg, start)
                 x = x + o
                 new_list.append({"k": ck, "v": cv})
             else:
                 o, st = rglru_block(p["rec"], a, cfg, (c["conv"], c["h"]), decode=True)
                 x = x + o
-                new_list.append({"conv": st[0], "h": st[1]})
+                new_list.append(_gate_state({"conv": st[0], "h": st[1]}, c,
+                                            pos, start))
             a = L.rmsnorm(x, p["ln2"], cfg)
             x = x + L.mlp_block(p["mlp"], a, cfg)
         new_cache = {"layers_list": new_list}
@@ -378,7 +407,8 @@ def decode_step(params: Params, cfg: ModelConfig, cache, token, pos):
         def step(h, inp):
             p, c, xk, xv = inp
             a = L.rmsnorm(h, p["ln1"], cfg)
-            o, ck, cv = L.decode_attention(p["attn"], a, c["k"], c["v"], pos, cfg)
+            o, ck, cv = L.decode_attention(p["attn"], a, c["k"], c["v"], pos,
+                                           cfg, start=start)
             h = h + o
             a = L.rmsnorm(h, p["ln_x"], cfg)
             h = h + L.cross_attention_block(p["xattn"], a, (xk, xv), cfg)
@@ -403,7 +433,7 @@ def decode_step(params: Params, cfg: ModelConfig, cache, token, pos):
     return lg, new_cache
 
 
-def _ring_decode_attention(p, x, c, pos, ring, cfg: ModelConfig):
+def _ring_decode_attention(p, x, c, pos, ring, cfg: ModelConfig, start=None):
     """Local-attention decode against a window-sized ring buffer."""
     import math as _m
 
@@ -412,6 +442,8 @@ def _ring_decode_attention(p, x, c, pos, ring, cfg: ModelConfig):
     H = cfg.n_heads
     G = H // KV
     positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    if start is not None:
+        positions = positions - start[:, None]
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
@@ -425,34 +457,85 @@ def _ring_decode_attention(p, x, c, pos, ring, cfg: ModelConfig):
     wrap = (pos // W) * W + slot
     slot_pos = jnp.where(slot <= ring, wrap, wrap - W)
     valid = (slot_pos >= 0) & (slot_pos <= pos) & (slot_pos > pos - W)
+    valid = jnp.broadcast_to(valid[None, :], (B, W))
+    if start is not None:
+        valid = valid & (slot_pos[None, :] >= start[:, None])
 
     qg = q.reshape(B, 1, KV, G, hd)
     s = jnp.einsum("bkgd,bskd->bkgs", qg[:, 0], ck.astype(dt)).astype(jnp.float32)
     s = s / _m.sqrt(hd)
-    s = jnp.where(valid[None, None, None], s, -1e30)
+    s = jnp.where(valid[:, None, None], s, -1e30)
     pr = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", pr.astype(dt), cv.astype(dt)).reshape(B, 1, H, hd)
     out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
     return out, ck, cv
 
 
-def prefill(params: Params, cfg: ModelConfig, batch, cache):
-    """Fill a decode cache by running tokens through decode_step sequentially.
+def prefill(params: Params, cfg: ModelConfig, batch, cache, start=None):
+    """Fill a decode cache from the whole prompt in ONE call.
 
-    Simple reference implementation (token-at-a-time); production prefill
-    lowers `forward` with cache capture, but for tests/examples this is
-    enough and exercises identical code to decode.
+    The dense family runs a chunked prefill: one full-sequence attention
+    pass per layer (sharing the decode cache layout — all S K/V rows
+    written with a single ``dynamic_update_slice``), with the attention
+    routed through :func:`repro.models.layers.flash_attention` — i.e. the
+    fused posit Pallas kernel when ``cfg.attn_backend == "fused"``.  Other
+    families scan ``decode_step`` over the prompt inside this one call,
+    which lowers to a single jitted while-loop instead of S separate
+    dispatches.  MoE deliberately stays on the scanned path: its expert
+    capacity ``C = ceil(S*k/E * cf)`` depends on the padded prompt length,
+    so a whole-prompt dispatch would capacity-drop a short sequence's
+    tokens differently alone vs. batched — per-token dispatch keeps ragged
+    batching exact (a capacity-aligned chunked MoE prefill is future
+    work).
+
+    ``start`` is an optional (B,) int32 array of per-sequence pad-prefix
+    lengths for left-padded ragged batches (see :func:`decode_step`).
+    Returns ``(logits_at_last_position, cache)``.
     """
     tokens = batch["tokens"]
     B, S = tokens.shape
 
+    if cfg.family == "dense":
+        return _prefill_chunk(params, cfg, tokens, cache, start)
+
     def step(carry, i):
         cache, _ = carry
         lg, cache = decode_step(params, cfg, cache, jax.lax.dynamic_slice(
-            tokens, (0, i), (B, 1)), i)
+            tokens, (0, i), (B, 1)), i, start)
         return (cache, lg), None
 
     (cache, lg), _ = jax.lax.scan(step, (cache, jnp.zeros((B, 1, cfg.padded_vocab),
                                                           L.COMPUTE_DTYPE)),
                                   jnp.arange(S))
     return lg, cache
+
+
+def _prefill_chunk(params: Params, cfg: ModelConfig, tokens, cache, start):
+    """Chunked prefill for the stacked dense family: whole-prompt attention
+    with per-sequence pad-prefix masking, writing cache slots [0, S) in
+    place."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if start is not None:
+        # RoPE positions relative to each sequence's first real token, so a
+        # short prompt embeds identically alone or batched (pad rows get
+        # negative positions; they are masked out of attention and their
+        # logits are never sampled).
+        positions = positions - start[:, None]
+
+    def step(h, inp):
+        p, c = inp
+        a = L.rmsnorm(h, p["ln1"], cfg)
+        o, ck, cv = L.prefill_attention(p["attn"], a, c["k"], c["v"], cfg,
+                                        positions, start)
+        h = h + o
+        a = L.rmsnorm(h, p["ln2"], cfg)
+        h = h + L.mlp_block(p["mlp"], a, cfg)
+        return h, {"k": ck, "v": cv}
+
+    x, new_layers = _scan_decode(params["blocks"], cache["layers"], x, step,
+                                 cfg)
+    x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg)
+    lg = L.logits(params["embed"], x, cfg)
+    return lg, {"layers": new_layers}

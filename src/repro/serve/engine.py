@@ -1,9 +1,20 @@
 """Batched serving engine: prefill + decode with KV cache.
 
-Requests are padded into a fixed batch (aligned decoding); generation is
-greedy or temperature sampling; stop on EOS or max tokens.  The decode step
-is the same jitted ``decode_step`` the multi-pod dry-run lowers, so what we
-serve here is what scales there.
+Ragged requests are LEFT-padded into a fixed batch (aligned decoding) and
+carry a per-sequence ``start`` offset: pad positions are masked out of
+attention, RoPE positions are relative to each sequence's first real token,
+and recurrent state stays frozen until the sequence starts — so a short
+prompt generates exactly the same tokens alone or batched with longer ones
+(pad tokens never pollute the KV cache or the logits).
+
+Prefill is ONE jitted call over the whole prompt (chunked full-sequence
+attention for the dense family — through the fused posit flash kernel
+under ``attn_backend="fused"`` — and a scanned decode loop for the other
+families; MoE stays scanned so its length-dependent expert capacity keeps
+ragged batching exact), not one dispatch per token.  The decode step is
+the same jitted
+``decode_step`` the multi-pod dry-run lowers, so what we serve here is what
+scales there.
 """
 
 from __future__ import annotations
@@ -34,7 +45,9 @@ class ServeEngine:
         self.params = params
         self.sc = sc
         self._decode = jax.jit(
-            lambda p, c, t, i: T.decode_step(p, cfg, c, t, i))
+            lambda p, c, t, i, s: T.decode_step(p, cfg, c, t, i, s))
+        self._prefill = jax.jit(
+            lambda p, c, t, s: T.prefill(p, cfg, {"tokens": t}, c, s))
         self._key = jax.random.PRNGKey(sc.seed)
 
     def generate(self, prompts: List[np.ndarray], max_new: int = 32,
@@ -47,19 +60,21 @@ class ServeEngine:
         total = plen + max_new
         assert total <= sc.max_seq
 
-        # left-pad to align positions
+        # left-pad to align decode positions; start[b] = first real slot,
+        # so pad positions can be masked out downstream
         toks = np.zeros((B, plen), np.int32)
+        starts = np.zeros(B, np.int32)
         for i, p in enumerate(prompts):
             toks[i, plen - len(p):] = p
+            starts[i] = plen - len(p)
+        start = jnp.asarray(starts)
 
         cache = T.init_cache(self.cfg, B, sc.max_seq)
-        tokens = jnp.asarray(toks)
 
-        # prefill token-by-token (shares the decode path; see models docs)
-        lg = None
-        for i in range(plen):
-            lg, cache = self._decode(self.params, cache, tokens[:, i : i + 1],
-                                     jnp.int32(i))
+        # whole-prompt prefill in one jitted call (chunked attention for
+        # dense/moe, scanned decode for the rest) — not plen dispatches
+        lg, cache = self._prefill(self.params, cache, jnp.asarray(toks),
+                                  start)
 
         out = [list() for _ in range(B)]
         done = np.zeros(B, bool)
@@ -73,7 +88,8 @@ class ServeEngine:
                         done[i] = True
             if done.all():
                 break
-            lg, cache = self._decode(self.params, cache, cur, jnp.int32(plen + step))
+            lg, cache = self._decode(self.params, cache, cur,
+                                     jnp.int32(plen + step), start)
             cur = self._sample(lg)
         return [np.asarray(o, np.int32) for o in out]
 

@@ -1,4 +1,6 @@
-"""Posit flash-attention kernel: accuracy, GQA, masking, grads, routing."""
+"""Posit flash-attention kernel: accuracy, GQA, masking, grads, routing,
+and the fused recompute backward (residuals, gradient equivalence, no
+(Sq, Sk) intermediate)."""
 
 import math
 
@@ -11,6 +13,7 @@ from repro.configs import get_config
 from repro.core.posit import PositFormat
 from repro.kernels.posit_flash_attn import (
     posit_flash_attention,
+    posit_flash_attention_fwd,
     posit_flash_attention_ste,
 )
 from repro.models import layers as L
@@ -135,6 +138,132 @@ def test_ste_gradients_close_to_float_reference():
                                    rtol=0, atol=5e-3)
 
 
+# ------------------------------------------------------ fused backward
+
+
+def test_forward_residuals_are_the_row_logsumexp():
+    """The (m, l) residuals saved for the recompute backward are the row
+    logsumexp in factored form: m + log(l) == logsumexp(masked scores)."""
+    q, k, v = _qkv(seq=32)
+    o, m, l = posit_flash_attention_fwd(FMT, q, k, v, True, 0, 0, 0.0,
+                                        "srt_r4_cs_of_fr", True, 16, 16)
+    o2 = posit_flash_attention(FMT, q, k, v, True, 0, 0, 0.0,
+                               "srt_r4_cs_of_fr", True, 16, 16)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(o2))
+    assert m.shape == l.shape == (B * H, 32)  # O(B*H*Sq), padded rows incl.
+
+    s = jnp.einsum("bqkgd,bskd->bkgqs",
+                   q.reshape(B, 32, KV, H // KV, HD), k) / math.sqrt(HD)
+    qp, kp = jnp.arange(32), jnp.arange(32)
+    s = jnp.where((qp[:, None] >= kp[None, :])[None, None, None], s, -1e30)
+    lse_ref = jax.scipy.special.logsumexp(s, axis=-1)      # (B, KV, G, Sq)
+    lse_ref = lse_ref.reshape(B * H, 32)
+    lse = m + jnp.log(l)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref),
+                               rtol=0, atol=1e-5)
+
+
+_BWD_TOL = {16: 5e-3, 32: 1e-5, 64: 1e-5}  # documented fused-vs-ref abs tol
+
+
+@pytest.mark.parametrize("fmt_n,variant,causal,window,q_offset", [
+    (16, "srt_r4_cs_of_fr", True, 0, 0),   # causal
+    (16, "srt_r4_cs_of_fr", False, 0, 0),  # bidirectional
+    (16, "srt_r4_cs_of_fr", True, 8, 0),   # windowed
+    (16, "srt_r4_cs_of_fr", True, 0, 16),  # decode-style suffix query block
+    (16, "srt_r2_cs_of_fr", True, 0, 0),   # radix-2 divider row
+    (32, "srt_r4_cs_of_fr", True, 0, 0),   # wider format, same datapath
+    (32, "srt_r4_scaled", True, 0, 0),     # operand scaling: 2-word frame
+    (64, "srt_r4_cs_of_fr", True, 0, 0),   # posit64: two-word residual
+])
+def test_fused_backward_matches_reference(fmt_n, variant, causal, window,
+                                          q_offset):
+    """Recompute-kernel gradients vs the float-reference STE backward, on
+    GQA shapes (H=4, KV=2): the mask family sweep plus Table IV divider
+    rows (radix-2, operand-scaled two-word, posit64) through the W-word
+    datapath plan."""
+    seq = 8 if q_offset else 24
+    kv_seq = q_offset + seq if q_offset else seq
+    q = jnp.asarray(RNG.normal(0, 1, (B, seq, H, 16)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(0, 1, (B, kv_seq, KV, 16)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(0, 1, (B, kv_seq, KV, 16)).astype(np.float32))
+    co = jnp.asarray(RNG.normal(0, 1, q.shape).astype(np.float32))
+
+    def loss(bwd_impl):
+        def f(q, k, v):
+            out = posit_flash_attention_ste(
+                fmt_n, variant, causal, window, q_offset, 0.0,
+                q, k, v, bwd_impl)
+            return (out * co).sum()
+        return f
+
+    gf = jax.grad(loss("fused"), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss("reference"), argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("dq dk dv".split(), gf, gr):
+        assert bool(jnp.isfinite(a).all()), (fmt_n, name)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0,
+                                   atol=_BWD_TOL[fmt_n],
+                                   err_msg=f"posit{fmt_n} {name}")
+
+
+def test_fused_backward_fully_masked_rows_finite():
+    """All-masked rows (l == 0) must produce zero gradients, not NaR/NaN."""
+    q, k, v = _qkv(seq=8, kv_seq=8)
+    co = jnp.ones(q.shape, jnp.float32)
+
+    def loss(q, k, v):
+        out = posit_flash_attention_ste(16, "srt_r4_cs_of_fr", True, 0, -8,
+                                        0.0, q, k, v, "fused")
+        return (out * co).sum()
+
+    g = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    for a in g:
+        assert bool(jnp.isfinite(a).all())
+        np.testing.assert_array_equal(np.asarray(a), np.zeros_like(a))
+
+
+def _collect_avals(jaxpr, out):
+    for eqn in jaxpr.eqns:
+        for var in list(eqn.invars) + list(eqn.outvars):
+            shape = getattr(getattr(var, "aval", None), "shape", None)
+            if shape is not None:
+                out.append(tuple(shape))
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (list, tuple)) else [val]
+            for w in vals:
+                if hasattr(w, "eqns"):                # raw Jaxpr
+                    _collect_avals(w, out)
+                elif hasattr(w, "jaxpr"):             # ClosedJaxpr
+                    _collect_avals(w.jaxpr, out)
+    return out
+
+
+@pytest.mark.parametrize("bwd_impl,quadratic", [("fused", False),
+                                                ("reference", True)])
+def test_backward_materializes_no_score_tensor(bwd_impl, quadratic):
+    """The fused backward's jaxpr must contain NO (Sq, Sk) intermediate —
+    only kernel tiles (block_q/block_k sized) and O(S) residual rows.  The
+    reference backward DOES materialize one (sanity check on the walk)."""
+    S, big = 256, 200  # blocks are 128, so any >= (200, 200) aval is a
+    #                    full score tensor, not a tile
+    q = jnp.zeros((1, S, 2, 32), jnp.float32)
+    k = jnp.zeros((1, S, 1, 32), jnp.float32)
+    v = jnp.zeros((1, S, 1, 32), jnp.float32)
+
+    def loss(q, k, v):
+        return posit_flash_attention_ste(16, "srt_r4_cs_of_fr", True, 0, 0,
+                                         0.0, q, k, v, bwd_impl).sum()
+
+    jaxpr = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1, 2)))(q, k, v)
+    shapes = _collect_avals(jaxpr.jaxpr, [])
+    offenders = [s for s in shapes
+                 if sum(1 for d in s if d >= big) >= 2]
+    if quadratic:
+        assert offenders, "reference backward should materialize (Sq, Sk)"
+    else:
+        assert not offenders, f"(Sq, Sk) intermediates leaked: {offenders}"
+
+
 # ----------------------------------------------------------- layer routing
 
 
@@ -179,3 +308,24 @@ def test_config_rejects_fused_attn_without_fused_numerics():
         base.replace(attn_backend="fused",
                      numerics=NumericsConfig(posit_division=True,
                                              div_backend="emulate"))
+    with pytest.raises(ValueError, match="attn_bwd"):
+        base.replace(attn_bwd="symbolic")
+
+
+def test_layer_routes_reference_backward_flag():
+    """cfg.attn_bwd='reference' keeps the float-reference STE backward
+    available for A/B validation; gradients from both impls agree."""
+    cfg = _fused_cfg()
+    params = L.init_attention(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.normal(0, 1, (1, 16, cfg.d_model)).astype(np.float32))
+    pos = jnp.arange(16)[None]
+
+    def g_of(c):
+        return jax.grad(
+            lambda x: L.attention_block(params, x, c, pos).sum())(x)
+
+    gf = g_of(cfg)
+    gr = g_of(cfg.replace(attn_bwd="reference"))
+    assert bool(jnp.isfinite(gf).all())
+    np.testing.assert_allclose(np.asarray(gf), np.asarray(gr), rtol=0,
+                               atol=5e-3)

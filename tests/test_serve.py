@@ -34,6 +34,69 @@ def test_batched_matches_single(engine):
     np.testing.assert_array_equal(single, batched)
 
 
+def test_ragged_batch_matches_single(engine):
+    """Regression: a short prompt generates IDENTICAL tokens alone vs
+    left-padded into a batch with a longer prompt.  Pad positions used to
+    be prefilled as real token-0 content, polluting the short sequence's
+    KV cache and logits; they are now masked via per-sequence start
+    offsets (and RoPE positions are relative to the sequence start)."""
+    p1 = np.array([3, 5, 7], np.int32)
+    p2 = np.array([11, 13, 2, 9, 4, 6, 8], np.int32)
+    alone = engine.generate([p1], max_new=6)[0]
+    ragged = engine.generate([p1, p2], max_new=6)[0]
+    np.testing.assert_array_equal(alone, ragged)
+    # and the longer prompt is itself unperturbed by the batching
+    long_alone = engine.generate([p2], max_new=6)[0]
+    long_ragged = engine.generate([p1, p2], max_new=6)[1]
+    np.testing.assert_array_equal(long_alone, long_ragged)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "recurrentgemma-2b"])
+def test_ragged_batch_recurrent_families(arch):
+    """Recurrent state (SSM / RG-LRU) is frozen until each sequence's
+    start, so ragged batching is exact for non-attention caches too."""
+    cfg = get_config(arch, smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=64))
+    p1 = np.array([3, 5, 7], np.int32)
+    p2 = np.array([11, 13, 2, 9, 4, 6, 8], np.int32)
+    alone = eng.generate([p1], max_new=4)[0]
+    ragged = eng.generate([p1, p2], max_new=4)[0]
+    np.testing.assert_array_equal(alone, ragged)
+
+
+def test_fused_attn_backend_serves_end_to_end():
+    """attn_backend='fused' routes the chunked serving prefill through the
+    posit flash-attention Pallas kernel (ragged-start mask included)."""
+    cfg = get_config("smollm-360m", smoke=True, fused=True)
+    assert cfg.attn_backend == "fused"
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=64))
+    p1 = np.array([3, 5, 7], np.int32)
+    p2 = np.array([11, 13, 2, 9, 4], np.int32)
+    alone = eng.generate([p1], max_new=2)[0]
+    ragged = eng.generate([p1, p2], max_new=2)[0]
+    np.testing.assert_array_equal(alone, ragged)
+    assert (alone < cfg.vocab).all()
+
+
+@pytest.mark.slow
+def test_moe_ragged_batch_matches_single():
+    """MoE stays on the scanned (per-token) prefill: expert capacity is
+    length-dependent, so a whole-prompt dispatch would capacity-drop a
+    short sequence's tokens differently alone vs. batched.  Per-token
+    dispatch + start masking keeps ragged batching exact."""
+    cfg = get_config("olmoe-1b-7b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=64))
+    p1 = np.array([3, 5, 7], np.int32)
+    p2 = np.array([11, 13, 2, 9, 4], np.int32)
+    alone = eng.generate([p1], max_new=3)[0]
+    ragged = eng.generate([p1, p2], max_new=3)[0]
+    np.testing.assert_array_equal(alone, ragged)
+
+
 def test_encdec_generation():
     cfg = get_config("seamless-m4t-medium", smoke=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
