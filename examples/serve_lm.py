@@ -1,5 +1,6 @@
-"""Batched serving example: prefill + KV-cache decode with posit-quantized
-KV storage, using the same decode_step the multi-pod dry-run lowers.
+"""Serving example: continuous batching on the slot engine with
+posit-quantized KV storage, using the same decode_step the multi-pod
+dry-run lowers.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -11,27 +12,31 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import Request, ServeConfig, ServeEngine
 
 
 def main():
-    cfg = get_config("smollm-360m", smoke=True)
+    cfg = get_config("smollm-360m", smoke=True, max_batch=4, max_seq=160)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
 
     for kv_fmt in (None, "posit16"):
         c = cfg.with_numerics(kv_cache_format=kv_fmt) if kv_fmt else cfg
-        eng = ServeEngine(c, params, ServeConfig(max_batch=4, max_seq=160))
+        eng = ServeEngine(c, params, ServeConfig.from_model(c))
         rng = np.random.default_rng(0)
-        prompts = [rng.integers(1, c.vocab, size=n).astype(np.int32)
-                   for n in (5, 9, 3, 7)]
+        # a stream twice as long as the slot count: short requests finish,
+        # free their slot, and the queue admits the next one mid-flight
+        reqs = [Request(rng.integers(1, c.vocab, size=n).astype(np.int32),
+                        max_new=m)
+                for n, m in ((5, 24), (9, 8), (3, 24), (7, 12),
+                             (4, 16), (11, 8), (6, 24), (8, 10))]
         t0 = time.perf_counter()
-        outs = eng.generate(prompts, max_new=24)
+        outs = eng.serve(reqs)
         dt = time.perf_counter() - t0
         total = sum(len(o) for o in outs)
-        print(f"kv_format={kv_fmt or 'bf16':8s}: {total} tokens in {dt:.2f}s "
-              f"({total/dt:.1f} tok/s, batch=4)")
+        print(f"kv_format={kv_fmt or 'bf16':8s}: {len(reqs)} requests, "
+              f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s, slots=4)")
         for i, o in enumerate(outs[:2]):
-            print(f"  req{i}: {prompts[i].tolist()} -> {o[:10].tolist()}...")
+            print(f"  req{i}: {reqs[i].tokens.tolist()} -> {o[:10].tolist()}...")
 
 
 if __name__ == "__main__":

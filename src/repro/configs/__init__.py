@@ -30,12 +30,18 @@ ALIASES = {
 }
 
 
-def get_config(name: str, smoke: bool = False, fused: bool = False):
+def get_config(name: str, smoke: bool = False, fused: bool = False,
+               max_batch: int = None, max_seq: int = None):
     """Resolve an arch config.  ``fused=True`` switches the config onto the
     fused posit numerics stack: posit division through the Pallas SRT
     kernels AND attention through the fused flash kernel (forward + the
     recompute backward) — the launch entry points expose it as
-    ``--attn-backend fused``."""
+    ``--attn-backend fused``.
+
+    ``max_batch``/``max_seq`` override the config's serving defaults
+    (``serve_max_batch``/``serve_max_seq``, read by
+    ``ServeConfig.from_model``) so launchers configure serving here instead
+    of mutating ``ServeConfig`` ad hoc."""
     mod_name = ALIASES.get(name, name)
     if mod_name not in ARCH_IDS:
         raise KeyError(f"unknown arch {name!r}; have {sorted(ALIASES)}")
@@ -48,6 +54,13 @@ def get_config(name: str, smoke: bool = False, fused: bool = False):
             attn_backend="fused",
             numerics=NumericsConfig(posit_division=True,
                                     div_backend="fused"))
+    serve_kw = {}
+    if max_batch is not None:
+        serve_kw["serve_max_batch"] = int(max_batch)
+    if max_seq is not None:
+        serve_kw["serve_max_seq"] = int(max_seq)
+    if serve_kw:
+        cfg = cfg.replace(**serve_kw)
     return cfg
 
 

@@ -15,9 +15,19 @@ the format's minpos instead (see :func:`_minpos_eps`) and come out 0.
 
 GQA is handled by the BlockSpec index map: the KV block index is derived
 from the query-head index (``h // G``), so grouped K/V are never repeated
-in memory.  ``kv_start`` optionally masks a per-sequence pad PREFIX
-(``k_pos < kv_start[b]`` is masked) — the serving engine's chunked ragged
-prefill uses this so left-padded short prompts never attend pad positions.
+in memory.  Three optional per-sequence (B,) int32 inputs make the kernel
+serve slot-based continuous batching, where every batch row can sit at a
+different sequence offset inside ONE compiled kernel:
+
+  * ``kv_start`` masks a per-sequence pad PREFIX (``k_pos < kv_start[b]``
+    is masked) — the engine's chunked ragged prefill uses this so
+    left-padded short prompts never attend pad positions.
+  * ``kv_len`` masks a per-sequence valid SUFFIX (``k_pos >= kv_len[b]``
+    is masked) — per-slot KV-cache lengths, so a decode step over a full
+    ``max_seq`` cache only attends each slot's written rows.
+  * ``q_pos`` offsets each sequence's query positions for the causal /
+    window masks (added to the static ``q_offset``) — per-slot decode
+    positions, so slots at heterogeneous offsets share one kernel launch.
 
 Backward (recompute style, the flash-attention backward): the forward
 additionally saves per-row residuals ``(m, l)`` — the online-softmax row
@@ -85,14 +95,15 @@ def _minpos_eps(fmt: PositFormat) -> float:
     return float(2.0 ** -min(fmt.max_scale, 126))
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, ks_ref, *out_refs, fmt: PositFormat,
-                  variant: str, causal: bool, window: int, q_offset: int,
-                  scale: float, bq: int, bk: int, nk: int, sk_valid: int,
-                  save_res: bool):
+def _flash_kernel(q_ref, k_ref, v_ref, ks_ref, kl_ref, qp_ref, *out_refs,
+                  fmt: PositFormat, variant: str, causal: bool, window: int,
+                  q_offset: int, scale: float, bq: int, bk: int, nk: int,
+                  sk_valid: int, save_res: bool):
     q = q_ref[0]                                    # (bq, hdp) f32
-    kv_start = ks_ref[0, 0]                         # scalar int32
+    kv_start = ks_ref[0, 0]                         # scalar int32 (pad prefix)
+    kv_len = jnp.minimum(kl_ref[0, 0], sk_valid)    # per-sequence valid rows
     iq = pl.program_id(1)
-    q_pos = q_offset + iq * bq + jax.lax.broadcasted_iota(
+    q_pos = qp_ref[0, 0] + q_offset + iq * bq + jax.lax.broadcasted_iota(
         jnp.int32, (bq, 1), 0)
 
     m0 = jnp.full((bq, 1), _NEG_INF, dtype=jnp.float32)
@@ -107,7 +118,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, ks_ref, *out_refs, fmt: PositFormat,
             q, kj, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale     # (bq, bk)
         k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
-        mask = (k_pos < sk_valid) & (k_pos >= kv_start)
+        mask = (k_pos < kv_len) & (k_pos >= kv_start)
         if causal:
             mask &= q_pos >= k_pos
         if window:
@@ -157,7 +168,7 @@ def _to_kernel_layout(x, Sp, hdp):
 
 def _flash_call(fmt, q, k, v, causal, window, q_offset, scale, variant,
                 interpret, block_q, block_k, vmem_limit_bytes, save_res,
-                kv_start):
+                kv_start, kv_len=None, q_pos=None):
     if interpret is None:
         interpret = not _on_tpu()
     B, Sq, H, hd = q.shape
@@ -173,10 +184,15 @@ def _flash_call(fmt, q, k, v, causal, window, q_offset, scale, variant,
     vf = _to_kernel_layout(v, Skp, hdp)
     nk = Skp // bk
 
-    if kv_start is None:
-        ksf = jnp.zeros((B * H, 1), jnp.int32)
-    else:
-        ksf = jnp.repeat(kv_start.astype(jnp.int32), H).reshape(B * H, 1)
+    def _per_seq(vec, default):
+        """(B,) per-sequence int32 -> (B*H, 1) per-grid-row scalar input."""
+        if vec is None:
+            return jnp.full((B * H, 1), default, jnp.int32)
+        return jnp.repeat(vec.astype(jnp.int32), H).reshape(B * H, 1)
+
+    ksf = _per_seq(kv_start, 0)
+    klf = _per_seq(kv_len, Sk)
+    qpf = _per_seq(q_pos, 0)
 
     kernel = functools.partial(
         _flash_kernel, fmt=fmt, variant=variant, causal=causal,
@@ -200,12 +216,14 @@ def _flash_call(fmt, q, k, v, causal, window, q_offset, scale, variant,
             pl.BlockSpec((1, Skp, hdp),
                          lambda b, i: (b // H * KV + (b % H) // G, 0, 0)),
             pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
         ],
         out_specs=out_specs,
         compiler_params=pltpu.TPUCompilerParams(
             vmem_limit_bytes=vmem_limit_bytes),
         interpret=interpret,
-    )(qf, kf, vf, ksf)
+    )(qf, kf, vf, ksf, klf, qpf)
 
     out = outs[0][:, :Sq, :hd].reshape(B, H, Sq, hd)
     out = jnp.transpose(out, (0, 2, 1, 3))
@@ -233,6 +251,8 @@ def posit_flash_attention(
     block_k: int = 128,
     vmem_limit_bytes: int = 128 * 1024 * 1024,
     kv_start=None,
+    kv_len=None,
+    q_pos=None,
 ):
     """Flash attention with the posit SRT normalizer, one kernel launch.
 
@@ -240,13 +260,19 @@ def posit_flash_attention(
     (GQA via the index map — no repeated KV in memory).  All compute f32.
     ``scale`` <= 0 means the default 1/sqrt(hd); ``interpret=None``
     auto-selects (interpret off TPU, compiled on TPU) like the other
-    kernel wrappers.  ``kv_start`` is an optional (B,) int32 array of
-    per-sequence pad-prefix lengths: key positions < kv_start[b] are
-    masked (ragged left-padded serving prefill).
+    kernel wrappers.
+
+    ``kv_start``/``kv_len``/``q_pos`` are optional (B,) int32 per-sequence
+    arrays for slot-based serving: key positions outside
+    ``[kv_start[b], kv_len[b])`` are masked, and ``q_pos[b]`` offsets the
+    sequence's query positions in the causal/window masks (on top of the
+    static ``q_offset``).  The serving engine's per-slot decode passes
+    ``q_pos = pos`` and ``kv_len = pos + 1`` so every slot attends exactly
+    its own written cache rows at its own offset, in one compiled kernel.
     """
     return _flash_call(fmt, q, k, v, causal, window, q_offset, scale,
                        variant, interpret, block_q, block_k,
-                       vmem_limit_bytes, False, kv_start)
+                       vmem_limit_bytes, False, kv_start, kv_len, q_pos)
 
 
 @functools.partial(jax.jit,

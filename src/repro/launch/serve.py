@@ -1,47 +1,72 @@
-"""Serving launcher: batched generation with the KV-cache engine."""
+"""Serving launcher: drive a request stream against the continuous-batching
+slot engine (or the static batch path with ``--static``)."""
 
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import Request, ServeConfig, ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="requests in the stream (default 2x batch)")
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (ServeConfig.max_batch)")
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--posit-kv", type=str, default=None,
                     help="posit format for KV-cache quantization")
     ap.add_argument("--attn-backend", choices=["xla", "fused"], default="xla",
                     help="'fused' serves with posit division AND the fused "
-                         "posit flash-attention kernel in chunked prefill")
+                         "posit flash-attention kernel in chunked prefill "
+                         "and per-slot decode")
+    ap.add_argument("--static", action="store_true",
+                    help="serve fixed batches to completion instead of the "
+                         "continuous slot scheduler")
     args = ap.parse_args()
 
+    # serving limits ride on the model config (get_config overrides), so no
+    # ad hoc ServeConfig mutation here
     cfg = get_config(args.arch, smoke=args.smoke,
-                     fused=args.attn_backend == "fused")
+                     fused=args.attn_backend == "fused",
+                     max_batch=args.batch, max_seq=args.max_seq)
     if args.posit_kv:
         cfg = cfg.with_numerics(kv_cache_format=args.posit_kv)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, ServeConfig(
-        max_batch=args.batch, max_seq=args.max_seq,
-        temperature=args.temperature))
+    eng = ServeEngine(cfg, params,
+                      ServeConfig.from_model(cfg,
+                                             temperature=args.temperature))
 
+    # a mixed-length request stream: more requests than slots, ragged
+    # prompts and budgets, so slots are freed and re-admitted mid-flight
+    n_req = args.requests or 2 * args.batch
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(1, cfg.vocab, size=rng.integers(3, 10)).astype(np.int32)
-               for _ in range(args.batch)]
-    outs = eng.generate(prompts, max_new=args.max_new)
+    reqs = [Request(rng.integers(1, cfg.vocab,
+                                 size=int(rng.integers(3, 12))).astype(np.int32),
+                    max_new=int(rng.integers(max(1, args.max_new // 2),
+                                             args.max_new + 1)))
+            for _ in range(n_req)]
+
+    t0 = time.perf_counter()
+    outs = eng.serve_static(reqs) if args.static else eng.serve(reqs)
+    dt = time.perf_counter() - t0
+    total = sum(len(o) for o in outs)
+    mode = "static batches" if args.static else "continuous"
+    print(f"# {mode}: {n_req} requests, {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s, slots={args.batch})")
     for i, o in enumerate(outs):
-        print(f"req{i}: prompt={prompts[i].tolist()} -> {o.tolist()}")
+        print(f"req{i}: prompt={reqs[i].tokens.tolist()} -> {o.tolist()}")
 
 
 if __name__ == "__main__":

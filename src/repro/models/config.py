@@ -63,6 +63,11 @@ class ModelConfig:
     tp_disable: bool = False     # replicate over the model axis (pure DP)
     attn_q_chunk: int = 1024
     attn_kv_chunk: int = 1024
+    # --- serving defaults (ServeConfig.from_model reads these; override
+    #     via get_config(name, max_batch=..., max_seq=...) instead of
+    #     mutating ServeConfig ad hoc in launchers) ---
+    serve_max_batch: int = 8     # persistent decode slots in the engine
+    serve_max_seq: int = 512     # per-slot KV-cache rows (prompt + new)
     attn_backend: str = "xla"    # xla (jnp chunked flash) | fused (single
     #                              Pallas kernel with the in-kernel posit
     #                              SRT normalizer; needs div_backend='fused'.

@@ -244,16 +244,29 @@ def decode_attention(params, x, cache_k, cache_v, pos, cfg: ModelConfig,
     """Single-token attention against a (B, S, KV, hd) cache; returns output
     and the updated cache entries (caller writes them).
 
+    ``pos`` is a PER-SLOT (B,) int32 vector of decode positions (a scalar
+    is broadcast): slot b's K/V are written at cache row pos[b], its RoPE
+    phase is pos[b] (relative to start[b]), and its attention mask covers
+    rows [start[b], pos[b]] — so every batch slot can sit at a different
+    sequence offset inside one jitted step (continuous batching).
+
     ``start`` is an optional (B,) int32 array of per-sequence start offsets
-    (left-padded ragged serving batches): cache positions < start[b] are
-    masked out and RoPE positions are taken RELATIVE to start[b], so a
-    short prompt decodes identically alone or batched with longer ones.
+    (left-padded ragged prompts): cache positions < start[b] are masked
+    out and RoPE positions are taken RELATIVE to start[b], so a short
+    prompt decodes identically alone, batched, or admitted mid-flight.
+
+    Under ``cfg.attn_backend == "fused"`` the attention itself runs through
+    the posit flash Pallas kernel with per-sequence ``q_pos``/``kv_len``/
+    ``kv_start`` inputs — per-slot decode positions end to end.
     """
     dt = x.dtype
     B, S, KV, hd = cache_k.shape
     H = cfg.n_heads
     G = H // KV
-    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.full((B,), pos, jnp.int32)
+    positions = pos[:, None]
     if start is not None:
         positions = positions - start[:, None]
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
@@ -271,16 +284,35 @@ def decode_attention(params, x, cache_k, cache_v, pos, cfg: ModelConfig,
         pf = resolve_format(cfg.numerics.kv_cache_format)
         k = posit_round_value(pf, k.astype(jnp.float32)).astype(k.dtype)
         v = posit_round_value(pf, v.astype(jnp.float32)).astype(v.dtype)
-    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    # per-slot cache write: slot b's row pos[b] (clamped in-bounds; parked
+    # slots just keep overwriting the last row, which admission re-prefills)
+    bidx = jnp.arange(B)
+    pos_c = jnp.minimum(pos, S - 1)
+    ck = cache_k.at[bidx, pos_c].set(k[:, 0].astype(cache_k.dtype))
+    cv = cache_v.at[bidx, pos_c].set(v[:, 0].astype(cache_v.dtype))
+
+    if cfg.attn_backend == "fused" and not window:
+        # one Pallas launch for all slots at heterogeneous positions: the
+        # causal mask uses per-sequence q_pos, the per-slot cache length is
+        # kv_len = pos + 1, and start masks any left-pad prefix
+        from repro.kernels.posit_flash_attn import posit_flash_attention
+
+        nm = cfg.numerics
+        o = posit_flash_attention(
+            nm.div_fmt, q.astype(jnp.float32), ck.astype(jnp.float32),
+            cv.astype(jnp.float32), True, 0, 0, 0.0, nm.div_algo,
+            kv_start=start, kv_len=pos + 1, q_pos=pos)
+        out = jnp.einsum("bshk,hkd->bsd", o.astype(dt),
+                         params["wo"].astype(dt))
+        return out, ck, cv
 
     qg = q.reshape(B, 1, KV, G, hd)
     s = jnp.einsum("bkgd,bskd->bkgs", qg[:, 0], ck.astype(dt))
     s = s.astype(jnp.float32) / math.sqrt(hd)
     kpos = jnp.arange(S)
-    mask = kpos[None, None, None, :] <= pos
+    mask = kpos[None, None, None, :] <= pos[:, None, None, None]
     if window:
-        mask &= kpos[None, None, None, :] > pos - window
+        mask &= kpos[None, None, None, :] > pos[:, None, None, None] - window
     if start is not None:
         mask = mask & (kpos[None, None, None, :]
                        >= start[:, None, None, None])

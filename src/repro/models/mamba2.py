@@ -156,6 +156,14 @@ def mamba2_block(params, x, cfg: ModelConfig, state=None, *, decode=False):
 
 
 def init_mamba2_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    """Decode state (conv window, SSM state), one row per batch SLOT.
+
+    Every row is independent and position-free, so the serving engine can
+    run slots at heterogeneous sequence offsets in one step, freeze a
+    row until its (left-padded) prompt starts (``_gate_state``), and
+    replace a single row at admission (``write_cache_slot``) while the
+    other slots keep integrating.
+    """
     conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
     conv = jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype)
     h = jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim), jnp.float32)

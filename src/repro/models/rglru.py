@@ -90,6 +90,10 @@ def rglru_block(params, x, cfg: ModelConfig, state=None, *, decode=False):
 
 
 def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    """Decode state (conv window, LRU hidden), one row per batch SLOT —
+    independent and position-free like the Mamba2 state, so the serving
+    engine can gate, replace, and advance rows per slot (continuous
+    batching; see ``init_mamba2_state``)."""
     w = cfg.lru_width or cfg.d_model
     conv = jnp.zeros((batch, cfg.conv_width - 1, w), dtype)
     h = jnp.zeros((batch, w), jnp.float32)

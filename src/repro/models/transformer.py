@@ -11,6 +11,11 @@ Public entry points:
   init_cache(cfg, batch, seq_len)        -> decode cache pytree
   prefill(params, cfg, tokens, ...)      -> (logits, cache)
   decode_step(params, cfg, cache, token, pos) -> (logits, cache)
+      pos is a per-slot (B,) int32 position vector (scalar broadcasts), so
+      one jitted step serves batch slots at heterogeneous sequence offsets
+  write_cache_slot(cfg, cache, mini, slot) -> cache
+      scatter a freshly prefilled batch=1 cache into one batch slot of a
+      persistent serving cache (continuous-batching admission)
 """
 
 from __future__ import annotations
@@ -275,7 +280,14 @@ def train_loss(params: Params, cfg: ModelConfig, batch):
 
 
 def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
-    """Decode cache pytree for one token step with max context ``seq_len``."""
+    """Decode cache pytree for one token step with max context ``seq_len``.
+
+    The batch axis is a set of persistent SLOTS: nothing in the layout ties
+    a slot to a shared scalar position, so ``decode_step``'s per-slot (B,)
+    position vector can run every slot at its own offset and
+    :func:`write_cache_slot` can re-prefill one slot while the rest keep
+    their state (continuous batching).
+    """
     kv, hd = cfg.n_kv_heads, cfg.head_dim
 
     def kv_cache(S):
@@ -314,6 +326,24 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
     raise ValueError(cfg.family)
 
 
+def write_cache_slot(cfg: ModelConfig, cache, mini, slot):
+    """Scatter a batch=1 ``mini`` cache into batch slot ``slot`` of ``cache``.
+
+    Continuous-batching admission: a new request is prefilled into a fresh
+    batch=1 cache (same ``seq_len``, so every leaf matches except the batch
+    axis) while the persistent batch keeps decoding, then written into the
+    freed slot with one ``dynamic_update_slice`` per leaf.  Covers every
+    family's cache layout: stacked-layer leaves are (L, B, ...) — batch
+    axis 1 — and the hybrid per-layer list holds (B, ...) leaves — axis 0.
+    ``slot`` may be a traced scalar, so one jitted scatter serves any slot.
+    """
+    axis = 0 if cfg.family == "hybrid" else 1
+    return jax.tree.map(
+        lambda c, m: jax.lax.dynamic_update_slice_in_dim(
+            c, m.astype(c.dtype), slot, axis=axis),
+        cache, mini)
+
+
 def _scan_decode(params_stacked, cache_stacked, x, step, cfg: ModelConfig):
     """Layer scan for decode, unrollable for the roofline extractor."""
     if not cfg.scan_layers:
@@ -347,14 +377,29 @@ def _gate_state(new, old, pos, start):
 
 def decode_step(params: Params, cfg: ModelConfig, cache, token, pos,
                 start=None):
-    """One-token decode. token: (B, 1) int32; pos: scalar int32 array.
+    """One-token decode. token: (B, 1) int32; pos: PER-SLOT (B,) int32
+    position vector (a scalar broadcasts — the aligned static-batch case).
+
+    Slot b writes its K/V at cache row pos[b], ropes at phase
+    pos[b] - start[b], and attends rows [start[b], pos[b]] — so a single
+    jitted ``decode_step`` serves batch slots at heterogeneous sequence
+    offsets (continuous batching: one slot can be at token 900 while its
+    neighbor was just admitted at token 12, with no recompilation).
 
     ``start`` is an optional (B,) int32 array of per-sequence start offsets
-    for left-padded ragged batches: cache positions before start[b] are
+    for left-padded ragged prompts: cache positions before start[b] are
     masked out of attention, RoPE positions are relative to start[b], and
     recurrent state is frozen until the sequence starts — pad tokens never
     pollute the KV cache, the recurrent state, or the logits.
     """
+    B = token.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.full((B,), pos, jnp.int32)
+    if start is not None:
+        start = jnp.asarray(start, jnp.int32)
+        if start.ndim == 0:
+            start = jnp.full((B,), start, jnp.int32)
     x = L.embed(params["embed"], token, cfg)
 
     if cfg.family in ("dense", "moe", "vlm"):
@@ -434,14 +479,19 @@ def decode_step(params: Params, cfg: ModelConfig, cache, token, pos,
 
 
 def _ring_decode_attention(p, x, c, pos, ring, cfg: ModelConfig, start=None):
-    """Local-attention decode against a window-sized ring buffer."""
+    """Local-attention decode against a window-sized ring buffer.
+
+    ``pos``/``ring`` are PER-SLOT (B,) int32 vectors: each batch slot
+    writes its own ring row ``ring[b] = pos[b] % W`` and masks by its own
+    absolute positions, so slots at heterogeneous offsets share one step.
+    """
     import math as _m
 
     dt = x.dtype
     B, W, KV, hd = c["k"].shape
     H = cfg.n_heads
     G = H // KV
-    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    positions = pos[:, None]
     if start is not None:
         positions = positions - start[:, None]
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
@@ -449,17 +499,19 @@ def _ring_decode_attention(p, x, c, pos, ring, cfg: ModelConfig, start=None):
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
     q = L.apply_rope(q, positions, cfg.rope_theta)
     k = L.apply_rope(k, positions, cfg.rope_theta)
-    ck = jax.lax.dynamic_update_slice(c["k"], k.astype(c["k"].dtype), (0, ring, 0, 0))
-    cv = jax.lax.dynamic_update_slice(c["v"], v.astype(c["v"].dtype), (0, ring, 0, 0))
+    bidx = jnp.arange(B)
+    ck = c["k"].at[bidx, ring].set(k[:, 0].astype(c["k"].dtype))
+    cv = c["v"].at[bidx, ring].set(v[:, 0].astype(c["v"].dtype))
 
     slot = jnp.arange(W)
-    # absolute position held by each ring slot after this write
-    wrap = (pos // W) * W + slot
-    slot_pos = jnp.where(slot <= ring, wrap, wrap - W)
-    valid = (slot_pos >= 0) & (slot_pos <= pos) & (slot_pos > pos - W)
-    valid = jnp.broadcast_to(valid[None, :], (B, W))
+    # absolute position held by each ring slot after this write (per batch
+    # slot: each row wraps at its own pos[b])
+    wrap = (pos[:, None] // W) * W + slot[None, :]          # (B, W)
+    slot_pos = jnp.where(slot[None, :] <= ring[:, None], wrap, wrap - W)
+    valid = ((slot_pos >= 0) & (slot_pos <= pos[:, None])
+             & (slot_pos > pos[:, None] - W))
     if start is not None:
-        valid = valid & (slot_pos[None, :] >= start[:, None])
+        valid = valid & (slot_pos >= start[:, None])
 
     qg = q.reshape(B, 1, KV, G, hd)
     s = jnp.einsum("bkgd,bskd->bkgs", qg[:, 0], ck.astype(dt)).astype(jnp.float32)

@@ -1,1 +1,1 @@
-from .engine import ServeConfig, ServeEngine  # noqa: F401
+from .engine import Request, Scheduler, ServeConfig, ServeEngine  # noqa: F401

@@ -1,26 +1,77 @@
-"""Batched serving engine: prefill + decode with KV cache.
+"""Continuous-batching serve engine on a slot-based KV cache.
 
-Ragged requests are LEFT-padded into a fixed batch (aligned decoding) and
-carry a per-sequence ``start`` offset: pad positions are masked out of
-attention, RoPE positions are relative to each sequence's first real token,
-and recurrent state stays frozen until the sequence starts — so a short
-prompt generates exactly the same tokens alone or batched with longer ones
-(pad tokens never pollute the KV cache or the logits).
+Architecture
+============
+The engine owns ``B = ServeConfig.max_batch`` persistent decode SLOTS over
+one preallocated cache (``T.init_cache(cfg, B, max_seq)``).  A slot is a
+batch row plus its per-slot serving state; nothing ties slots to a shared
+scalar position, so one jitted ``decode_step`` — the same signature every
+step, no recompilation — serves all slots at heterogeneous sequence
+offsets via per-slot ``int32[B]`` vectors:
 
-Prefill is ONE jitted call over the whole prompt (chunked full-sequence
-attention for the dense family — through the fused posit flash kernel
-under ``attn_backend="fused"`` — and a scanned decode loop for the other
+  ``pos[b]``    next cache row slot b writes (its RoPE phase is
+                ``pos[b] - start[b]``; its attention mask covers cache
+                rows ``[start[b], pos[b]]``)
+  ``start[b]``  first real row of slot b's prompt (left-pad prefix mask)
+
+Slot lifecycle (the :class:`Scheduler`)
+---------------------------------------
+``free -> prefilling -> decoding -> free``
+
+* **Admission**: when a slot is free and the request queue is non-empty,
+  the next request's prompt is left-padded to a power-of-two bucket ``P``,
+  prefilled into a FRESH batch=1 cache in one jitted call, and scattered
+  into the freed slot with :func:`repro.models.transformer.write_cache_slot`
+  — the other slots' cache rows and recurrent state are untouched and keep
+  decoding.  The slot starts with ``start = P - len(prompt)``, ``pos = P``,
+  and its first output token sampled from the prefill logits.
+* **Decode**: every step runs ONE ``decode_step`` over all B slots at
+  their own positions, then ONE vectorized sample (per-slot temperature /
+  PRNG key / step counter — no per-slot Python loop, one (B,) device->host
+  transfer per step for EOS bookkeeping).
+* **Eviction**: a slot frees when its request hits its ``eos_id`` or its
+  per-request ``max_new`` budget (clamped against ``max_seq``).  Freed
+  slots keep decoding garbage (their outputs are ignored and their cache
+  rows are fully overwritten by the next admission's scatter), so the
+  batch shape — and the jit signature — never changes.
+
+Determinism / batch invariance
+------------------------------
+A request's tokens are bit-identical whether it is served solo, in a
+static batch, or admitted mid-flight next to longer requests: pad rows are
+masked out of attention (and never enter recurrent state), RoPE phases are
+relative to ``start``, every per-row reduction sees the same values (exact
+zeros elsewhere), and sampling keys derive from the request — not the slot
+or the step the batch happens to be at (``fold_in(base_key, request_id)``
+then ``fold_in(key, per-request step)``).  Greedy decoding is therefore
+exactly invariant; sampled decoding is invariant for a fixed key id —
+``serve``/``serve_static`` use the stream index unless ``Request.seed``
+pins it, and ``generate`` uses the batch index unless its ``seeds``
+argument pins it, so matching ids (e.g. pinned seeds) reproduce the same
+sampled stream across all three entry points.
+
+Caveat: the hybrid family's ring buffer places a row at ``pos % W``; once
+a sequence WRAPS the window (``pos >= W``) the softmax sum order over ring
+rows can rotate between a solo and an admitted run, so exact bit-equality
+is only guaranteed while ``start + prompt + new tokens <= W`` (the
+window).  Attention/SSM families have no such caveat.
+
+``prefill`` stays ONE jitted call per prompt-length bucket (chunked
+whole-prompt attention for the dense family — through the fused posit
+flash kernel under ``attn_backend="fused"`` — scanned decode for the other
 families; MoE stays scanned so its length-dependent expert capacity keeps
-ragged batching exact), not one dispatch per token.  The decode step is
-the same jitted
-``decode_step`` the multi-pod dry-run lowers, so what we serve here is what
-scales there.
+ragged batching exact).  Under ``attn_backend="fused"`` the decode step's
+attention ALSO runs the fused Pallas kernel, with per-slot
+``q_pos``/``kv_len``/``kv_start`` inputs — per-slot positions end to end.
+The decode step is the same jitted ``decode_step`` the multi-pod dry-run
+lowers, so what we serve here is what scales there.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,35 +81,239 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
 
+def _broadcast(value, n: int, dtype, what: str) -> np.ndarray:
+    """Scalar-or-per-request ServeConfig field -> validated (n,) array."""
+    arr = np.asarray(value, dtype)
+    if arr.ndim == 0:
+        return np.full(n, arr, dtype)
+    if arr.shape != (n,):
+        raise ValueError(f"per-request {what} has shape {arr.shape}; "
+                         f"expected a scalar or ({n},)")
+    return arr
+
+
+def _bucket(n: int, max_seq: int) -> int:
+    """Prompt-length bucket for admission prefills: the smallest power of
+    two >= n (so the jitted prefill has O(log max_seq) signatures), falling
+    back to the exact length when the bucket would not leave room for a
+    single generated token."""
+    p = 8
+    while p < n:
+        p *= 2
+    return p if p + 1 <= max_seq else n
+
+
 @dataclasses.dataclass
 class ServeConfig:
+    """Engine limits + default sampling parameters.
+
+    ``temperature``/``eos_id`` accept a scalar (shared by all requests) or
+    a per-request sequence matching the submitted batch; ``Request`` fields
+    override either.  Build from a model config with :meth:`from_model`
+    (``get_config(name, max_batch=..., max_seq=...)`` carries the serving
+    overrides) instead of mutating instances ad hoc.
+    """
+
     max_batch: int = 8
     max_seq: int = 512
-    temperature: float = 0.0     # 0 = greedy
-    eos_id: int = -1             # -1 = never stop early
+    temperature: Union[float, Sequence[float]] = 0.0  # 0 = greedy
+    eos_id: Union[int, Sequence[int]] = -1            # -1 = never stop early
     seed: int = 0
+
+    @classmethod
+    def from_model(cls, cfg: ModelConfig, **overrides) -> "ServeConfig":
+        kw = dict(max_batch=cfg.serve_max_batch, max_seq=cfg.serve_max_seq)
+        kw.update(overrides)
+        return cls(**kw)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request for the continuous scheduler.
+
+    ``temperature``/``eos_id`` default to the engine's ``ServeConfig``
+    values; ``seed`` pins the sampling-key id (defaults to the request's
+    submission index) so sampled decoding reproduces across runs and batch
+    compositions.
+    """
+
+    tokens: np.ndarray
+    max_new: int = 32
+    temperature: Optional[float] = None
+    eos_id: Optional[int] = None
+    seed: Optional[int] = None
+
+
+class Scheduler:
+    """Slot bookkeeping for continuous batching: a FIFO request queue, slot
+    admission/eviction, and the per-slot host-side state mirrored into the
+    device-side ``pos``/``start``/sampling vectors.
+
+    All per-step bookkeeping is vectorized over slots (numpy fancy
+    indexing); Python iterates only over admission/eviction EVENTS, never
+    over batch elements per token.
+    """
+
+    def __init__(self, n_slots: int, max_out: int):
+        self.n = n_slots
+        self.queue: collections.deque = collections.deque()
+        self.active = np.zeros(n_slots, bool)
+        self.slot_req = np.full(n_slots, -1, np.int64)
+        self.out_buf = np.zeros((n_slots, max(max_out, 1)), np.int32)
+        self.out_len = np.zeros(n_slots, np.int64)
+        self.budget = np.zeros(n_slots, np.int64)
+
+    def free_slots(self) -> np.ndarray:
+        return np.flatnonzero(~self.active)
+
+    def admit(self, slot: int, rid: int, max_new: int) -> None:
+        self.active[slot] = True
+        self.slot_req[slot] = rid
+        self.out_len[slot] = 0
+        self.budget[slot] = max_new
+
+    def record(self, tokens: np.ndarray, eos: np.ndarray):
+        """Append this step's tokens for active slots; return the slots
+        that just finished (EOS or budget).  Vectorized over slots."""
+        act = self.active.copy()
+        self.out_buf[act, self.out_len[act]] = tokens[act]
+        self.out_len[act] += 1
+        finished = act & ((tokens == eos) | (self.out_len >= self.budget))
+        return np.flatnonzero(finished)
+
+    def record_one(self, slot: int, token: int, eos_id: int) -> bool:
+        """Append an admission-time (prefill-sampled) token for one slot;
+        True if the request is already finished (EOS as its first token,
+        or a budget of one)."""
+        self.out_buf[slot, self.out_len[slot]] = token
+        self.out_len[slot] += 1
+        return token == eos_id or self.out_len[slot] >= self.budget[slot]
+
+    def evict(self, slot: int) -> np.ndarray:
+        out = self.out_buf[slot, : self.out_len[slot]].copy()
+        self.active[slot] = False
+        self.slot_req[slot] = -1
+        return out
+
+    @property
+    def any_active(self) -> bool:
+        return bool(self.active.any())
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params,
+                 sc: Optional[ServeConfig] = None):
         self.cfg = cfg
         self.params = params
-        self.sc = sc
+        self.sc = sc if sc is not None else ServeConfig.from_model(cfg)
+        # the persistent cache is donated (argument 1 / 0): it is rebound on
+        # every step, and donation keeps a compiled backend from copying the
+        # whole B x max_seq multi-layer cache per decode step / admission.
+        # _prefill must NOT donate: serve() reuses one zero mini-cache.
         self._decode = jax.jit(
-            lambda p, c, t, i, s: T.decode_step(p, cfg, c, t, i, s))
+            lambda p, c, t, i, s: T.decode_step(p, cfg, c, t, i, s),
+            donate_argnums=1)
         self._prefill = jax.jit(
             lambda p, c, t, s: T.prefill(p, cfg, {"tokens": t}, c, s))
-        self._key = jax.random.PRNGKey(sc.seed)
+        self._write_slot = jax.jit(
+            lambda c, m, b: T.write_cache_slot(cfg, c, m, b),
+            donate_argnums=0)
+        self._sample_full = jax.jit(self._sample_impl)
+        self._sample_greedy = jax.jit(self._greedy_impl)
+        self._base_key = jax.random.PRNGKey(self.sc.seed)
+        self.last_serve_stats = None    # measured counters of the last serve()
+
+    # ------------------------------------------------------------- sampling
+
+    def _masked_logits(self, lg):
+        # last position only; never emit padded-vocab ids
+        lg = lg[:, -1].astype(jnp.float32)
+        return lg.at[:, self.cfg.vocab:].set(-1e30)
+
+    def _greedy_impl(self, lg):
+        return jnp.argmax(self._masked_logits(lg), axis=-1
+                          ).astype(jnp.int32)[:, None]
+
+    def _sample_impl(self, lg, temps, keys, steps):
+        """Vectorized per-slot sampler, one jitted call per step.
+
+        ``lg``: (B, S, V) logits (last position used); ``temps``: (B,)
+        per-slot temperature (<= 0 means greedy); ``keys``: (B, 2) uint32
+        per-REQUEST PRNG keys; ``steps``: (B,) per-request sample counter
+        folded into the key, so a request draws the same stream regardless
+        of which slot or global step it lands on.
+        """
+        lg = self._masked_logits(lg)
+        greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+        def draw(key, step, row, t):
+            k = jax.random.fold_in(key, step)
+            return jax.random.categorical(k, row / jnp.maximum(t, 1e-6))
+
+        sampled = jax.vmap(draw)(keys, steps, lg, temps).astype(jnp.int32)
+        return jnp.where(temps > 0.0, sampled, greedy)[:, None]
+
+    def _sample(self, lg, temps_np, keys, steps):
+        """Jitted sampler dispatch: all-greedy batches skip the per-row
+        categorical (greedy rows argmax identically on both paths, so the
+        shortcut cannot change any request's tokens).
+
+        NB ``jnp.array`` (copying), never ``jnp.asarray``: on the CPU
+        backend ``asarray`` zero-copies host numpy buffers, and the serve
+        loop mutates its per-slot state in place — an async-dispatched
+        step could otherwise read the NEXT step's values (a real, rarely-
+        firing race).
+        """
+        if not np.any(np.asarray(temps_np) > 0.0):
+            return self._sample_greedy(lg)
+        return self._sample_full(lg, jnp.array(temps_np, jnp.float32),
+                                 keys, steps)
+
+    def _request_key(self, rid: int):
+        return jax.random.fold_in(self._base_key, rid)
+
+    # ------------------------------------------------------- static batching
 
     def generate(self, prompts: List[np.ndarray], max_new: int = 32,
-                 extra_inputs: Optional[dict] = None) -> List[np.ndarray]:
-        """prompts: list of 1D int32 token arrays (<= max_batch)."""
+                 temperature=None, eos_id=None,
+                 seeds=None) -> List[np.ndarray]:
+        """Serve one static batch to completion (all prompts admitted
+        together, left-padded to the longest; slots idle after their EOS).
+        prompts: list of 1D int32 token arrays (<= max_batch).  For
+        streams longer than one batch — or mixed lengths that would idle
+        slots — use :meth:`serve`.
+
+        ``temperature``/``eos_id`` override the config defaults for this
+        call (scalar or one per prompt); ``seeds`` pins each prompt's
+        sampling-key id (defaults to the batch index), letting a sampled
+        request reproduce its :meth:`serve` stream (same ``Request.seed``).
+        """
         sc = self.sc
         B = len(prompts)
-        assert B <= sc.max_batch
+        if B == 0:
+            return []
+        if B > sc.max_batch:
+            raise ValueError(
+                f"{B} prompts exceed max_batch={sc.max_batch}; submit them "
+                f"through serve(), which queues onto free slots")
+        if min(len(p) for p in prompts) == 0:
+            raise ValueError("prompts must be non-empty")
         plen = max(len(p) for p in prompts)
-        total = plen + max_new
-        assert total <= sc.max_seq
+        if plen + 1 > sc.max_seq:
+            raise ValueError(
+                f"prompt length {plen} leaves no room to generate within "
+                f"max_seq={sc.max_seq}")
+        if max_new < 1:
+            return [np.zeros(0, np.int32) for _ in prompts]
+        # per-batch max-token clamp against the cache size
+        max_new = min(max_new, sc.max_seq - plen)
+
+        temps = _broadcast(sc.temperature if temperature is None
+                           else temperature, B, np.float32, "temperature")
+        eos = _broadcast(sc.eos_id if eos_id is None else eos_id, B,
+                         np.int32, "eos_id")
+        key_ids = range(B) if seeds is None else seeds
+        keys = jnp.stack([self._request_key(i) for i in key_ids])
 
         # left-pad to align decode positions; start[b] = first real slot,
         # so pad positions can be masked out downstream
@@ -72,33 +327,201 @@ class ServeEngine:
         cache = T.init_cache(self.cfg, B, sc.max_seq)
 
         # whole-prompt prefill in one jitted call (chunked attention for
-        # dense/moe, scanned decode for the rest) — not plen dispatches
+        # dense, scanned decode for the rest) — not plen dispatches
         lg, cache = self._prefill(self.params, cache, jnp.asarray(toks),
                                   start)
 
-        out = [list() for _ in range(B)]
+        steps = jnp.zeros((B,), jnp.int32)
+        cur = self._sample(lg, temps, keys, steps)
+        emitted = []
         done = np.zeros(B, bool)
-        cur = self._sample(lg)
         for step in range(max_new):
-            for i in range(B):
-                if not done[i]:
-                    t = int(cur[i, 0])
-                    out[i].append(t)
-                    if t == sc.eos_id:
-                        done[i] = True
-            if done.all():
+            tok_h = np.asarray(cur[:, 0])   # ONE (B,) transfer per step
+            emitted.append(tok_h)
+            done |= tok_h == eos            # vectorized EOS tracking
+            if done.all() or step == max_new - 1:
                 break
-            lg, cache = self._decode(self.params, cache, cur,
-                                     jnp.int32(plen + step), start)
-            cur = self._sample(lg)
-        return [np.asarray(o, np.int32) for o in out]
+            pos = jnp.full((B,), plen + step, jnp.int32)
+            lg, cache = self._decode(self.params, cache, cur, pos, start)
+            steps = steps + 1
+            cur = self._sample(lg, temps, keys, steps)
+        mat = np.stack(emitted, axis=1)     # (B, <=max_new)
+        outs = []
+        for i in range(B):
+            hits = np.flatnonzero(mat[i] == eos[i])
+            end = hits[0] + 1 if hits.size else mat.shape[1]
+            outs.append(mat[i, :end].astype(np.int32))
+        return outs
 
-    def _sample(self, lg):
-        lg = lg[:, -1:].astype(jnp.float32)
-        # never emit padded-vocab ids
-        lg = lg.at[..., self.cfg.vocab :].set(-1e30)
-        if self.sc.temperature <= 0:
-            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        self._key, k = jax.random.split(self._key)
-        return jax.random.categorical(k, lg / self.sc.temperature, axis=-1
-                                      ).astype(jnp.int32)
+    def serve_static(self, requests: Sequence,
+                     max_new: int = 32) -> List[np.ndarray]:
+        """Static-batch baseline: group requests into ``max_batch`` batches
+        in arrival order and run each batch to completion with the group's
+        LARGEST budget — a request only stops early at its own ``eos_id``,
+        so short-budget members over-generate and slots idle.  That waste
+        is exactly the scheduler-less behavior :meth:`serve` replaces (this
+        stays as the A/B side of the decode-throughput benchmark and
+        launcher).  Per-request ``temperature``/``eos_id``/``seed`` are
+        honored; per-request ``max_new`` is not (by construction)."""
+        reqs = [r if isinstance(r, Request)
+                else Request(np.asarray(r, np.int32), max_new=max_new)
+                for r in requests]
+        n = len(reqs)
+        def_temp = _broadcast(self.sc.temperature, n, np.float32,
+                              "temperature")
+        def_eos = _broadcast(self.sc.eos_id, n, np.int32, "eos_id")
+        outs: List[np.ndarray] = []
+        for i in range(0, n, self.sc.max_batch):
+            group = list(enumerate(reqs[i:i + self.sc.max_batch], start=i))
+            outs += self.generate(
+                [r.tokens for _, r in group],
+                max_new=max(r.max_new for _, r in group),
+                temperature=[r.temperature if r.temperature is not None
+                             else def_temp[j] for j, r in group],
+                eos_id=[r.eos_id if r.eos_id is not None else def_eos[j]
+                        for j, r in group],
+                seeds=[r.seed if r.seed is not None else j
+                       for j, r in group])
+        return outs
+
+    # --------------------------------------------------- continuous batching
+
+    def serve(self, requests: Sequence, max_new: int = 32,
+              ) -> List[np.ndarray]:
+        """Serve a request stream with continuous batching.
+
+        ``requests``: a sequence of :class:`Request` or raw 1D int32 token
+        arrays (wrapped with ``max_new`` and the config's sampling
+        defaults).  Any number of requests — they queue onto the engine's
+        ``max_batch`` slots, each slot freed and re-admitted the moment its
+        request finishes.  Returns outputs in request order, and leaves
+        measured scheduler counters in ``self.last_serve_stats``
+        (decode_steps, slot_steps, active_slot_steps, admissions).
+        """
+        sc = self.sc
+        B = sc.max_batch
+        reqs: List[Request] = []
+        for r in requests:
+            if not isinstance(r, Request):
+                r = Request(np.asarray(r, np.int32), max_new=max_new)
+            reqs.append(r)
+        n = len(reqs)
+        if n == 0:
+            return []
+
+        # validation + per-request max-token clamp (satellites: clean
+        # ValueError on overflow, never a bare assert)
+        plans = []                       # (bucket P, start offset, budget)
+        for i, r in enumerate(reqs):
+            plen = len(r.tokens)
+            if plen == 0:
+                raise ValueError(f"request {i} has an empty prompt")
+            if plen + 1 > sc.max_seq:
+                raise ValueError(
+                    f"request {i} prompt length {plen} cannot fit "
+                    f"max_seq={sc.max_seq} with at least one new token")
+            if r.max_new < 1:
+                raise ValueError(f"request {i} has max_new={r.max_new} < 1")
+            # the budget clamp must match generate()'s (max_seq - plen) so a
+            # request emits the same number of tokens either way: when the
+            # power-of-two bucket's pad rows would eat into that budget,
+            # admit at the exact prompt length instead (one extra jit
+            # signature, but no silent truncation)
+            budget = min(r.max_new, sc.max_seq - plen)
+            P = _bucket(plen, sc.max_seq)
+            if sc.max_seq - P < budget:
+                P = plen
+            plans.append((P, P - plen, budget))
+
+        def_temp = _broadcast(sc.temperature, n, np.float32, "temperature")
+        def_eos = _broadcast(sc.eos_id, n, np.int32, "eos_id")
+        req_temp = np.array([r.temperature if r.temperature is not None
+                             else def_temp[i] for i, r in enumerate(reqs)],
+                            np.float32)
+        req_eos = np.array([r.eos_id if r.eos_id is not None
+                            else def_eos[i] for i, r in enumerate(reqs)],
+                           np.int32)
+
+        cache = T.init_cache(self.cfg, B, sc.max_seq)
+        # zero batch=1 cache reused by every admission (prefill is pure, so
+        # the template never holds a previous request's rows)
+        mini_zero = T.init_cache(self.cfg, 1, sc.max_seq)
+        sched = Scheduler(B, max(p[2] for p in plans))
+        sched.queue.extend(range(n))
+        outputs: List[Optional[np.ndarray]] = [None] * n
+
+        # device-facing per-slot state (host mirrors, shipped each step)
+        pos = np.zeros(B, np.int32)
+        start = np.zeros(B, np.int32)
+        cur = np.zeros((B, 1), np.int32)
+        temps = np.zeros(B, np.float32)
+        eos = np.full(B, -1, np.int32)
+        keys = np.zeros((B, 2), np.uint32)
+        steps = np.zeros(B, np.int32)
+
+        def admit(slot: int, rid: int) -> None:
+            nonlocal cache
+            P, s0, budget = plans[rid]
+            r = reqs[rid]
+            toks = np.zeros((1, P), np.int32)
+            toks[0, s0:] = r.tokens
+            # prefill into a fresh (zero) batch=1 cache, then scatter it
+            # into the freed slot — the other slots keep their rows and
+            # state and never stop decoding
+            lg, mini = self._prefill(self.params, mini_zero,
+                                     jnp.asarray(toks),
+                                     jnp.asarray([s0], jnp.int32))
+            cache = self._write_slot(cache, mini, jnp.int32(slot))
+            key_r = self._request_key(r.seed if r.seed is not None else rid)
+            t0 = self._sample(lg, req_temp[rid:rid + 1],
+                              key_r[None], jnp.zeros((1,), jnp.int32))
+            pos[slot], start[slot] = P, s0
+            temps[slot], eos[slot] = req_temp[rid], req_eos[rid]
+            keys[slot], steps[slot] = np.asarray(key_r), 1
+            tok = int(np.asarray(t0)[0, 0])
+            cur[slot] = tok
+            sched.admit(slot, rid, budget)
+            if sched.record_one(slot, tok, int(req_eos[rid])):
+                outputs[rid] = sched.evict(slot)
+                temps[slot] = 0.0   # keep the all-greedy sampler fast path
+
+        decode_steps = active_slot_steps = 0
+        while sched.queue or sched.any_active:
+            for slot in sched.free_slots():
+                if not sched.queue:
+                    break
+                admit(int(slot), sched.queue.popleft())
+            if not sched.any_active:
+                continue    # admitted requests may finish at token 0
+            decode_steps += 1
+            active_slot_steps += int(sched.active.sum())
+
+            # ONE decode step for ALL slots at their own positions + ONE
+            # vectorized sample; a single (B,) transfer back per step.
+            # jnp.array COPIES each host mirror at hand-off: jnp.asarray
+            # would zero-copy alias the numpy buffers on CPU, racing the
+            # async dispatch against the in-place updates below / in admit
+            lg, cache = self._decode(self.params, cache, jnp.array(cur),
+                                     jnp.array(pos), jnp.array(start))
+            tok_d = self._sample(lg, temps, jnp.array(keys),
+                                 jnp.array(steps))
+            np.minimum(pos + 1, sc.max_seq - 1, out=pos)
+            steps += 1
+            tok_h = np.asarray(tok_d)[:, 0]
+            cur = tok_h[:, None].astype(np.int32)
+            for slot in sched.record(tok_h, eos):
+                rid = int(sched.slot_req[slot])
+                outputs[rid] = sched.evict(slot)
+                # a parked sampled slot would otherwise disable the
+                # all-greedy sampler shortcut for the rest of the stream
+                temps[slot] = 0.0
+
+        # measured scheduler counters (e.g. the decode-throughput benchmark
+        # reports real slot utilization from these, not an estimate)
+        self.last_serve_stats = {
+            "decode_steps": decode_steps,
+            "slot_steps": decode_steps * B,
+            "active_slot_steps": active_slot_steps,
+            "admissions": n,
+        }
+        return outputs

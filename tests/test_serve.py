@@ -1,4 +1,5 @@
-"""Serving engine: determinism, batching, stop conditions."""
+"""Serving engine: determinism, batching, stop conditions, and
+continuous-batching (slot admission/eviction) invariance."""
 
 import jax
 import numpy as np
@@ -6,7 +7,27 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import Request, ServeConfig, ServeEngine
+
+# a three-request stream that forces mid-flight admission on 2 slots:
+# request 1 has a small budget, so its slot frees while request 0 is still
+# decoding and request 2 is admitted next to it at a different offset
+_P0 = np.array([3, 5, 7], np.int32)
+_P1 = np.array([11, 13, 2, 9, 4, 6, 8], np.int32)
+_P2 = np.array([17, 19, 23], np.int32)
+_STREAM = [(_P0, 6), (_P1, 2), (_P2, 4)]
+
+
+def _assert_continuous_matches_solo(eng):
+    """Every request in the stream decodes bit-identically to its solo run,
+    and the whole heterogeneous-position serve uses ONE decode trace."""
+    solos = [eng.generate([p], max_new=m)[0] for p, m in _STREAM]
+    before = eng._decode._cache_size()
+    outs = eng.serve([Request(p, max_new=m) for p, m in _STREAM])
+    assert eng._decode._cache_size() - before == 1, \
+        "heterogeneous slot positions must not retrace decode_step"
+    for solo, out in zip(solos, outs):
+        np.testing.assert_array_equal(solo, out)
 
 
 @pytest.fixture(scope="module")
@@ -103,3 +124,139 @@ def test_encdec_generation():
     eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=64))
     outs = eng.generate([np.array([4, 5], np.int32)], max_new=4)
     assert len(outs[0]) == 4
+
+
+# =====================================================================
+# continuous batching (slot scheduler)
+# =====================================================================
+
+
+def test_continuous_batching_dense():
+    """A request admitted mid-flight into a freed slot — while another
+    slot is still decoding at a much larger offset — produces bit-identical
+    tokens to its solo run, with one jitted decode_step trace."""
+    cfg = get_config("smollm-360m", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=64))
+    _assert_continuous_matches_solo(eng)
+
+
+def test_continuous_batching_fused_backend():
+    """Same invariance under attn_backend='fused': prefill AND per-slot
+    decode run the posit flash Pallas kernel (q_pos/kv_len/kv_start)."""
+    cfg = get_config("smollm-360m", smoke=True, fused=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=64))
+    _assert_continuous_matches_solo(eng)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("fused", [False, True], ids=["xla", "fused"])
+@pytest.mark.parametrize("arch", ["olmoe-1b-7b", "mamba2-2.7b",
+                                  "recurrentgemma-2b"])
+def test_continuous_batching_other_families(arch, fused):
+    """MoE (per-token capacity dispatch), SSM and hybrid (per-slot
+    recurrent state + ring buffer) keep batch invariance under slot
+    admission/eviction, on both the xla and fused numerics backends
+    (fused = posit SRT division kernels + the flash kernel where the
+    family has full-context attention)."""
+    cfg = get_config(arch, smoke=True, fused=fused)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=64))
+    _assert_continuous_matches_solo(eng)
+
+
+def test_continuous_matches_static_batch(engine):
+    """A stream that fits one static batch: serve() == generate()."""
+    prompts = [_P0, _P1]
+    static = engine.generate(prompts, max_new=4)
+    cont = engine.serve([Request(p, max_new=4) for p in prompts])
+    for s, c in zip(static, cont):
+        np.testing.assert_array_equal(s, c)
+
+
+def test_serve_queue_longer_than_slots(engine):
+    """More requests than slots: everything completes, in request order."""
+    rng = np.random.default_rng(1)
+    reqs = [Request(rng.integers(1, engine.cfg.vocab, size=int(n)).astype(
+        np.int32), max_new=int(m))
+        for n, m in [(3, 4), (6, 2), (2, 5), (9, 3), (4, 2), (5, 3), (3, 2)]]
+    outs = engine.serve(reqs)
+    assert len(outs) == len(reqs)
+    for r, o in zip(reqs, outs):
+        assert o is not None and 1 <= len(o) <= r.max_new
+        solo = engine.generate([r.tokens], max_new=r.max_new)[0]
+        np.testing.assert_array_equal(solo, o)
+
+
+def test_per_request_eos_and_temperature(engine):
+    """Per-request eos_id stops one request early without touching its
+    neighbors; per-request temperature arrays are accepted end to end."""
+    solo = engine.generate([_P0], max_new=6)[0]
+    outs = engine.serve([Request(_P0, max_new=6, eos_id=int(solo[0])),
+                         Request(_P2, max_new=4)])
+    np.testing.assert_array_equal(outs[0], solo[:1])   # stops AT its eos
+    np.testing.assert_array_equal(
+        outs[1], engine.generate([_P2], max_new=4)[0])
+
+    sc = ServeConfig(max_batch=2, max_seq=128, temperature=[0.0, 0.8],
+                     eos_id=[-1, -1])
+    eng2 = ServeEngine(engine.cfg, engine.params, sc)
+    a, b = eng2.generate([_P0, _P2], max_new=3)
+    np.testing.assert_array_equal(a, engine.generate([_P0], max_new=3)[0])
+    assert len(b) == 3 and (b < engine.cfg.vocab).all()
+
+
+def test_serve_static_matches_serve_with_per_request_eos(engine):
+    """serve_static honors per-request eos_id/temperature (the group-max
+    budget slack is the measured waste, but early-stop still applies)."""
+    solo = engine.generate([_P0], max_new=6)[0]
+    reqs = [Request(_P0, max_new=6, eos_id=int(solo[1])),
+            Request(_P2, max_new=3)]
+    static = engine.serve_static(reqs)
+    cont = engine.serve(reqs)
+    np.testing.assert_array_equal(static[0], solo[:2])   # stopped at eos
+    np.testing.assert_array_equal(static[0], cont[0])
+    np.testing.assert_array_equal(static[1][:3], cont[1])
+
+
+def test_generate_errors_and_clamp(engine):
+    sc = engine.sc
+    too_many = [np.array([1, 2], np.int32)] * (sc.max_batch + 1)
+    with pytest.raises(ValueError, match="max_batch"):
+        engine.generate(too_many)
+    with pytest.raises(ValueError, match="non-empty"):
+        engine.generate([np.zeros(0, np.int32)])
+    long_prompt = np.arange(1, sc.max_seq + 1, dtype=np.int32) % 100 + 1
+    with pytest.raises(ValueError, match="max_seq"):
+        engine.generate([long_prompt])
+    # per-batch max-token clamp: plen + max_new never exceeds max_seq
+    p = np.array([3, 5, 7], np.int32)
+    out = engine.generate([p], max_new=10 * sc.max_seq)[0]
+    assert len(out) == sc.max_seq - len(p)
+    # max_new=0 keeps the historical behavior: empty outputs, no crash
+    assert engine.generate([p], max_new=0)[0].size == 0
+
+
+def test_serve_errors_and_clamp(engine):
+    sc = engine.sc
+    long_prompt = np.arange(1, sc.max_seq + 1, dtype=np.int32) % 100 + 1
+    with pytest.raises(ValueError, match="max_seq"):
+        engine.serve([Request(long_prompt)])
+    with pytest.raises(ValueError, match="empty"):
+        engine.serve([Request(np.zeros(0, np.int32))])
+    with pytest.raises(ValueError, match="max_new"):
+        engine.serve([Request(np.array([1], np.int32), max_new=0)])
+    # per-REQUEST max-token clamp, and it must MATCH generate()'s clamp
+    # even when the prompt's power-of-two admission bucket would leave
+    # less room than the prompt itself (exact-length admission fallback)
+    p = np.array([3, 5, 7], np.int32)
+    out = engine.serve([Request(p, max_new=10 * sc.max_seq)])[0]
+    solo = engine.generate([p], max_new=10 * sc.max_seq)[0]
+    assert len(out) == len(solo) == sc.max_seq - len(p)
+    np.testing.assert_array_equal(out, solo)
+    long_p = np.arange(1, 100, dtype=np.int32)  # bucket 128 == max_seq
+    out = engine.serve([Request(long_p, max_new=sc.max_seq)])[0]
+    solo = engine.generate([long_p], max_new=sc.max_seq)[0]
+    assert len(out) == len(solo) == sc.max_seq - len(long_p)
+    np.testing.assert_array_equal(out, solo)
