@@ -622,3 +622,94 @@ def decode_throughput_rows():
                  f"invariance_match={ok} (continuous AND static vs solo, "
                  f"{len(reqs)} requests bit-identical)"))
     return rows
+
+
+def paged_kv_rows():
+    """Paged KV cache vs dense slots: throughput, reserved HBM per
+    request, and the prefix-cache hit rate — plus the invariance gate.
+
+    The same shared-prefix stream (half the requests repeat or fork one
+    long system prompt) is served by a dense engine and a paged engine
+    (refcounted block pool + copy-on-write prefix sharing).  Reserved
+    bytes: the dense layout pins ``max_seq`` KV rows per slot for the
+    whole stream; the paged layout's peak is MEASURED live blocks, so a
+    request costs ceil(tokens/block) pages — scaling with what it wrote,
+    not with ``max_seq``.  ``invariance_match`` bit-compares every paged
+    output against dense serve AND its solo run; run.py exits nonzero on
+    ``match``+``False``, so losing dense/paged/prefix-shared bit-identity
+    fails CI.
+    """
+    import time as _time
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serve import Request, ServeConfig, ServeEngine
+
+    cfg = get_config("smollm-360m", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    slots, max_seq, bs = 4, 96, 8
+    dense = ServeEngine(cfg, params,
+                        ServeConfig(max_batch=slots, max_seq=max_seq))
+    paged = ServeEngine(cfg, params,
+                        ServeConfig(max_batch=slots, max_seq=max_seq,
+                                    kv_layout="paged", block_size=bs))
+
+    # shared-prefix stream: one 24-token "system prompt" reused verbatim
+    # or forked at a block boundary by half the requests
+    rng = np.random.default_rng(0)
+    sys_p = rng.integers(1, cfg.vocab, size=24).astype(np.int32)
+    reqs = []
+    for i in range(3 * slots):
+        if i % 4 < 2:
+            tail = rng.integers(1, cfg.vocab,
+                                size=int(rng.integers(2, 8))).astype(np.int32)
+            p = np.concatenate([sys_p, tail])
+        else:
+            p = rng.integers(1, cfg.vocab,
+                             size=int(rng.integers(3, 16))).astype(np.int32)
+        reqs.append(Request(p, max_new=int(rng.choice([4, 6, 8]))))
+
+    dense.serve(reqs), paged.serve(reqs)        # warm the jit caches
+    t0 = _time.perf_counter()
+    douts = dense.serve(reqs)
+    dense_s = _time.perf_counter() - t0
+    t0 = _time.perf_counter()
+    pouts = paged.serve(reqs)
+    paged_s = _time.perf_counter() - t0
+    st = paged.last_serve_stats
+
+    # bf16 K+V row bytes per token across layers
+    row_b = cfg.n_layers * 2 * cfg.n_kv_heads * cfg.head_dim * 2
+    dense_resv = slots * max_seq * row_b            # pinned for the stream
+    paged_resv = st["peak_blocks_in_use"] * bs * row_b
+    tokens = sum(len(o) for o in pouts)
+
+    rows = [
+        ("paged_kv/dense_serve", dense_s * 1e6,
+         f"{tokens / dense_s:.1f} tok/s requests={len(reqs)} slots={slots} "
+         f"reserved_bytes_per_request={dense_resv // len(reqs)}"),
+        ("paged_kv/paged_serve", paged_s * 1e6,
+         f"{tokens / paged_s:.1f} tok/s requests={len(reqs)} slots={slots} "
+         f"block_size={bs} peak_blocks={st['peak_blocks_in_use']} "
+         f"reserved_bytes_per_request={paged_resv // len(reqs)}"),
+        ("paged_kv/prefix_cache", float("nan"),
+         f"hit_rate={st['prefix_hit_rate']:.0%} "
+         f"hit_tokens={st['prefix_hit_tokens']} "
+         f"prefill_tokens={st['prefill_tokens']} "
+         f"prompt_tokens={st['prompt_tokens']} "
+         f"shared_blocks={st['shared_blocks']} "
+         f"owned_blocks={st['owned_blocks']}"),
+    ]
+
+    ok = st["prefix_hit_tokens"] > 0
+    ok &= st["prefill_tokens"] + st["prefix_hit_tokens"] \
+        == st["prompt_tokens"]
+    for r, d, p in zip(reqs, douts, pouts):
+        solo = dense.generate([r.tokens], max_new=r.max_new)[0]
+        ok &= bool((d == p).all()) and bool((solo == p).all())
+    rows.append(("paged_kv/invariance", float("nan"),
+                 f"invariance_match={ok} (paged vs dense vs solo, "
+                 f"{len(reqs)} shared-prefix requests bit-identical; "
+                 f"prefill skipped {st['prefix_hit_tokens']} of "
+                 f"{st['prompt_tokens']} prompt tokens)"))
+    return rows

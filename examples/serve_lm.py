@@ -3,8 +3,16 @@ posit-quantized KV storage, using the same decode_step the multi-pod
 dry-run lowers.
 
     PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --kv-layout paged \\
+        --block-size 8
+
+With ``--kv-layout paged`` the attention KV lives in a refcounted block
+pool; the stream below front-loads a shared system prompt, so repeated
+admissions serve their prefix from shared pages (copy-on-write) instead
+of re-prefilling — outputs stay bit-identical to the dense layout.
 """
 
+import argparse
 import time
 
 import jax
@@ -16,25 +24,49 @@ from repro.serve import Request, ServeConfig, ServeEngine
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kv-layout", choices=["dense", "paged"],
+                    default="dense")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged; power of two in "
+                         "[8, 128])")
+    args = ap.parse_args()
+
     cfg = get_config("smollm-360m", smoke=True, max_batch=4, max_seq=160)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
 
     for kv_fmt in (None, "posit16"):
         c = cfg.with_numerics(kv_cache_format=kv_fmt) if kv_fmt else cfg
-        eng = ServeEngine(c, params, ServeConfig.from_model(c))
+        eng = ServeEngine(c, params, ServeConfig.from_model(
+            c, kv_layout=args.kv_layout, block_size=args.block_size))
         rng = np.random.default_rng(0)
         # a stream twice as long as the slot count: short requests finish,
-        # free their slot, and the queue admits the next one mid-flight
-        reqs = [Request(rng.integers(1, c.vocab, size=n).astype(np.int32),
-                        max_new=m)
-                for n, m in ((5, 24), (9, 8), (3, 24), (7, 12),
-                             (4, 16), (11, 8), (6, 24), (8, 10))]
+        # free their slot, and the queue admits the next one mid-flight.
+        # Every even request opens with the same 16-token system prompt —
+        # under the paged layout those prefixes share pages (note: KV
+        # quantization disables sharing; the pool still pages per block)
+        sys_p = rng.integers(1, c.vocab, size=16).astype(np.int32)
+        reqs = []
+        for i, (n, m) in enumerate(((5, 24), (9, 8), (3, 24), (7, 12),
+                                    (4, 16), (11, 8), (6, 24), (8, 10))):
+            p = rng.integers(1, c.vocab, size=n).astype(np.int32)
+            if i % 2 == 0:
+                p = np.concatenate([sys_p, p])
+            reqs.append(Request(p, max_new=m))
         t0 = time.perf_counter()
         outs = eng.serve(reqs)
         dt = time.perf_counter() - t0
         total = sum(len(o) for o in outs)
         print(f"kv_format={kv_fmt or 'bf16':8s}: {len(reqs)} requests, "
-              f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s, slots=4)")
+              f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s, "
+              f"slots=4, kv_layout={args.kv_layout})")
+        st = eng.last_serve_stats
+        if st.get("kv_layout") == "paged":
+            print(f"  paged: peak_blocks="
+                  f"{st['peak_blocks_in_use']}/{st['pool_blocks']} "
+                  f"prefix_hit_rate={st['prefix_hit_rate']:.0%} "
+                  f"({st['prefix_hit_tokens']}/{st['prompt_tokens']} "
+                  f"prompt tokens from shared pages)")
         for i, o in enumerate(outs[:2]):
             print(f"  req{i}: {reqs[i].tokens.tolist()} -> {o[:10].tolist()}...")
 

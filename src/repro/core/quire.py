@@ -109,6 +109,37 @@ def quire_to_posit(fmt: PositFormat, q: BitVec):
                         is_zero, jnp.zeros_like(is_zero))
 
 
+def fixed_order_rowsum(x, axis: int = -1, keepdims: bool = True):
+    """Strictly sequential (left-to-right) float sum along ``axis``.
+
+    ``jnp.sum``'s reduction ORDER is a compiler choice that varies with
+    shape, padding and backend — which is exactly how the posit64 softmax
+    picked up a 1-ulp emulate-vs-fused gap (the fused kernel reduced a
+    padded tile, the emulate path an unpadded one, and the two trees
+    grouped differently).  This helper pins the order to plain
+    left-to-right accumulation: any two call sites that see the same
+    values in the same lane order produce the same bits, and appended
+    exact zeros are additive identities at every partial sum, so padded
+    and unpadded rows agree bit-for-bit.
+
+    This is the deterministic-order seam toward the quire: the exact
+    accumulator above (:func:`fused_dot`) is order-INDEPENDENT, which is
+    the end state; until a wide quire covers f32 attention/softmax rows,
+    fixed order is the cheap contract that keeps every softmax backend
+    bit-identical (posit64 included).
+    """
+    x = jnp.asarray(x)
+    ax = axis % x.ndim
+    xt = jnp.moveaxis(x, ax, 0)
+
+    def body(j, acc):
+        return acc + jax.lax.dynamic_index_in_dim(xt, j, 0, keepdims=False)
+
+    acc = jax.lax.fori_loop(0, xt.shape[0], body,
+                            jnp.zeros(xt.shape[1:], x.dtype))
+    return jnp.expand_dims(acc, ax) if keepdims else acc
+
+
 def fused_dot(fmt: PositFormat, pa, pb, axis: int = -1):
     """Exact posit dot product along ``axis`` with a single final rounding."""
     pa = jnp.moveaxis(pa.astype(_U32), axis, 0)

@@ -36,12 +36,12 @@ The pattern-level :func:`posit_div` is the one n <= 32 API (wide patterns do
 not fit a uint32 word); the float-in/float-out fused entry points accept
 every planned format including posit64.
 
-One caveat on the softmax kernel: its f32 row SUM runs over the padded tile,
-and f32 addition order is compilation-dependent, so the sum can differ from
-the emulate path's unpadded ``jnp.sum`` by an ulp.  Formats with F < 23
-absorb that in quantization (the bit-identity sweeps hold); posit64 keeps
-every f32 mantissa bit, so its softmax agrees to 1 f32 ulp while the
-division stage itself stays bit-exact.
+The softmax kernel's f32 row SUM runs in FIXED left-to-right order
+(:func:`repro.core.quire.fixed_order_rowsum`), as does the emulate path's:
+appended pad zeros are additive identities at every partial sum, so the
+padded in-kernel reduction is bit-identical to the unpadded emulate one —
+for every format including posit64, which keeps all f32 mantissa bits and
+used to disagree by 1 ulp when the two sums were free-order ``jnp.sum``.
 
 Padding convention: dividend lanes pad with 0, **divisor lanes pad with 1**
 (float 1.0, posit pattern ``0b01…0``), so padding computes ``0 / 1 = 0``

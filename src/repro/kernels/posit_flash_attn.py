@@ -95,10 +95,19 @@ def _minpos_eps(fmt: PositFormat) -> float:
     return float(2.0 ** -min(fmt.max_scale, 126))
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, ks_ref, kl_ref, qp_ref, *out_refs,
+def _flash_kernel(*refs,
                   fmt: PositFormat, variant: str, causal: bool, window: int,
                   q_offset: int, scale: float, bq: int, bk: int, nk: int,
-                  sk_valid: int, save_res: bool):
+                  sk_valid: int, save_res: bool, pages: int = 0,
+                  n_heads: int = 0, kv_heads: int = 0, group: int = 1,
+                  num_blocks: int = 0, bt_cols: int = 0):
+    if pages:
+        # paged mode: k/v refs are the WHOLE block pools in kernel layout
+        # (num_blocks * KV, block_size, hdp) plus this sequence's block
+        # table row; each kv tile is gathered as ``pages`` pool pages
+        q_ref, k_ref, v_ref, bt_ref, ks_ref, kl_ref, qp_ref, *out_refs = refs
+    else:
+        q_ref, k_ref, v_ref, ks_ref, kl_ref, qp_ref, *out_refs = refs
     q = q_ref[0]                                    # (bq, hdp) f32
     kv_start = ks_ref[0, 0]                         # scalar int32 (pad prefix)
     kv_len = jnp.minimum(kl_ref[0, 0], sk_valid)    # per-sequence valid rows
@@ -109,11 +118,35 @@ def _flash_kernel(q_ref, k_ref, v_ref, ks_ref, kl_ref, qp_ref, *out_refs,
     m0 = jnp.full((bq, 1), _NEG_INF, dtype=jnp.float32)
     l0 = jnp.zeros((bq, 1), dtype=jnp.float32)
     a0 = jnp.zeros(q.shape, dtype=jnp.float32)
+    # hoisted out of the loop body: program_id is resolved at kernel-body
+    # level (the interpreter substitutes it; inside the fori_loop jaxpr it
+    # would not lower)
+    kvh = (pl.program_id(0) % n_heads) // group if pages else 0
 
     def kv_step(j, carry):
         m, l, acc = carry
-        kj = k_ref[0, pl.ds(j * bk, bk), :]         # (bk, hdp)
-        vj = v_ref[0, pl.ds(j * bk, bk), :]
+        if pages:
+            # Gather this tile's kv rows page by page: logical kv tile j
+            # covers table columns [j*pages, (j+1)*pages); each column's
+            # block id selects a pool page for this sequence's kv head.
+            # Because block_size divides bk and the virtual Sk equals the
+            # dense max_seq, the assembled (bk, hdp) tile carries the SAME
+            # values in the SAME lane order as the dense-layout load — the
+            # (m, l, acc) recurrence below is bit-identical to dense.
+            pk, pv = [], []
+            for t in range(pages):
+                col = jnp.minimum(j * pages + t, bt_cols - 1)
+                bid = pl.load(bt_ref, (slice(None), pl.ds(col, 1)))[0, 0]
+                row = jnp.clip(bid, 0, num_blocks - 1) * kv_heads + kvh
+                pk.append(pl.load(
+                    k_ref, (pl.ds(row, 1), slice(None), slice(None)))[0])
+                pv.append(pl.load(
+                    v_ref, (pl.ds(row, 1), slice(None), slice(None)))[0])
+            kj = jnp.concatenate(pk, axis=0) if pages > 1 else pk[0]
+            vj = jnp.concatenate(pv, axis=0) if pages > 1 else pv[0]
+        else:
+            kj = k_ref[0, pl.ds(j * bk, bk), :]     # (bk, hdp)
+            vj = v_ref[0, pl.ds(j * bk, bk), :]
         s = jax.lax.dot_general(
             q, kj, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale     # (bq, bk)
@@ -166,13 +199,33 @@ def _to_kernel_layout(x, Sp, hdp):
     return jnp.pad(xf, ((0, 0), (0, Sp - S), (0, hdp - hd)))
 
 
+def _pool_kernel_layout(p, hdp):
+    """Transpose/pad a (num_blocks, block_size, KV, hd) block pool into the
+    (num_blocks * KV, block_size, hdp) kernel layout: block ``b``'s page
+    for kv head ``h`` is leading row ``b * KV + h``."""
+    NB, bs, KV, hd = p.shape
+    pf = jnp.transpose(p.astype(jnp.float32), (0, 2, 1, 3)).reshape(
+        NB * KV, bs, hd)
+    return jnp.pad(pf, ((0, 0), (0, 0), (0, hdp - hd)))
+
+
 def _flash_call(fmt, q, k, v, causal, window, q_offset, scale, variant,
                 interpret, block_q, block_k, vmem_limit_bytes, save_res,
-                kv_start, kv_len=None, q_pos=None):
+                kv_start, kv_len=None, q_pos=None, block_tables=None):
     if interpret is None:
         interpret = not _on_tpu()
     B, Sq, H, hd = q.shape
-    _, Sk, KV, _ = k.shape
+    paged = block_tables is not None
+    if paged:
+        # k/v are global block pools (num_blocks, block_size, KV, hd);
+        # the virtual kv length is the table width times the block size,
+        # which the engine keeps equal to the dense max_seq — so the tile
+        # geometry (bq, bk, nk) below matches the dense layout exactly and
+        # the kv scan accumulates bit-identically.
+        NB, bsz, KV, _ = k.shape
+        Sk = block_tables.shape[1] * bsz
+    else:
+        _, Sk, KV, _ = k.shape
     assert k.shape == v.shape and H % KV == 0, (q.shape, k.shape)
     G = H // KV
     if scale <= 0.0:
@@ -180,9 +233,21 @@ def _flash_call(fmt, q, k, v, causal, window, q_offset, scale, variant,
 
     bq, bk, Sqp, Skp, hdp = _tile_params(Sq, Sk, hd, block_q, block_k)
     qf = _to_kernel_layout(q, Sqp, hdp)
-    kf = _to_kernel_layout(k, Skp, hdp)
-    vf = _to_kernel_layout(v, Skp, hdp)
     nk = Skp // bk
+    paged_kw = {}
+    if paged:
+        assert not save_res, "paged attention is forward/decode-only"
+        assert bk % bsz == 0, (
+            f"block_size {bsz} must divide the kv tile {bk} "
+            "(power of two <= 128)")
+        kf = _pool_kernel_layout(k, hdp)
+        vf = _pool_kernel_layout(v, hdp)
+        btf = block_tables.astype(jnp.int32)
+        paged_kw = dict(pages=bk // bsz, n_heads=H, kv_heads=KV, group=G,
+                        num_blocks=NB, bt_cols=block_tables.shape[1])
+    else:
+        kf = _to_kernel_layout(k, Skp, hdp)
+        vf = _to_kernel_layout(v, Skp, hdp)
 
     def _per_seq(vec, default):
         """(B,) per-sequence int32 -> (B*H, 1) per-grid-row scalar input."""
@@ -197,7 +262,7 @@ def _flash_call(fmt, q, k, v, causal, window, q_offset, scale, variant,
     kernel = functools.partial(
         _flash_kernel, fmt=fmt, variant=variant, causal=causal,
         window=window, q_offset=q_offset, scale=scale, bq=bq, bk=bk,
-        nk=nk, sk_valid=Sk, save_res=save_res)
+        nk=nk, sk_valid=Sk, save_res=save_res, **paged_kw)
     out_shape = [jax.ShapeDtypeStruct((B * H, Sqp, hdp), jnp.float32)]
     out_specs = [pl.BlockSpec((1, bq, hdp), lambda b, i: (b, i, 0))]
     if save_res:
@@ -205,16 +270,24 @@ def _flash_call(fmt, q, k, v, causal, window, q_offset, scale, variant,
                                                jnp.float32)]
         out_specs += 2 * [pl.BlockSpec((1, bq, _RES_LANES),
                                        lambda b, i: (b, i, 0))]
+    if paged:
+        # the pools ride along whole (constant index map) — pages are
+        # gathered in-kernel from the per-sequence block-table row
+        kv_specs = [pl.BlockSpec(kf.shape, lambda b, i: (0, 0, 0))] * 2
+        inputs = (qf, kf, vf, btf, ksf, klf, qpf)
+        extra = [pl.BlockSpec((1, block_tables.shape[1]),
+                              lambda b, i: (b // H, 0))]
+    else:
+        kv_specs = 2 * [pl.BlockSpec(
+            (1, Skp, hdp), lambda b, i: (b // H * KV + (b % H) // G, 0, 0))]
+        inputs = (qf, kf, vf, ksf, klf, qpf)
+        extra = []
     outs = pl.pallas_call(
         kernel,
         out_shape=out_shape,
         grid=(B * H, Sqp // bq),
-        in_specs=[
-            pl.BlockSpec((1, bq, hdp), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, Skp, hdp),
-                         lambda b, i: (b // H * KV + (b % H) // G, 0, 0)),
-            pl.BlockSpec((1, Skp, hdp),
-                         lambda b, i: (b // H * KV + (b % H) // G, 0, 0)),
+        in_specs=[pl.BlockSpec((1, bq, hdp), lambda b, i: (b, i, 0))]
+        + kv_specs + extra + [
             pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
             pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
             pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
@@ -223,7 +296,7 @@ def _flash_call(fmt, q, k, v, causal, window, q_offset, scale, variant,
         compiler_params=pltpu.TPUCompilerParams(
             vmem_limit_bytes=vmem_limit_bytes),
         interpret=interpret,
-    )(qf, kf, vf, ksf, klf, qpf)
+    )(*inputs)
 
     out = outs[0][:, :Sq, :hd].reshape(B, H, Sq, hd)
     out = jnp.transpose(out, (0, 2, 1, 3))
@@ -253,6 +326,7 @@ def posit_flash_attention(
     kv_start=None,
     kv_len=None,
     q_pos=None,
+    block_tables=None,
 ):
     """Flash attention with the posit SRT normalizer, one kernel launch.
 
@@ -269,10 +343,24 @@ def posit_flash_attention(
     static ``q_offset``).  The serving engine's per-slot decode passes
     ``q_pos = pos`` and ``kv_len = pos + 1`` so every slot attends exactly
     its own written cache rows at its own offset, in one compiled kernel.
+
+    ``block_tables`` switches the kv side to the PAGED layout: ``k``/``v``
+    become global block pools ``(num_blocks, block_size, KV, hd)`` and
+    ``block_tables`` is a per-sequence ``(B, max_blocks)`` int32 table
+    mapping logical kv row ``r`` of sequence ``b`` to pool row
+    ``(block_tables[b, r // block_size], r % block_size)``.  Paging is an
+    index-map change, not a new kernel family: the kv scan gathers
+    ``bk / block_size`` pages per tile inside the same (m, l, acc)
+    recurrence, and with ``max_blocks * block_size`` equal to the dense
+    path's Sk the tile geometry — hence every accumulation — is
+    bit-identical to the dense layout.  Forward/decode only (no saved
+    residuals); block_size must be a power of two that divides the kv
+    tile (<= ``block_k``).
     """
     return _flash_call(fmt, q, k, v, causal, window, q_offset, scale,
                        variant, interpret, block_q, block_k,
-                       vmem_limit_bytes, False, kv_start, kv_len, q_pos)
+                       vmem_limit_bytes, False, kv_start, kv_len, q_pos,
+                       block_tables)
 
 
 @functools.partial(jax.jit,

@@ -171,10 +171,16 @@ def _softmax_kernel(x_ref, o_ref, *, fmt: PositFormat, variant: str,
     col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
     valid = col < cols_valid
     m = jnp.max(jnp.where(valid, x, _NEG_HUGE), axis=-1, keepdims=True)
-    # Padded lanes contribute exactly 0 to the row sum; appending exact
-    # zeros keeps the f32 accumulation bit-identical to the unpadded sum.
+    # Padded lanes contribute exactly 0 to the row sum; the FIXED-ORDER
+    # accumulation makes that an invariant rather than a hope: zeros are
+    # additive identities at every partial sum, so the padded in-kernel
+    # reduction is bit-identical to the emulate path's unpadded one for
+    # every format (posit64 keeps all f32 mantissa bits — a free-order
+    # jnp.sum here cost it 1 ulp of cross-backend agreement).
     e = jnp.where(valid, jnp.exp(x - m), 0.0)
-    s = jnp.sum(e, axis=-1, keepdims=True)            # (bm, 1)
+    from repro.core.quire import fixed_order_rowsum
+
+    s = fixed_order_rowsum(e, axis=-1)                # (bm, 1)
     o_ref[...] = divide_floats_block(fmt, e, s, variant)
 
 

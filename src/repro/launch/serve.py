@@ -34,6 +34,17 @@ def main():
     ap.add_argument("--static", action="store_true",
                     help="serve fixed batches to completion instead of the "
                          "continuous slot scheduler")
+    ap.add_argument("--kv-layout", choices=["dense", "paged"],
+                    default="dense",
+                    help="'paged' serves attention KV from a refcounted "
+                         "block pool with copy-on-write prefix sharing; "
+                         "outputs are bit-identical to dense")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged layout; power of two "
+                         "in [8, 128])")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="LEN",
+                    help="prepend one shared LEN-token system prompt to "
+                         "half the stream (exercises the prefix cache)")
     args = ap.parse_args()
 
     # serving limits ride on the model config (get_config overrides), so no
@@ -46,17 +57,27 @@ def main():
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, params,
                       ServeConfig.from_model(cfg,
-                                             temperature=args.temperature))
+                                             temperature=args.temperature,
+                                             kv_layout=args.kv_layout,
+                                             block_size=args.block_size))
 
     # a mixed-length request stream: more requests than slots, ragged
-    # prompts and budgets, so slots are freed and re-admitted mid-flight
+    # prompts and budgets, so slots are freed and re-admitted mid-flight;
+    # --shared-prefix makes half of them fork one system prompt, which the
+    # paged layout serves from shared pages instead of re-prefilling
     n_req = args.requests or 2 * args.batch
     rng = np.random.default_rng(0)
-    reqs = [Request(rng.integers(1, cfg.vocab,
-                                 size=int(rng.integers(3, 12))).astype(np.int32),
-                    max_new=int(rng.integers(max(1, args.max_new // 2),
-                                             args.max_new + 1)))
-            for _ in range(n_req)]
+    sys_p = (rng.integers(1, cfg.vocab,
+                          size=args.shared_prefix).astype(np.int32)
+             if args.shared_prefix else np.zeros(0, np.int32))
+    reqs = []
+    for i in range(n_req):
+        p = rng.integers(1, cfg.vocab,
+                         size=int(rng.integers(3, 12))).astype(np.int32)
+        if args.shared_prefix and i % 2 == 0:
+            p = np.concatenate([sys_p, p])
+        reqs.append(Request(p, max_new=int(
+            rng.integers(max(1, args.max_new // 2), args.max_new + 1))))
 
     t0 = time.perf_counter()
     outs = eng.serve_static(reqs) if args.static else eng.serve(reqs)
@@ -64,7 +85,15 @@ def main():
     total = sum(len(o) for o in outs)
     mode = "static batches" if args.static else "continuous"
     print(f"# {mode}: {n_req} requests, {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s, slots={args.batch})")
+          f"({total / dt:.1f} tok/s, slots={args.batch}, "
+          f"kv_layout={args.kv_layout})")
+    st = eng.last_serve_stats
+    if st and st.get("kv_layout") == "paged":
+        print(f"# paged: block_size={st['block_size']} "
+              f"peak_blocks={st['peak_blocks_in_use']}/{st['pool_blocks']} "
+              f"prefix_hit_rate={st['prefix_hit_rate']:.0%} "
+              f"({st['prefix_hit_tokens']}/{st['prompt_tokens']} prompt "
+              f"tokens served from shared pages)")
     for i, o in enumerate(outs):
         print(f"req{i}: prompt={reqs[i].tokens.tolist()} -> {o.tolist()}")
 

@@ -239,6 +239,75 @@ def cross_attention_block(params, x, mem_kv, cfg: ModelConfig):
     return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
 
 
+def _decode_project(params, x, pos, start, cfg: ModelConfig, rope: bool):
+    """Shared decode-step front end: q/k/v projection, RoPE at the per-slot
+    RELATIVE position (``pos - start``), optional posit KV quantization.
+
+    Factored out of :func:`decode_attention` so the paged-cache decode path
+    produces bit-identical k/v entries from the same code.
+    """
+    dt = x.dtype
+    positions = pos[:, None]
+    if start is not None:
+        positions = positions - start[:, None]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.numerics.kv_cache_format:
+        # posit-quantized KV storage: entries are rounded to the posit grid
+        # at insertion (wire format uint16/uint8; values emulated here)
+        from repro.numerics.formats import resolve_format
+        from repro.numerics.quant import posit_round_value
+
+        pf = resolve_format(cfg.numerics.kv_cache_format)
+        k = posit_round_value(pf, k.astype(jnp.float32)).astype(k.dtype)
+        v = posit_round_value(pf, v.astype(jnp.float32)).astype(v.dtype)
+    return q, k, v
+
+
+def _decode_attend_fused(q, ck, cv, pos, start, cfg: ModelConfig,
+                         block_tables=None):
+    """One Pallas launch for all slots at heterogeneous positions: the
+    causal mask uses per-sequence q_pos, the per-slot cache length is
+    kv_len = pos + 1, and start masks any left-pad prefix.  With
+    ``block_tables`` the k/v operands are global block pools and the kernel
+    gathers pages in-kernel (same tile geometry, bit-identical scan)."""
+    from repro.kernels.posit_flash_attn import posit_flash_attention
+
+    nm = cfg.numerics
+    return posit_flash_attention(
+        nm.div_fmt, q.astype(jnp.float32), ck.astype(jnp.float32),
+        cv.astype(jnp.float32), True, 0, 0, 0.0, nm.div_algo,
+        kv_start=start, kv_len=pos + 1, q_pos=pos,
+        block_tables=block_tables)
+
+
+def _decode_attend_xla(q, ck, cv, pos, start, window: int, cfg: ModelConfig):
+    """XLA decode attention over a dense (B, S, KV, hd) cache view: masked
+    scores over rows [start[b], pos[b]] and a posit-divided softmax."""
+    dt = q.dtype
+    B, S, KV, hd = ck.shape
+    H = cfg.n_heads
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg[:, 0], ck.astype(dt))
+    s = s.astype(jnp.float32) / math.sqrt(hd)
+    kpos = jnp.arange(S)
+    mask = kpos[None, None, None, :] <= pos[:, None, None, None]
+    if window:
+        mask &= kpos[None, None, None, :] > pos[:, None, None, None] - window
+    if start is not None:
+        mask = mask & (kpos[None, None, None, :]
+                       >= start[:, None, None, None])
+    s = jnp.where(mask, s, -1e30)
+    p = _softmax(s, cfg, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(dt), cv.astype(dt))
+    return o.reshape(B, 1, H, hd)
+
+
 def decode_attention(params, x, cache_k, cache_v, pos, cfg: ModelConfig,
                      *, window: int = 0, rope: bool = True, start=None):
     """Single-token attention against a (B, S, KV, hd) cache; returns output
@@ -261,29 +330,10 @@ def decode_attention(params, x, cache_k, cache_v, pos, cfg: ModelConfig,
     """
     dt = x.dtype
     B, S, KV, hd = cache_k.shape
-    H = cfg.n_heads
-    G = H // KV
     pos = jnp.asarray(pos, jnp.int32)
     if pos.ndim == 0:
         pos = jnp.full((B,), pos, jnp.int32)
-    positions = pos[:, None]
-    if start is not None:
-        positions = positions - start[:, None]
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
-    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
-    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
-    if rope:
-        q = apply_rope(q, positions, cfg.rope_theta)
-        k = apply_rope(k, positions, cfg.rope_theta)
-    if cfg.numerics.kv_cache_format:
-        # posit-quantized KV storage: entries are rounded to the posit grid
-        # at insertion (wire format uint16/uint8; values emulated here)
-        from repro.numerics.formats import resolve_format
-        from repro.numerics.quant import posit_round_value
-
-        pf = resolve_format(cfg.numerics.kv_cache_format)
-        k = posit_round_value(pf, k.astype(jnp.float32)).astype(k.dtype)
-        v = posit_round_value(pf, v.astype(jnp.float32)).astype(v.dtype)
+    q, k, v = _decode_project(params, x, pos, start, cfg, rope)
     # per-slot cache write: slot b's row pos[b] (clamped in-bounds; parked
     # slots just keep overwriting the last row, which admission re-prefills)
     bidx = jnp.arange(B)
@@ -292,36 +342,59 @@ def decode_attention(params, x, cache_k, cache_v, pos, cfg: ModelConfig,
     cv = cache_v.at[bidx, pos_c].set(v[:, 0].astype(cache_v.dtype))
 
     if cfg.attn_backend == "fused" and not window:
-        # one Pallas launch for all slots at heterogeneous positions: the
-        # causal mask uses per-sequence q_pos, the per-slot cache length is
-        # kv_len = pos + 1, and start masks any left-pad prefix
-        from repro.kernels.posit_flash_attn import posit_flash_attention
-
-        nm = cfg.numerics
-        o = posit_flash_attention(
-            nm.div_fmt, q.astype(jnp.float32), ck.astype(jnp.float32),
-            cv.astype(jnp.float32), True, 0, 0, 0.0, nm.div_algo,
-            kv_start=start, kv_len=pos + 1, q_pos=pos)
-        out = jnp.einsum("bshk,hkd->bsd", o.astype(dt),
-                         params["wo"].astype(dt))
-        return out, ck, cv
-
-    qg = q.reshape(B, 1, KV, G, hd)
-    s = jnp.einsum("bkgd,bskd->bkgs", qg[:, 0], ck.astype(dt))
-    s = s.astype(jnp.float32) / math.sqrt(hd)
-    kpos = jnp.arange(S)
-    mask = kpos[None, None, None, :] <= pos[:, None, None, None]
-    if window:
-        mask &= kpos[None, None, None, :] > pos[:, None, None, None] - window
-    if start is not None:
-        mask = mask & (kpos[None, None, None, :]
-                       >= start[:, None, None, None])
-    s = jnp.where(mask, s, -1e30)
-    p = _softmax(s, cfg, axis=-1)
-    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(dt), cv.astype(dt))
-    o = o.reshape(B, 1, H, hd)
-    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+        o = _decode_attend_fused(q, ck, cv, pos, start, cfg)
+    else:
+        o = _decode_attend_xla(q, ck, cv, pos, start, window, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(dt), params["wo"].astype(dt))
     return out, ck, cv
+
+
+def decode_attention_paged(params, x, pool_k, pool_v, block_tables, pos,
+                           cfg: ModelConfig, *, start=None):
+    """Single-token attention against a PAGED cache; returns output and the
+    updated block pools (caller writes them).
+
+    ``pool_k``/``pool_v`` are global block pools ``(num_blocks, block_size,
+    KV, hd)`` shared by every slot; ``block_tables`` is the per-slot
+    ``(B, max_blocks)`` int32 map from logical cache row ``r`` of slot
+    ``b`` to pool row ``(block_tables[b, r // bs], r % bs)``.  Slot b's new
+    K/V land in its ``pos[b]``-th logical row's page — a 2-element scatter
+    into the pool instead of the dense path's per-slot row write.  Parked
+    slots (all-zero table rows) write block 0, the reserved sink page no
+    live table ever maps.
+
+    The attention itself is layout-invariant: the fused backend hands the
+    pools plus table straight to the Pallas kernel (in-kernel page gather,
+    same tile geometry as dense — see ``kernels/posit_flash_attn``); the
+    XLA backend gathers the table into the dense ``(B, S, KV, hd)`` view —
+    row-for-row identical contents — and runs the same masked softmax.
+    Either way the output is bit-identical to :func:`decode_attention` on
+    the equivalent dense cache.
+    """
+    dt = x.dtype
+    NB, bs, KV, hd = pool_k.shape
+    B, mb = block_tables.shape
+    S = mb * bs  # virtual per-slot sequence length (= dense max_seq)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.full((B,), pos, jnp.int32)
+    q, k, v = _decode_project(params, x, pos, start, cfg, rope=True)
+    pos_c = jnp.minimum(pos, S - 1)
+    bid = jnp.take_along_axis(block_tables, (pos_c // bs)[:, None],
+                              axis=1)[:, 0]
+    row = pos_c % bs
+    pk = pool_k.at[bid, row].set(k[:, 0].astype(pool_k.dtype))
+    pv = pool_v.at[bid, row].set(v[:, 0].astype(pool_v.dtype))
+
+    if cfg.attn_backend == "fused":
+        o = _decode_attend_fused(q, pk, pv, pos, start, cfg,
+                                 block_tables=block_tables)
+    else:
+        ck = pk[block_tables].reshape(B, S, KV, hd)
+        cv = pv[block_tables].reshape(B, S, KV, hd)
+        o = _decode_attend_xla(q, ck, cv, pos, start, 0, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(dt), params["wo"].astype(dt))
+    return out, pk, pv
 
 
 def prefill_attention(params, x, cache_k, cache_v, cfg: ModelConfig,
@@ -356,6 +429,54 @@ def prefill_attention(params, x, cache_k, cache_v, cfg: ModelConfig,
     cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
                                       (0, 0, 0, 0))
     o = flash_attention(q, k, v, cfg, causal=True, kv_start=start)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    return out, ck, cv
+
+
+def prefill_suffix_attention(params, x, cache_k, cache_v, cfg: ModelConfig,
+                             positions, start, t0: int):
+    """Prefix-sharing prefill: attend the SUFFIX tokens ``[t0, t0+S)``
+    against a cache whose rows ``[0, t0)`` already hold a shared prefix.
+
+    The suffix projections are written at cache offset ``t0`` and the
+    attention keys are ``concat(cache[:t0], fresh_suffix)`` with query
+    offset ``t0`` — so the kv sequence the flash scan walks has the exact
+    length, order and contents a full-prompt :func:`prefill_attention`
+    would have built (the cached prefix rows are a pure function of the
+    prefix tokens when prefill runs unpadded at start 0, and the cache
+    dtype is the compute dtype).  The kv tile size depends only on the kv
+    length, which is identical, so the online-softmax accumulation — hence
+    the suffix logits — are bit-identical to the unshared prefill.  With
+    ``t0 == 0`` this IS :func:`prefill_attention` (empty prefix concat).
+
+    Not valid under ``numerics.kv_cache_format``: prefill attends
+    unquantized fresh k/v but the cache stores quantized rows, so a reused
+    prefix would change the numerics — the engine disables sharing there.
+    """
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.numerics.kv_cache_format:
+        from repro.numerics.formats import resolve_format
+        from repro.numerics.quant import posit_round_value
+
+        pf = resolve_format(cfg.numerics.kv_cache_format)
+        k = posit_round_value(pf, k.astype(jnp.float32)).astype(k.dtype)
+        v = posit_round_value(pf, v.astype(jnp.float32)).astype(v.dtype)
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                      (0, t0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                      (0, t0, 0, 0))
+    if t0:
+        k_all = jnp.concatenate([cache_k[:, :t0].astype(dt), k], axis=1)
+        v_all = jnp.concatenate([cache_v[:, :t0].astype(dt), v], axis=1)
+    else:
+        k_all, v_all = k, v
+    o = flash_attention(q, k_all, v_all, cfg, causal=True, q_offset=t0,
+                        kv_start=start)
     out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
     return out, ck, cv
 

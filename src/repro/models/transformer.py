@@ -10,12 +10,27 @@ Public entry points:
   train_loss(params, cfg, batch)         -> scalar loss + metrics
   init_cache(cfg, batch, seq_len)        -> decode cache pytree
   prefill(params, cfg, tokens, ...)      -> (logits, cache)
+      optional static ``t0`` starts the prefill after a shared cache
+      prefix: rows [0, t0) are reused, tokens [t0, S) are computed
   decode_step(params, cfg, cache, token, pos) -> (logits, cache)
       pos is a per-slot (B,) int32 position vector (scalar broadcasts), so
-      one jitted step serves batch slots at heterogeneous sequence offsets
+      one jitted step serves batch slots at heterogeneous sequence offsets;
+      an optional ``block_tables`` (B, max_blocks) int32 arg switches the
+      kv cache to the PAGED layout (see init_paged_cache)
   write_cache_slot(cfg, cache, mini, slot) -> cache
       scatter a freshly prefilled batch=1 cache into one batch slot of a
       persistent serving cache (continuous-batching admission)
+  init_paged_cache(cfg, num_blocks, block_size) -> paged cache pytree
+      per-layer global block pools (num_blocks, block_size, KV, hd) shared
+      by all slots; per-slot int32 block tables map logical rows to pages
+  write_cache_blocks(cfg, cache, mini, block_ids, first_block) -> cache
+      scatter whole blocks of a batch=1 dense mini cache into pool pages
+      (paged admission)
+  mini_cache_with_prefix(cfg, cache, block_ids, rows) -> mini cache
+      gather shared-prefix pool pages back into a dense batch=1 mini cache
+      (prefix-sharing admission / copy-on-write source)
+  scatter_dense_to_pool(cfg, cache, dense, block_tables) -> cache
+      blockwise re-layout of a dense (B, S, ...) cache into the pools
 """
 
 from __future__ import annotations
@@ -326,6 +341,96 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
     raise ValueError(cfg.family)
 
 
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16):
+    """Paged decode cache: per-layer GLOBAL block pools instead of per-slot
+    dense regions.
+
+    Every layer's K (and V) storage is one pool ``(num_blocks, block_size,
+    KV, hd)`` shared by all slots; a slot's logical cache row ``r`` lives at
+    pool row ``(block_tables[slot, r // block_size], r % block_size)`` where
+    ``block_tables`` is the engine-owned ``(B, max_blocks)`` int32 table.
+    Block ids form ONE id space across layers (a slot's logical block ``j``
+    uses the same pool index in every layer), so the table stays a single
+    (B, max_blocks) array and refcounting/copy-on-write happen once, not
+    per layer.  Block 0 is reserved as the write sink for parked slots
+    (all-zero table rows) and is never handed out by the allocator.
+
+    Only the stacked attention families (dense/moe/vlm) have a pageable kv
+    cache; recurrent families (ssm/hybrid) keep O(1) state and raise here.
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"family {cfg.family!r} has no pageable KV cache (recurrent "
+            "state is O(1) per slot); use init_cache")
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    pool = {
+        "k": jnp.zeros((num_blocks, block_size, kv, hd), dtype),
+        "v": jnp.zeros((num_blocks, block_size, kv, hd), dtype),
+    }
+    return {"layers": jax.vmap(lambda _: pool)(jnp.arange(cfg.n_layers))}
+
+
+def write_cache_blocks(cfg: ModelConfig, cache, mini, block_ids, first_block):
+    """Scatter whole blocks of a batch=1 dense ``mini`` cache into the pool
+    pages ``block_ids`` of a paged ``cache``.
+
+    Paged-cache admission: the request is prefilled into a dense batch=1
+    mini cache (``rows = n_blocks * block_size`` logical rows), then its
+    blocks [first_block, first_block + len(block_ids)) — the OWNED suffix
+    after any shared prefix — are written to the allocator-assigned pool
+    pages in one scatter per leaf.  ``block_ids`` is a static-length int32
+    vector; ``first_block`` may be traced.
+    """
+    nb = block_ids.shape[0]
+
+    def scatter(pool, m):
+        L_, NB, bs, kv, hd = pool.shape
+        mm = m[:, 0].reshape(L_, -1, bs, kv, hd)
+        mm = jax.lax.dynamic_slice_in_dim(mm, first_block, nb, axis=1)
+        return pool.at[:, block_ids].set(mm.astype(pool.dtype))
+
+    return jax.tree.map(scatter, cache, mini)
+
+
+def mini_cache_with_prefix(cfg: ModelConfig, cache, block_ids, rows: int):
+    """Gather shared-prefix pool pages into a dense batch=1 mini cache.
+
+    Prefix-sharing admission: the new request's first ``len(block_ids) *
+    block_size`` logical rows already exist as pool pages; this gathers
+    them into rows [0, prefix) of a fresh ``(L, 1, rows, KV, hd)`` dense
+    mini cache (zeros beyond), which ``prefill(..., t0=prefix)`` then
+    extends with just the unshared suffix.  Also the copy-on-write source:
+    a partially-shared LAST block is gathered here, re-written by the
+    suffix prefill, and lands in a freshly-owned page — the shared
+    original is never mutated.
+    """
+    def gather(pool):
+        L_, NB, bs, kv, hd = pool.shape
+        g = pool[:, block_ids]                       # (L, nb, bs, kv, hd)
+        g = g.reshape(L_, 1, -1, kv, hd)
+        pad = rows - g.shape[2]
+        return jnp.pad(g, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+
+    return jax.tree.map(gather, cache)
+
+
+def scatter_dense_to_pool(cfg: ModelConfig, cache, dense, block_tables):
+    """Blockwise re-layout of a dense (L, B, S, KV, hd) cache into pools.
+
+    Static-batch paged decode (``generate``): the prompt is prefilled on
+    the dense path (bit-identical by construction), then each slot's rows
+    are scattered to its table's pages so decode can run paged.
+    """
+    def scatter(pool, d):
+        L_, NB, bs, kv, hd = pool.shape
+        B = d.shape[1]
+        db = d.reshape(L_, B, -1, bs, kv, hd)        # (L, B, mb, bs, kv, hd)
+        return pool.at[:, block_tables].set(db.astype(pool.dtype))
+
+    return jax.tree.map(scatter, cache, dense)
+
+
 def write_cache_slot(cfg: ModelConfig, cache, mini, slot):
     """Scatter a batch=1 ``mini`` cache into batch slot ``slot`` of ``cache``.
 
@@ -376,7 +481,7 @@ def _gate_state(new, old, pos, start):
 
 
 def decode_step(params: Params, cfg: ModelConfig, cache, token, pos,
-                start=None):
+                start=None, block_tables=None):
     """One-token decode. token: (B, 1) int32; pos: PER-SLOT (B,) int32
     position vector (a scalar broadcasts — the aligned static-batch case).
 
@@ -391,6 +496,13 @@ def decode_step(params: Params, cfg: ModelConfig, cache, token, pos,
     masked out of attention, RoPE positions are relative to start[b], and
     recurrent state is frozen until the sequence starts — pad tokens never
     pollute the KV cache, the recurrent state, or the logits.
+
+    ``block_tables`` is an optional (B, max_blocks) int32 table switching
+    ``cache`` to the PAGED layout of :func:`init_paged_cache` (stacked
+    attention families only): slot b's logical row r lives at pool page
+    ``block_tables[b, r // block_size]``.  Decode outputs are bit-identical
+    to the dense layout — the per-slot logical kv sequence is the same
+    values in the same order, only its physical placement changes.
     """
     B = token.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
@@ -400,14 +512,22 @@ def decode_step(params: Params, cfg: ModelConfig, cache, token, pos,
         start = jnp.asarray(start, jnp.int32)
         if start.ndim == 0:
             start = jnp.full((B,), start, jnp.int32)
+    if block_tables is not None and cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"family {cfg.family!r} has no paged KV cache layout")
     x = L.embed(params["embed"], token, cfg)
 
     if cfg.family in ("dense", "moe", "vlm"):
         def step(h, inp):
             p, c = inp
             a = L.rmsnorm(h, p["ln1"], cfg)
-            o, ck, cv = L.decode_attention(p["attn"], a, c["k"], c["v"], pos,
-                                           cfg, start=start)
+            if block_tables is not None:
+                o, ck, cv = L.decode_attention_paged(
+                    p["attn"], a, c["k"], c["v"], block_tables, pos, cfg,
+                    start=start)
+            else:
+                o, ck, cv = L.decode_attention(p["attn"], a, c["k"], c["v"],
+                                               pos, cfg, start=start)
             h = h + o
             a = L.rmsnorm(h, p["ln2"], cfg)
             h = h + (L.moe_block(p["moe"], a, cfg) if "moe" in p else L.mlp_block(p["mlp"], a, cfg))
@@ -504,26 +624,36 @@ def _ring_decode_attention(p, x, c, pos, ring, cfg: ModelConfig, start=None):
     cv = c["v"].at[bidx, ring].set(v[:, 0].astype(c["v"].dtype))
 
     slot = jnp.arange(W)
-    # absolute position held by each ring slot after this write (per batch
-    # slot: each row wraps at its own pos[b])
-    wrap = (pos[:, None] // W) * W + slot[None, :]          # (B, W)
-    slot_pos = jnp.where(slot[None, :] <= ring[:, None], wrap, wrap - W)
-    valid = ((slot_pos >= 0) & (slot_pos <= pos[:, None])
-             & (slot_pos > pos[:, None] - W))
+    # Attend the ring in AGE order (oldest -> newest): gathered column j
+    # holds the row at absolute position pos[b] - (W-1) + j, with j = W-1
+    # the row just written.  A row's PHYSICAL ring index rotates with the
+    # absolute position (pos % W), but its age column depends only on the
+    # relative offset pos - start — so age-ordering makes the score
+    # layout (values and masked-lane positions alike) identical solo,
+    # batched, or admitted mid-flight, even after the sequence wraps the
+    # window.  (Physical-order attention rotated the softmax sum order at
+    # every wrap, breaking bit-invariance once pos >= W.)
+    order = jnp.mod(ring[:, None] + 1 + slot[None, :], W)       # (B, W)
+    slot_pos = pos[:, None] - (W - 1) + slot[None, :]           # (B, W)
+    valid = slot_pos >= 0   # unwritten columns hold init zeros; masked out
     if start is not None:
         valid = valid & (slot_pos >= start[:, None])
+    bcol = jnp.arange(B)[:, None]
+    ck_o = ck[bcol, order]
+    cv_o = cv[bcol, order]
 
     qg = q.reshape(B, 1, KV, G, hd)
-    s = jnp.einsum("bkgd,bskd->bkgs", qg[:, 0], ck.astype(dt)).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg[:, 0], ck_o.astype(dt)).astype(jnp.float32)
     s = s / _m.sqrt(hd)
     s = jnp.where(valid[:, None, None], s, -1e30)
     pr = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgs,bskd->bkgd", pr.astype(dt), cv.astype(dt)).reshape(B, 1, H, hd)
+    o = jnp.einsum("bkgs,bskd->bkgd", pr.astype(dt), cv_o.astype(dt)).reshape(B, 1, H, hd)
     out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
     return out, ck, cv
 
 
-def prefill(params: Params, cfg: ModelConfig, batch, cache, start=None):
+def prefill(params: Params, cfg: ModelConfig, batch, cache, start=None,
+            t0: int = 0):
     """Fill a decode cache from the whole prompt in ONE call.
 
     The dense family runs a chunked prefill: one full-sequence attention
@@ -542,13 +672,22 @@ def prefill(params: Params, cfg: ModelConfig, batch, cache, start=None):
 
     ``start`` is an optional (B,) int32 array of per-sequence pad-prefix
     lengths for left-padded ragged batches (see :func:`decode_step`).
-    Returns ``(logits_at_last_position, cache)``.
+
+    ``t0`` (static) starts the prefill AFTER a shared cache prefix: rows
+    [0, t0) of ``cache`` are assumed to already hold the K/V of
+    ``tokens[:, :t0]`` (gathered from shared pool pages by
+    :func:`mini_cache_with_prefix`) and only tokens [t0, S) are computed —
+    the suffix attends ``concat(cached_prefix, fresh_suffix)``, which is
+    bit-identical to the full prefill because the cached rows are a pure
+    function of the prefix tokens (unpadded start-0 prefill, cache dtype =
+    compute dtype, no kv_cache_format).  Returns
+    ``(logits_at_last_position, cache)``.
     """
     tokens = batch["tokens"]
     B, S = tokens.shape
 
     if cfg.family == "dense":
-        return _prefill_chunk(params, cfg, tokens, cache, start)
+        return _prefill_chunk(params, cfg, tokens, cache, start, t0)
 
     def step(carry, i):
         cache, _ = carry
@@ -558,17 +697,20 @@ def prefill(params: Params, cfg: ModelConfig, batch, cache, start=None):
 
     (cache, lg), _ = jax.lax.scan(step, (cache, jnp.zeros((B, 1, cfg.padded_vocab),
                                                           L.COMPUTE_DTYPE)),
-                                  jnp.arange(S))
+                                  jnp.arange(t0, S))
     return lg, cache
 
 
-def _prefill_chunk(params: Params, cfg: ModelConfig, tokens, cache, start):
+def _prefill_chunk(params: Params, cfg: ModelConfig, tokens, cache, start,
+                   t0: int = 0):
     """Chunked prefill for the stacked dense family: whole-prompt attention
-    with per-sequence pad-prefix masking, writing cache slots [0, S) in
-    place."""
+    with per-sequence pad-prefix masking, writing cache slots [t0, S) in
+    place (t0 > 0 = prefix-sharing suffix prefill over an already-populated
+    cache prefix)."""
     B, S = tokens.shape
-    x = L.embed(params["embed"], tokens, cfg)
-    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = L.embed(params["embed"], tokens[:, t0:], cfg)
+    positions = jnp.broadcast_to(jnp.arange(t0, S, dtype=jnp.int32),
+                                 (B, S - t0))
     if start is not None:
         # RoPE positions relative to each sequence's first real token, so a
         # short prompt embeds identically alone or batched (pad rows get
@@ -579,8 +721,8 @@ def _prefill_chunk(params: Params, cfg: ModelConfig, tokens, cache, start):
     def step(h, inp):
         p, c = inp
         a = L.rmsnorm(h, p["ln1"], cfg)
-        o, ck, cv = L.prefill_attention(p["attn"], a, c["k"], c["v"], cfg,
-                                        positions, start)
+        o, ck, cv = L.prefill_suffix_attention(p["attn"], a, c["k"], c["v"],
+                                               cfg, positions, start, t0)
         h = h + o
         a = L.rmsnorm(h, p["ln2"], cfg)
         h = h + L.mlp_block(p["mlp"], a, cfg)

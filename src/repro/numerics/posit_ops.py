@@ -177,7 +177,13 @@ def posit_softmax(x, cfg: NumericsConfig, axis: int = -1):
         return _posit_softmax_ste(cfg.div_fmt.n, cfg.div_algo, x)
     m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
     e = jnp.exp(x - m)
-    s = jnp.sum(e, axis=axis, keepdims=True)
+    # Fixed-order row sum: the fused kernel reduces a PADDED tile, this
+    # path an unpadded one — pinning both to the same left-to-right order
+    # (zeros are additive identities) keeps every format bit-identical
+    # across backends, including posit64 (see core.quire).
+    from repro.core.quire import fixed_order_rowsum
+
+    s = fixed_order_rowsum(e, axis=axis)
     return posit_div_values(e, s, cfg)
 
 

@@ -50,11 +50,11 @@ pins it, and ``generate`` uses the batch index unless its ``seeds``
 argument pins it, so matching ids (e.g. pinned seeds) reproduce the same
 sampled stream across all three entry points.
 
-Caveat: the hybrid family's ring buffer places a row at ``pos % W``; once
-a sequence WRAPS the window (``pos >= W``) the softmax sum order over ring
-rows can rotate between a solo and an admitted run, so exact bit-equality
-is only guaranteed while ``start + prompt + new tokens <= W`` (the
-window).  Attention/SSM families have no such caveat.
+The hybrid family's ring buffer stores a row at physical index ``pos % W``
+but ATTENDS the window in age order (oldest -> newest, a relative-offset
+gather), so bit-equality holds even after a sequence wraps the window —
+the former physical-order caveat is gone.  Attention/SSM families never
+had one.
 
 ``prefill`` stays ONE jitted call per prompt-length bucket (chunked
 whole-prompt attention for the dense family — through the fused posit
@@ -65,6 +65,56 @@ attention ALSO runs the fused Pallas kernel, with per-slot
 ``q_pos``/``kv_len``/``kv_start`` inputs — per-slot positions end to end.
 The decode step is the same jitted ``decode_step`` the multi-pod dry-run
 lowers, so what we serve here is what scales there.
+
+Paged KV cache (``ServeConfig.kv_layout="paged"``)
+==================================================
+The dense slot cache reserves ``max_seq`` rows per slot up front.  The
+paged layout replaces each layer's ``(B, max_seq, KV, hd)`` region with a
+GLOBAL block pool ``(num_blocks, block_size, KV, hd)`` plus an engine-owned
+``int32[B, max_blocks]`` block table per cache side:
+
+  * **Block-table layout** — slot ``b``'s logical cache row ``r`` lives at
+    pool row ``(block_tables[b, r // block_size], r % block_size)``.  Block
+    ids form one id space across layers (logical block ``j`` uses the same
+    pool index in every layer), so tables, refcounts and sharing are
+    per-slot, not per-layer.  Block 0 is a reserved write sink for parked
+    slots (all-zero table rows); the allocator hands out ids
+    ``[1, num_blocks)``.  A slot's table grows one block at a time as its
+    ``pos`` crosses block boundaries — per-request reserved HBM scales
+    with the tokens actually written, not ``max_seq``.
+  * **CoW lifecycle** — every pool block is refcounted.  Admission
+    increfs the fully-shared prefix blocks it maps and allocates fresh
+    blocks (refcount 1) for the rest.  A PARTIALLY-shared block is never
+    mapped: its rows are gathered into the admission's dense mini cache,
+    the suffix prefill extends them, and the full copy lands in a freshly
+    owned page (copy-on-write as copy-into-allocate — shared storage is
+    never mutated, because decode only ever writes a slot's own last
+    block, which is by construction unshared).  Eviction decrefs the
+    slot's blocks; a registered prefix block whose refcount hits 0 parks
+    in an LRU cached list (still matchable) and is reclaimed only when
+    the free list runs dry; unregistered blocks return to the free list
+    directly.  An admission that cannot get enough blocks is deferred
+    until an eviction frees some (or raises a clean ``ValueError`` if no
+    request is in flight to ever free one).
+  * **Prefix sharing** — admission hashes the prompt's full token blocks
+    as a rolling chain and looks the chain up in the allocator's prefix
+    table; matches compare the FULL token prefix (hash collisions cannot
+    alias) and map the shared pool pages instead of recomputing them —
+    prefill runs only from the first unshared token (``t0``).  Sharing is
+    an optimization with an invariance CONTRACT: paged admission prefills
+    unpadded at start 0, so a prefix block's contents are a pure function
+    of the prefix tokens, the kv sequence a sharing request attends is
+    value- and order-identical to the one it would have computed, and the
+    flash scan's tile geometry is unchanged (virtual ``max_blocks *
+    block_size = max_seq``) — decoded tokens are bit-identical dense vs
+    paged vs prefix-shared, asserted by ``tests/test_paged_kv.py`` and
+    gated by the BENCH_PR6 invariance row.  Sharing is disabled when
+    ``numerics.kv_cache_format`` quantizes the cache (prefill attends
+    unquantized fresh k/v, so reusing quantized rows would change
+    numerics); the paged layout itself still works there.
+
+Families: dense/moe page their kv caches; ssm/hybrid (recurrent O(1)
+state) silently keep the dense slot path under ``kv_layout="paged"``.
 """
 
 from __future__ import annotations
@@ -119,6 +169,12 @@ class ServeConfig:
     temperature: Union[float, Sequence[float]] = 0.0  # 0 = greedy
     eos_id: Union[int, Sequence[int]] = -1            # -1 = never stop early
     seed: int = 0
+    # paged KV cache (see module docstring): "dense" keeps the per-slot
+    # (B, max_seq) regions; "paged" switches pageable families to the
+    # refcounted block pool with prefix sharing.
+    kv_layout: str = "dense"
+    block_size: int = 16                 # pool page rows (pow2, 8..128)
+    num_blocks: Optional[int] = None     # pool size; None = worst case + sink
 
     @classmethod
     def from_model(cls, cfg: ModelConfig, **overrides) -> "ServeConfig":
@@ -142,6 +198,125 @@ class Request:
     temperature: Optional[float] = None
     eos_id: Optional[int] = None
     seed: Optional[int] = None
+
+
+class BlockAllocator:
+    """Refcounted KV block pool with prefix-hash reuse (host-side).
+
+    Owns the id space ``[1, num_blocks)`` of a paged cache's pool (block 0
+    is the reserved parked-slot sink and is never handed out).  Three block
+    states:
+
+      * **free** — on the free deque, contents meaningless.
+      * **live** — ``refcount > 0``: mapped by one or more slot tables.
+      * **cached** — refcount 0 but REGISTERED as a prefix block: parked in
+        an LRU OrderedDict, still matchable by :meth:`match_prefix`, and
+        reclaimed (unregistered + reused) by :meth:`alloc` only when the
+        free deque is empty.
+
+    Prefix identity is a rolling chain hash over full token blocks
+    (``h_j = hash((h_{j-1}, block_j_tokens))``), with every table entry
+    keeping the FULL prefix tuple — a match requires tuple equality, so a
+    hash collision can cost a lookup but never alias two prefixes.  The
+    ``hasher`` hook exists for the collision-safety test (inject a
+    constant hash and watch matching still come out correct).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, hasher=None):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (sink + 1), got {num_blocks}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._hash = hash if hasher is None else hasher
+        self.refcount = np.zeros(num_blocks, np.int64)
+        self.free: collections.deque = collections.deque(range(1, num_blocks))
+        self.cached: collections.OrderedDict = collections.OrderedDict()
+        # chain hash -> [(full prefix tuple, block id), ...]; owner maps a
+        # registered block back to its table entry for unregistration
+        self.table = {}
+        self.owner = {}
+        self.hits = 0      # match_prefix calls that shared >= 1 block
+        self.lookups = 0
+
+    # ------------------------------------------------------------ lifecycle
+
+    def alloc(self) -> int:
+        """A fresh block at refcount 1; reclaims the LRU cached prefix
+        block when the free deque is empty; clean ``ValueError`` when the
+        pool is truly exhausted (every block live)."""
+        if self.free:
+            bid = self.free.popleft()
+        elif self.cached:
+            bid, _ = self.cached.popitem(last=False)     # LRU reclaim
+            self._unregister(bid)
+        else:
+            raise ValueError(
+                f"paged KV pool exhausted: all {self.num_blocks - 1} "
+                "usable blocks are mapped by live requests")
+        self.refcount[bid] = 1
+        return bid
+
+    def incref(self, bid: int) -> None:
+        self.refcount[bid] += 1
+        self.cached.pop(bid, None)       # reactivated from the LRU park
+
+    def decref(self, bid: int) -> None:
+        assert self.refcount[bid] > 0, bid
+        self.refcount[bid] -= 1
+        if self.refcount[bid] == 0:
+            if bid in self.owner:
+                self.cached[bid] = None  # registered: park, stay matchable
+            else:
+                self.free.append(bid)
+
+    def blocks_in_use(self) -> int:
+        return int((self.refcount > 0).sum())
+
+    def _unregister(self, bid: int) -> None:
+        h, full = self.owner.pop(bid)
+        bucket = self.table[h]
+        bucket[:] = [e for e in bucket if e[1] != bid]
+        if not bucket:
+            del self.table[h]
+
+    # ------------------------------------------------------- prefix sharing
+
+    def _chain(self, tokens):
+        """Yield (chain hash, full prefix tuple, block index) per FULL
+        token block of ``tokens``."""
+        bs = self.block_size
+        h = None
+        for j in range(len(tokens) // bs):
+            h = self._hash((h, tuple(tokens[j * bs:(j + 1) * bs])))
+            yield h, tuple(tokens[:(j + 1) * bs]), j
+
+    def match_prefix(self, tokens) -> List[int]:
+        """Longest already-registered block chain for this prompt: block
+        ids whose FULL token prefixes match (never hash-only)."""
+        self.lookups += 1
+        shared: List[int] = []
+        for h, full, _ in self._chain(tokens):
+            bid = next((b for p, b in self.table.get(h, ()) if p == full),
+                       None)
+            if bid is None:
+                break
+            shared.append(bid)
+        if shared:
+            self.hits += 1
+        return shared
+
+    def register_prefix(self, tokens, block_ids) -> None:
+        """Publish this request's full-block chain for future sharing.
+        First writer wins: a prefix already in the table keeps its original
+        page (the duplicate storage stays unregistered and frees normally);
+        a block registered under one prefix is never re-registered."""
+        for h, full, j in self._chain(tokens):
+            bid = int(block_ids[j])
+            bucket = self.table.setdefault(h, [])
+            if any(p == full for p, _ in bucket) or bid in self.owner:
+                continue
+            bucket.append((full, bid))
+            self.owner[bid] = (h, full)
 
 
 class Scheduler:
@@ -222,6 +397,57 @@ class ServeEngine:
         self._sample_greedy = jax.jit(self._greedy_impl)
         self._base_key = jax.random.PRNGKey(self.sc.seed)
         self.last_serve_stats = None    # measured counters of the last serve()
+
+        # ------------------------------------------------------ paged layout
+        sc = self.sc
+        if sc.kv_layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout must be 'dense' or 'paged', "
+                             f"got {sc.kv_layout!r}")
+        # recurrent families keep O(1) state — nothing to page; they fall
+        # back to the dense slot path (documented in the module docstring)
+        self._paged = (sc.kv_layout == "paged"
+                       and cfg.family in ("dense", "moe"))
+        if self._paged:
+            bs = sc.block_size
+            if bs < 8 or bs > 128 or bs & (bs - 1):
+                raise ValueError(
+                    f"block_size must be a power of two in [8, 128] (kv "
+                    f"kernel page constraint), got {bs}")
+            if sc.max_seq % bs:
+                raise ValueError(
+                    f"max_seq={sc.max_seq} must be a multiple of "
+                    f"block_size={bs} (virtual slot length = table width "
+                    "* block size must equal the dense max_seq for "
+                    "bit-identical tile geometry)")
+            self._max_blocks = sc.max_seq // bs
+            # worst case: every slot maps max_blocks own pages, + sink 0
+            self._num_blocks = (sc.num_blocks if sc.num_blocks is not None
+                                else sc.max_batch * self._max_blocks + 1)
+            if self._num_blocks < 2:
+                raise ValueError(f"num_blocks={self._num_blocks} < 2")
+            # prefix sharing requires prefix pages to be a pure function of
+            # the prefix tokens; a quantized cache stores rounded rows that
+            # prefill does not attend, so sharing is disabled there
+            self._share = not cfg.numerics.kv_cache_format
+            self._decode_paged = jax.jit(
+                lambda p, c, bt, t, i, s: T.decode_step(
+                    p, cfg, c, t, i, s, block_tables=bt),
+                donate_argnums=1)
+            self._prefill_t0 = jax.jit(
+                lambda p, c, t, s, t0: T.prefill(p, cfg, {"tokens": t}, c,
+                                                 s, t0),
+                static_argnums=4)
+            self._write_blocks = jax.jit(
+                lambda c, m, bids, first: T.write_cache_blocks(
+                    cfg, c, m, bids, first),
+                donate_argnums=0)
+            self._mini_prefix = jax.jit(
+                lambda c, bids, rows: T.mini_cache_with_prefix(
+                    cfg, c, bids, rows),
+                static_argnums=2)
+            self._scatter_pool = jax.jit(
+                lambda c, d, bt: T.scatter_dense_to_pool(cfg, c, d, bt),
+                donate_argnums=0)
 
     # ------------------------------------------------------------- sampling
 
@@ -331,6 +557,18 @@ class ServeEngine:
         lg, cache = self._prefill(self.params, cache, jnp.asarray(toks),
                                   start)
 
+        if self._paged:
+            # A/B path: identical dense prefill (bit-identity by
+            # construction), then re-lay the rows out blockwise into a
+            # pool with identity tables and decode paged.  Same virtual
+            # length (max_blocks * block_size = max_seq) -> same kernel
+            # tile geometry -> bit-identical decode.
+            mb = self._max_blocks
+            bt = jnp.asarray(
+                1 + np.arange(B * mb, dtype=np.int32).reshape(B, mb))
+            pool = T.init_paged_cache(self.cfg, B * mb + 1, sc.block_size)
+            cache = self._scatter_pool(pool, cache, bt)
+
         steps = jnp.zeros((B,), jnp.int32)
         cur = self._sample(lg, temps, keys, steps)
         emitted = []
@@ -342,7 +580,11 @@ class ServeEngine:
             if done.all() or step == max_new - 1:
                 break
             pos = jnp.full((B,), plen + step, jnp.int32)
-            lg, cache = self._decode(self.params, cache, cur, pos, start)
+            if self._paged:
+                lg, cache = self._decode_paged(self.params, cache, bt, cur,
+                                               pos, start)
+            else:
+                lg, cache = self._decode(self.params, cache, cur, pos, start)
             steps = steps + 1
             cur = self._sample(lg, temps, keys, steps)
         mat = np.stack(emitted, axis=1)     # (B, <=max_new)
@@ -428,6 +670,14 @@ class ServeEngine:
             # admit at the exact prompt length instead (one extra jit
             # signature, but no silent truncation)
             budget = min(r.max_new, sc.max_seq - plen)
+            if self._paged:
+                # paged admission prefills UNPADDED at start 0: prefix
+                # pages must be a pure function of the prefix tokens (the
+                # sharing contract), which left-pad offsets would break.
+                # One jit signature per (plen, t0) pair instead of per
+                # bucket — the price of content-addressable pages.
+                plans.append((plen, 0, budget))
+                continue
             P = _bucket(plen, sc.max_seq)
             if sc.max_seq - P < budget:
                 P = plen
@@ -442,10 +692,29 @@ class ServeEngine:
                             else def_eos[i] for i, r in enumerate(reqs)],
                            np.int32)
 
-        cache = T.init_cache(self.cfg, B, sc.max_seq)
-        # zero batch=1 cache reused by every admission (prefill is pure, so
-        # the template never holds a previous request's rows)
-        mini_zero = T.init_cache(self.cfg, 1, sc.max_seq)
+        paged = self._paged
+        if paged:
+            cache = T.init_paged_cache(self.cfg, self._num_blocks,
+                                       sc.block_size)
+            alloc = BlockAllocator(self._num_blocks, sc.block_size)
+            bt_host = np.zeros((B, self._max_blocks), np.int32)
+            slot_blocks: List[List[int]] = [[] for _ in range(B)]
+            # zero batch=1 mini caches per block-rounded prompt size
+            # (prefill is pure; templates never hold a request's rows)
+            mini_zeros = {}
+
+            def mini_for(rows: int):
+                if rows not in mini_zeros:
+                    mini_zeros[rows] = T.init_cache(self.cfg, 1, rows)
+                return mini_zeros[rows]
+
+            hit_tokens = fill_tokens = prompt_tokens = 0
+            owned_total = shared_total = peak_blocks = 0
+        else:
+            cache = T.init_cache(self.cfg, B, sc.max_seq)
+            # zero batch=1 cache reused by every admission (prefill is pure,
+            # so the template never holds a previous request's rows)
+            mini_zero = T.init_cache(self.cfg, 1, sc.max_seq)
         sched = Scheduler(B, max(p[2] for p in plans))
         sched.queue.extend(range(n))
         outputs: List[Optional[np.ndarray]] = [None] * n
@@ -485,24 +754,143 @@ class ServeEngine:
                 outputs[rid] = sched.evict(slot)
                 temps[slot] = 0.0   # keep the all-greedy sampler fast path
 
+        def release_blocks(slot: int) -> None:
+            """Eviction-side block bookkeeping: drop this slot's refs (a
+            registered prefix block parks in the allocator's LRU cache at
+            refcount 0, an unregistered one frees) and zero its table row
+            so the parked slot writes the block-0 sink."""
+            for b in slot_blocks[slot]:
+                alloc.decref(b)
+            slot_blocks[slot] = []
+            bt_host[slot, :] = 0
+
+        def admit_paged(slot: int, rid: int) -> bool:
+            """Paged admission; False = not enough free blocks (deferred).
+
+            Maps the longest registered prefix (full blocks only), gathers
+            it — plus a partially-shared CoW source block, NOT increfed:
+            its copy is rewritten into an owned page — into a dense mini
+            cache, prefills just the suffix from ``t0``, scatters the owned
+            blocks into the pool, and registers the new chain.
+            """
+            nonlocal cache, hit_tokens, fill_tokens, prompt_tokens
+            nonlocal owned_total, shared_total, peak_blocks
+            plen, _, budget = plans[rid]
+            r = reqs[rid]
+            bs = sc.block_size
+            total = -(-plen // bs)          # blocks covering rows [0, plen)
+            toks = tuple(int(t) for t in r.tokens)
+            shared = alloc.match_prefix(toks) if self._share else []
+            # always leave >= 1 suffix token: prefill must produce logits
+            t0 = min(len(shared) * bs, plen - 1)
+            s_blk = t0 // bs                # fully-shared blocks mapped
+            gather_n = -(-t0 // bs)         # + the partial CoW source
+            shared = shared[:gather_n]
+            # incref the mapped prefix FIRST so our own allocs below cannot
+            # LRU-reclaim it; the CoW source (if any) needs no ref — the
+            # gather captures its value before any write lands
+            for b in shared[:s_blk]:
+                alloc.incref(b)
+            owned: List[int] = []
+            try:
+                for _ in range(total - s_blk):
+                    owned.append(alloc.alloc())
+            except ValueError:
+                for b in owned:
+                    alloc.decref(b)
+                for b in shared[:s_blk]:
+                    alloc.decref(b)
+                return False
+            rows = total * bs
+            if t0:
+                mini = self._mini_prefix(cache,
+                                         jnp.asarray(shared, jnp.int32),
+                                         rows)
+            else:
+                mini = mini_for(rows)
+            lg, mini = self._prefill_t0(
+                self.params, mini,
+                jnp.asarray(np.asarray(r.tokens, np.int32)[None]),
+                jnp.zeros((1,), jnp.int32), t0)
+            cache = self._write_blocks(cache, mini,
+                                       jnp.asarray(owned, jnp.int32),
+                                       jnp.int32(s_blk))
+            chain = shared[:s_blk] + owned
+            if self._share:
+                alloc.register_prefix(toks, chain)
+            bt_host[slot, :] = 0
+            bt_host[slot, :total] = chain
+            slot_blocks[slot] = chain
+            hit_tokens += t0
+            fill_tokens += plen - t0
+            prompt_tokens += plen
+            owned_total += len(owned)
+            shared_total += s_blk
+            peak_blocks = max(peak_blocks, alloc.blocks_in_use())
+
+            key_r = self._request_key(r.seed if r.seed is not None else rid)
+            t0s = self._sample(lg, req_temp[rid:rid + 1],
+                               key_r[None], jnp.zeros((1,), jnp.int32))
+            pos[slot], start[slot] = plen, 0
+            temps[slot], eos[slot] = req_temp[rid], req_eos[rid]
+            keys[slot], steps[slot] = np.asarray(key_r), 1
+            tok = int(np.asarray(t0s)[0, 0])
+            cur[slot] = tok
+            sched.admit(slot, rid, budget)
+            if sched.record_one(slot, tok, int(req_eos[rid])):
+                outputs[rid] = sched.evict(slot)
+                release_blocks(slot)
+                temps[slot] = 0.0
+            return True
+
         decode_steps = active_slot_steps = 0
         while sched.queue or sched.any_active:
             for slot in sched.free_slots():
                 if not sched.queue:
                     break
-                admit(int(slot), sched.queue.popleft())
+                if paged:
+                    # peek-then-pop: a pool-starved admission stays queued
+                    # until an eviction frees blocks (FIFO order preserved)
+                    if not admit_paged(int(slot), sched.queue[0]):
+                        if not sched.any_active:
+                            raise ValueError(
+                                f"request {sched.queue[0]} needs more KV "
+                                f"blocks than the pool can ever free "
+                                f"(num_blocks={self._num_blocks}); raise "
+                                "ServeConfig.num_blocks")
+                        break
+                    sched.queue.popleft()
+                else:
+                    admit(int(slot), sched.queue.popleft())
             if not sched.any_active:
                 continue    # admitted requests may finish at token 0
             decode_steps += 1
             active_slot_steps += int(sched.active.sum())
+
+            if paged:
+                # grow each active slot's table before the row it is about
+                # to write crosses into an unmapped block
+                for slot in np.flatnonzero(sched.active):
+                    need = int(pos[slot]) // sc.block_size
+                    if need >= len(slot_blocks[slot]):
+                        b = alloc.alloc()   # pool sized so this never fails
+                        slot_blocks[slot].append(b)
+                        bt_host[slot, need] = b
+                        peak_blocks = max(peak_blocks,
+                                          alloc.blocks_in_use())
 
             # ONE decode step for ALL slots at their own positions + ONE
             # vectorized sample; a single (B,) transfer back per step.
             # jnp.array COPIES each host mirror at hand-off: jnp.asarray
             # would zero-copy alias the numpy buffers on CPU, racing the
             # async dispatch against the in-place updates below / in admit
-            lg, cache = self._decode(self.params, cache, jnp.array(cur),
-                                     jnp.array(pos), jnp.array(start))
+            if paged:
+                lg, cache = self._decode_paged(
+                    self.params, cache, jnp.array(bt_host), jnp.array(cur),
+                    jnp.array(pos), jnp.array(start))
+            else:
+                lg, cache = self._decode(self.params, cache, jnp.array(cur),
+                                         jnp.array(pos), jnp.array(start))
             tok_d = self._sample(lg, temps, jnp.array(keys),
                                  jnp.array(steps))
             np.minimum(pos + 1, sc.max_seq - 1, out=pos)
@@ -512,6 +900,8 @@ class ServeEngine:
             for slot in sched.record(tok_h, eos):
                 rid = int(sched.slot_req[slot])
                 outputs[rid] = sched.evict(slot)
+                if paged:
+                    release_blocks(int(slot))
                 # a parked sampled slot would otherwise disable the
                 # all-greedy sampler shortcut for the rest of the stream
                 temps[slot] = 0.0
@@ -523,5 +913,20 @@ class ServeEngine:
             "slot_steps": decode_steps * B,
             "active_slot_steps": active_slot_steps,
             "admissions": n,
+            "kv_layout": "paged" if paged else "dense",
         }
+        if paged:
+            self.last_serve_stats.update({
+                "block_size": sc.block_size,
+                "pool_blocks": self._num_blocks - 1,
+                "peak_blocks_in_use": peak_blocks,
+                "prompt_tokens": prompt_tokens,
+                "prefill_tokens": fill_tokens,
+                "prefix_hit_tokens": hit_tokens,
+                "prefix_hit_rate": hit_tokens / max(prompt_tokens, 1),
+                "owned_blocks": owned_total,
+                "shared_blocks": shared_total,
+                "prefix_lookups": alloc.lookups,
+                "prefix_matches": alloc.hits,
+            })
         return outputs

@@ -176,15 +176,14 @@ def test_posit64_fused_vs_python_golden():
 
 def test_posit64_numerics_backends_and_shapes():
     x = jnp.asarray(RNG.normal(0, 3, (8, 33)).astype(np.float32))
-    # softmax: the f32 row SUM may associate differently between the padded
-    # in-kernel reduction and the emulate path's unpadded jnp.sum; posit64
-    # keeps all 24 f32 mantissa bits, so that 1-ulp wobble is visible here
-    # (n <= 32 formats absorb it in quantization).  The division stage
-    # itself is bit-exact — covered by the sweeps above and the reductions-
-    # free ops below, which must match bitwise.
-    np.testing.assert_allclose(
-        np.asarray(posit_softmax(x, CFG64_EMULATE)),
-        np.asarray(posit_softmax(x, CFG64_FUSED)), rtol=3e-7, atol=0)
+    # softmax: both backends now reduce the f32 row sum in FIXED left-to-
+    # right order (core.quire.fixed_order_rowsum), so the kernel's padded
+    # reduction (trailing exact zeros are additive identities) matches the
+    # emulate path's unpadded one BITWISE — even at posit64, which keeps
+    # all 24 f32 mantissa bits and used to expose a 1-ulp association gap
+    np.testing.assert_array_equal(
+        _bits(posit_softmax(x, CFG64_EMULATE)),
+        _bits(posit_softmax(x, CFG64_FUSED)))
     rms = jnp.sqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6)
     np.testing.assert_array_equal(
         _bits(posit_rmsnorm_div(x, rms, CFG64_EMULATE)),

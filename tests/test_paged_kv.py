@@ -1,0 +1,246 @@
+"""Paged KV cache: BlockAllocator lifecycle (refcounts, LRU prefix park,
+CoW at block boundaries, pool exhaustion, hash-collision safety) and the
+end-to-end invariance contract — every request decodes bit-identically
+dense vs. paged vs. prefix-shared, solo / static-batched / admitted
+mid-flight — plus the hybrid ring-buffer wrap regression."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve import Request, ServeConfig, ServeEngine
+from repro.serve.engine import BlockAllocator
+
+# _PA spans >2 blocks of 8; _PB shares _PA's first two FULL blocks and
+# diverges exactly AT the block boundary (the CoW seam the issue names)
+_PA = np.array([11, 13, 2, 9, 4, 6, 8, 1, 12, 14, 15, 9, 2, 4, 21, 22,
+                31, 7], np.int32)
+_PB = np.concatenate([_PA[:16], [99, 98, 97]]).astype(np.int32)
+_PS = np.array([3, 5, 7], np.int32)
+
+
+# =====================================================================
+# BlockAllocator (host-side, no device work)
+# =====================================================================
+
+
+def test_allocator_refcount_drop_parks_registered_blocks():
+    """decref to 0 sends a REGISTERED block to the LRU cache (still
+    matchable), an unregistered block straight back to the free list."""
+    a = BlockAllocator(num_blocks=5, block_size=2)
+    b0, b1 = a.alloc(), a.alloc()
+    a.register_prefix([1, 2, 3, 4], [b0, b1])
+    a.decref(b1)                       # registered: parked, not freed
+    assert b1 in a.cached and b1 not in a.free
+    assert a.match_prefix([1, 2, 3, 4]) == [b0, b1]   # still matchable
+    a.incref(b1)                       # reactivated out of the park
+    assert b1 not in a.cached and a.refcount[b1] == 1
+    orphan = a.alloc()                 # never registered
+    a.decref(orphan)
+    assert orphan in a.free and orphan not in a.cached
+
+
+def test_allocator_lru_reclaim_unregisters():
+    """With the free list empty, alloc() reclaims the LEAST recently used
+    cached prefix block and its prefix stops matching."""
+    a = BlockAllocator(num_blocks=3, block_size=2)
+    b0, b1 = a.alloc(), a.alloc()
+    a.register_prefix([1, 2], [b0])
+    a.register_prefix([7, 8], [b1])
+    a.decref(b0)
+    a.decref(b1)                       # park order: b0 is LRU
+    b2 = a.alloc()
+    assert b2 == b0                    # LRU victim reused
+    assert a.match_prefix([1, 2]) == []
+    assert a.match_prefix([7, 8]) == [b1]
+
+
+def test_allocator_cow_at_block_boundary():
+    """A prompt sharing exactly k full blocks then diverging at the
+    boundary matches exactly k blocks — the divergent tail gets fresh
+    storage, never a mapping into (or a write through) the shared page."""
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    toks = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]
+    ids = [a.alloc() for _ in range(3)]
+    a.register_prefix(toks, ids)
+    fork = toks[:8] + [99, 98, 97, 96]   # diverges at block 2's boundary
+    assert a.match_prefix(fork) == ids[:2]
+    own = a.alloc()
+    assert own not in ids                # fresh block, CoW not aliasing
+    a.register_prefix(fork, ids[:2] + [own])
+    # first writer wins: the shared prefix keeps its original pages
+    assert a.match_prefix(toks) == ids
+    assert a.match_prefix(fork) == ids[:2] + [own]
+
+
+def test_allocator_pool_exhaustion_is_clean():
+    a = BlockAllocator(num_blocks=3, block_size=8)
+    a.alloc(), a.alloc()
+    with pytest.raises(ValueError, match="exhausted"):
+        a.alloc()
+    with pytest.raises(ValueError, match="blocks"):
+        BlockAllocator(num_blocks=1, block_size=8)
+
+
+def test_allocator_hash_collision_never_aliases():
+    """With a degenerate hasher (every chain hashes to 0) matching still
+    compares FULL token prefixes, so distinct prompts never share pages."""
+    a = BlockAllocator(num_blocks=8, block_size=2, hasher=lambda x: 0)
+    b0, b1 = a.alloc(), a.alloc()
+    a.register_prefix([1, 2], [b0])
+    a.register_prefix([3, 4], [b1])
+    assert a.match_prefix([1, 2]) == [b0]
+    assert a.match_prefix([3, 4]) == [b1]
+    assert a.match_prefix([5, 6]) == []
+
+
+# =====================================================================
+# dense vs paged vs prefix-shared bit-invariance
+# =====================================================================
+
+
+@pytest.fixture(scope="module")
+def engines():
+    cfg = get_config("smollm-360m", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    dense = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=64))
+    paged = ServeEngine(cfg, params, ServeConfig(
+        max_batch=2, max_seq=64, kv_layout="paged", block_size=8))
+    return dense, paged
+
+
+def test_generate_paged_matches_dense(engines):
+    """Solo and static-batched greedy decode are bit-identical across the
+    two cache layouts (same tile geometry -> same flash recurrence)."""
+    dense, paged = engines
+    for prompts in ([_PS], [_PA], [_PS, _PA]):
+        d = dense.generate(prompts, max_new=4)
+        p = paged.generate(prompts, max_new=4)
+        for a, b in zip(d, p):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_serve_paged_prefix_shared_matches_solo(engines):
+    """Continuous serve with mid-flight admission AND prefix sharing (one
+    exact repeat + one block-boundary fork) is bit-identical per request
+    to dense serve and to each solo run, and the stats prove pages were
+    actually shared rather than re-prefilled."""
+    dense, paged = engines
+    reqs = [Request(_PA, max_new=5), Request(_PS, max_new=2),
+            Request(_PB, max_new=4), Request(_PA.copy(), max_new=3)]
+    douts = dense.serve(reqs)
+    pouts = paged.serve(reqs)
+    for r, a, b in zip(reqs, douts, pouts):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(
+            dense.generate([r.tokens], max_new=r.max_new)[0], b)
+    st = paged.last_serve_stats
+    assert st["kv_layout"] == "paged"
+    assert st["prefix_hit_tokens"] > 0
+    assert st["prefill_tokens"] + st["prefix_hit_tokens"] \
+        == st["prompt_tokens"]
+    assert st["shared_blocks"] >= 2     # _PB reused _PA's two full blocks
+
+
+def test_paged_reserved_scales_with_tokens_not_max_seq(engines):
+    """Per-request reserved cache is live blocks, not max_seq rows: a
+    short request peaks at ceil(tokens/bs) blocks of the 8-block table."""
+    _, paged = engines
+    paged.serve([Request(_PS, max_new=2)])
+    st = paged.last_serve_stats
+    assert st["peak_blocks_in_use"] <= 1    # 5 tokens, one block of 8
+    assert st["pool_blocks"] == paged.sc.max_batch * 8
+
+
+def test_paged_pool_exhaustion_raises(engines):
+    """A pool too small for one request fails with the allocator's clean
+    error instead of corrupting block 0 / wrapping tables."""
+    _, paged = engines
+    eng = ServeEngine(paged.cfg, paged.params, ServeConfig(
+        max_batch=1, max_seq=64, kv_layout="paged", block_size=8,
+        num_blocks=2))
+    with pytest.raises(ValueError, match="num_blocks"):
+        eng.serve([Request(_PA, max_new=8)])
+
+
+def test_paged_config_validation(engines):
+    dense, _ = engines
+    with pytest.raises(ValueError, match="kv_layout"):
+        ServeEngine(dense.cfg, dense.params, ServeConfig(kv_layout="pagd"))
+    with pytest.raises(ValueError, match="block_size"):
+        ServeEngine(dense.cfg, dense.params, ServeConfig(
+            kv_layout="paged", block_size=12))
+    with pytest.raises(ValueError, match="no pageable KV cache"):
+        T.init_paged_cache(get_config("mamba2-2.7b", smoke=True), 4, 8)
+
+
+def test_paged_fused_backend_matches_dense():
+    """Same invariance with the flash Pallas kernel reading K/V straight
+    from the pool through the block table (index-map change only)."""
+    cfg = get_config("smollm-360m", smoke=True, fused=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    dense = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=64))
+    paged = ServeEngine(cfg, params, ServeConfig(
+        max_batch=2, max_seq=64, kv_layout="paged", block_size=8))
+    reqs = [Request(_PA, max_new=3), Request(_PB, max_new=3)]
+    for a, b in zip(dense.serve(reqs), paged.serve(reqs)):
+        np.testing.assert_array_equal(a, b)
+    assert paged.last_serve_stats["prefix_hit_tokens"] > 0
+
+
+@pytest.mark.slow
+def test_paged_moe_matches_dense():
+    """MoE shares the dense attention cache, so it pages too — through
+    the scanned per-token prefill's t0 suffix path."""
+    cfg = get_config("olmoe-1b-7b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    dense = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=64))
+    paged = ServeEngine(cfg, params, ServeConfig(
+        max_batch=2, max_seq=64, kv_layout="paged", block_size=8))
+    reqs = [Request(_PA, max_new=3), Request(_PB, max_new=2)]
+    for a, b in zip(dense.serve(reqs), paged.serve(reqs)):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "recurrentgemma-2b"])
+def test_paged_recurrent_families_fall_back(arch):
+    """SSM / hybrid recurrent state is O(1) per slot — nothing to page.
+    kv_layout='paged' silently keeps their dense slot path and still
+    serves bit-identically to the dense engine."""
+    cfg = get_config(arch, smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    dense = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=64))
+    paged = ServeEngine(cfg, params, ServeConfig(
+        max_batch=2, max_seq=64, kv_layout="paged", block_size=8))
+    assert not paged._paged
+    reqs = [Request(_PS, max_new=4), Request(_PA, max_new=2)]
+    for a, b in zip(dense.serve(reqs), paged.serve(reqs)):
+        np.testing.assert_array_equal(a, b)
+    assert paged.last_serve_stats["kv_layout"] == "dense"
+
+
+# =====================================================================
+# hybrid ring-buffer wrap (age-order gather regression)
+# =====================================================================
+
+
+@pytest.mark.slow
+def test_hybrid_ring_wrap_batch_invariance():
+    """Regression: once a hybrid slot decodes past local_window, its ring
+    buffer wraps and rows are no longer in age order.  The gather now
+    attends oldest->newest via relative offsets, so a wrapped slot stays
+    bit-identical solo vs. admitted next to a fresh slot."""
+    cfg = get_config("recurrentgemma-2b", smoke=True)
+    assert cfg.local_window == 64
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=128))
+    p = np.array([5, 9, 2, 7, 3, 8, 4, 6], np.int32)
+    m = cfg.local_window + 8 - len(p)     # decode well past the wrap
+    solo = eng.generate([p], max_new=m)[0]
+    outs = eng.serve([Request(p, max_new=m), Request(_PS, max_new=2)])
+    np.testing.assert_array_equal(solo, outs[0])
+    np.testing.assert_array_equal(
+        eng.generate([_PS], max_new=2)[0], outs[1])
