@@ -713,3 +713,93 @@ def paged_kv_rows():
                  f"prefill skipped {st['prefix_hit_tokens']} of "
                  f"{st['prompt_tokens']} prompt tokens)"))
     return rows
+
+
+def serve_slo_rows():
+    """Serving SLOs under faults: TTFT / per-token latency percentiles and
+    throughput for a clean stream vs the same stream with ~10% of requests
+    fault-injected (NaN KV poison), plus the fault-isolation CI gate.
+
+    Both runs drive the live event stream (`submit` + `serve_stream`).
+    The faulted run poisons one victim request's KV slot mid-decode; the
+    health probe must quarantine exactly that slot (finish=FAULT, clean
+    partial prefix) while every other request's tokens stay bit-identical
+    to the clean run.  ``invariance_match`` carries that check; run.py
+    exits nonzero on ``match``+``False``, so a fault-isolation regression
+    fails CI.  Latency percentiles are from the engine's measured
+    per-token wall clock on this host.
+    """
+    import time as _time
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serve import (FinishEvent, FinishReason, Request,
+                             ServeConfig, ServeEngine, TokenEvent)
+
+    cfg = get_config("smollm-360m", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    slots, victim = 4, 0            # 1 of 10 requests faulted (~10%)
+
+    def stream():
+        r = np.random.default_rng(0)
+        return [Request(r.integers(1, cfg.vocab,
+                                   size=int(r.integers(3, 20))).astype(np.int32),
+                        max_new=int(r.choice([4, 6, 8, 12])))
+                for _ in range(10)]
+
+    def drive(eng, poison=False):
+        for q in stream():
+            eng.submit(q)
+        results, counts, armed = {}, {}, poison
+        t0 = _time.perf_counter()
+        for ev in eng.serve_stream():
+            if isinstance(ev, TokenEvent):
+                counts[ev.rid] = counts.get(ev.rid, 0) + 1
+                if armed and ev.rid == victim and counts[ev.rid] == 2:
+                    st = eng._st    # poison the victim slot's KV rows
+                    slot = int(np.flatnonzero(st.sched.slot_req == victim)[0])
+                    st.cache = jax.tree.map(
+                        lambda x: x.at[:, slot].set(float("nan")), st.cache)
+                    armed = False
+            elif isinstance(ev, FinishEvent):
+                results[ev.rid] = ev.result
+        return results, _time.perf_counter() - t0, eng.last_serve_stats
+
+    def pct(xs, q):
+        return float(np.percentile(np.asarray(xs, np.float64), q)) if xs \
+            else float("nan")
+
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=slots, max_seq=96))
+    drive(eng)                                   # warm the jit caches
+    clean, clean_s, cst = drive(eng)
+    faulted, fault_s, fst = drive(eng, poison=True)
+
+    rows = []
+    for tag, res, dt, st in (("clean", clean, clean_s, cst),
+                             ("faulted_10pct", faulted, fault_s, fst)):
+        toks = sum(len(r.tokens) for r in res.values())
+        rows.append((f"serve_slo/{tag}", dt * 1e6,
+                     f"{toks / dt:.1f} tok/s requests={len(res)} "
+                     f"slots={slots} "
+                     f"ttft_ms_p50={pct(st['ttft_ms'], 50):.1f} "
+                     f"ttft_ms_p99={pct(st['ttft_ms'], 99):.1f} "
+                     f"token_lat_ms_p50={pct(st['token_latency_ms'], 50):.2f} "
+                     f"token_lat_ms_p99={pct(st['token_latency_ms'], 99):.2f} "
+                     f"faults={st['faults']}"))
+
+    vr = faulted[victim]
+    vc = clean[victim].tokens
+    ok = fst["faults"] == 1 and vr.finish == FinishReason.FAULT
+    ok &= 2 <= len(vr.tokens) < len(vc) + 1      # partial, clean prefix
+    ok &= bool((vr.tokens == vc[:len(vr.tokens)]).all())
+    for rid, r in clean.items():
+        if rid == victim:
+            continue
+        f = faulted[rid].tokens
+        ok &= faulted[rid].finish == r.finish
+        ok &= len(f) == len(r.tokens) and bool((f == r.tokens).all())
+    rows.append(("serve_slo/fault_isolation", float("nan"),
+                 f"invariance_match={ok} (victim quarantined FAULT with "
+                 f"clean-prefix partial of {len(vr.tokens)} tokens; other "
+                 f"{len(clean) - 1} requests bit-identical to clean run)"))
+    return rows

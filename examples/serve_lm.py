@@ -10,6 +10,12 @@ With ``--kv-layout paged`` the attention KV lives in a refcounted block
 pool; the stream below front-loads a shared system prompt, so repeated
 admissions serve their prefix from shared pages (copy-on-write) instead
 of re-prefilling — outputs stay bit-identical to the dense layout.
+
+The second half demonstrates the streaming API and the robustness
+contract: tokens are consumed live from ``serve_stream()``, a request is
+submitted mid-flight, and every request terminates with a structured
+``FinishReason`` (a tight deadline finishes ``DEADLINE`` with its
+partial output instead of raising).
 """
 
 import argparse
@@ -20,7 +26,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serve import Request, ServeConfig, ServeEngine
+from repro.serve import (FinishEvent, Request, ServeConfig, ServeEngine,
+                         TokenEvent)
 
 
 def main():
@@ -69,6 +76,33 @@ def main():
                   f"prompt tokens from shared pages)")
         for i, o in enumerate(outs[:2]):
             print(f"  req{i}: {reqs[i].tokens.tolist()} -> {o[:10].tolist()}...")
+
+    # ------------------------------------------------- streaming + statuses
+    # Consume the live event stream: tokens arrive per-step, a request is
+    # submitted while the engine is already decoding, and the tight
+    # deadline on req1 turns into a structured DEADLINE finish (partial
+    # output kept) rather than an exception.
+    print("\nstreaming demo (live admission + deadline):")
+    eng = ServeEngine(cfg, params, ServeConfig.from_model(
+        cfg, kv_layout=args.kv_layout, block_size=args.block_size))
+    rng = np.random.default_rng(1)
+    prompt = lambda n: rng.integers(1, cfg.vocab, size=n).astype(np.int32)
+    eng.submit(Request(prompt(6), max_new=12))
+    eng.submit(Request(prompt(4), max_new=64, deadline_ms=1.0))
+    got, results, submitted_late = {}, {}, False
+    for ev in eng.serve_stream():
+        if isinstance(ev, TokenEvent):
+            got.setdefault(ev.rid, []).append(ev.token)
+            if not submitted_late and len(got.get(0, [])) >= 3:
+                eng.submit(Request(prompt(5), max_new=4))  # mid-flight
+                submitted_late = True
+        elif isinstance(ev, FinishEvent):
+            results[ev.rid] = ev.result
+    for rid in sorted(results):
+        r = results[rid]
+        print(f"  req{rid}: finish={r.finish.value:9s} "
+              f"tokens={len(r.tokens)} ttft_ms={r.ttft_ms and round(r.ttft_ms, 1)}"
+              + (f" ({r.detail})" if r.detail else ""))
 
 
 if __name__ == "__main__":

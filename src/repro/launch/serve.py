@@ -1,5 +1,11 @@
 """Serving launcher: drive a request stream against the continuous-batching
-slot engine (or the static batch path with ``--static``)."""
+slot engine (or the static batch path with ``--static``).
+
+``--stream`` consumes the engine's live event stream (tokens print as they
+are produced); ``--deadline-ms`` / ``--max-queue`` / ``--max-queue-wait-ms``
+exercise the robustness contract (requests past their budget finish
+``DEADLINE``, overflow submissions ``SHED``) and the run ends with an SLO
+summary: TTFT / per-token latency percentiles and the finish-reason mix."""
 
 from __future__ import annotations
 
@@ -11,7 +17,12 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serve import Request, ServeConfig, ServeEngine
+from repro.serve import (FinishEvent, Request, ServeConfig, ServeEngine,
+                         TokenEvent)
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
 
 
 def main():
@@ -45,6 +56,21 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="LEN",
                     help="prepend one shared LEN-token system prompt to "
                          "half the stream (exercises the prefix cache)")
+    ap.add_argument("--stream", action="store_true",
+                    help="consume the live event stream: submit every "
+                         "request up front, print tokens as they arrive")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request wall-clock budget from submission; "
+                         "requests past it finish DEADLINE with their "
+                         "partial output")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the admission queue: submit() beyond it "
+                         "sheds with a structured SHED result")
+    ap.add_argument("--max-queue-wait-ms", type=float, default=None,
+                    help="engine-wide queue-wait deadline (ms)")
+    ap.add_argument("--strict", action="store_true",
+                    help="legacy raising behavior: invalid requests and "
+                         "overflow raise instead of shedding")
     args = ap.parse_args()
 
     # serving limits ride on the model config (get_config overrides), so no
@@ -56,10 +82,13 @@ def main():
         cfg = cfg.with_numerics(kv_cache_format=args.posit_kv)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, params,
-                      ServeConfig.from_model(cfg,
-                                             temperature=args.temperature,
-                                             kv_layout=args.kv_layout,
-                                             block_size=args.block_size))
+                      ServeConfig.from_model(
+                          cfg, temperature=args.temperature,
+                          kv_layout=args.kv_layout,
+                          block_size=args.block_size,
+                          max_queue=args.max_queue,
+                          max_queue_wait_ms=args.max_queue_wait_ms,
+                          strict=args.strict))
 
     # a mixed-length request stream: more requests than slots, ragged
     # prompts and budgets, so slots are freed and re-admitted mid-flight;
@@ -77,17 +106,41 @@ def main():
         if args.shared_prefix and i % 2 == 0:
             p = np.concatenate([sys_p, p])
         reqs.append(Request(p, max_new=int(
-            rng.integers(max(1, args.max_new // 2), args.max_new + 1))))
+            rng.integers(max(1, args.max_new // 2), args.max_new + 1)),
+            deadline_ms=args.deadline_ms))
 
     t0 = time.perf_counter()
-    outs = eng.serve_static(reqs) if args.static else eng.serve(reqs)
+    results = {}
+    if args.stream:
+        for r in reqs:
+            eng.submit(r)
+        for ev in eng.serve_stream():
+            if isinstance(ev, TokenEvent):
+                print(f"req{ev.rid} += {ev.token}")
+            elif isinstance(ev, FinishEvent):
+                results[ev.rid] = ev.result
+        outs = [results[i].tokens for i in sorted(results)]
+    elif args.static:
+        outs = eng.serve_static(reqs)
+    else:
+        outs = eng.serve(reqs)
+        results = dict(enumerate(eng.last_results or []))
     dt = time.perf_counter() - t0
     total = sum(len(o) for o in outs)
-    mode = "static batches" if args.static else "continuous"
+    mode = ("stream" if args.stream
+            else "static batches" if args.static else "continuous")
     print(f"# {mode}: {n_req} requests, {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s, slots={args.batch}, "
           f"kv_layout={args.kv_layout})")
     st = eng.last_serve_stats
+    if st and not args.static:
+        ttft, lats = st["ttft_ms"], st["token_latency_ms"]
+        reasons = dict(st["finish_reasons"])
+        print(f"# slo: ttft_ms p50={_pct(ttft, 50):.1f} "
+              f"p99={_pct(ttft, 99):.1f}  token_latency_ms "
+              f"p50={_pct(lats, 50):.2f} p99={_pct(lats, 99):.2f}  "
+              f"finish={reasons}  faults={st['faults']} "
+              f"deadline={st['deadline_evictions']} shed={st['shed']}")
     if st and st.get("kv_layout") == "paged":
         print(f"# paged: block_size={st['block_size']} "
               f"peak_blocks={st['peak_blocks_in_use']}/{st['pool_blocks']} "
@@ -95,7 +148,10 @@ def main():
               f"({st['prefix_hit_tokens']}/{st['prompt_tokens']} prompt "
               f"tokens served from shared pages)")
     for i, o in enumerate(outs):
-        print(f"req{i}: prompt={reqs[i].tokens.tolist()} -> {o.tolist()}")
+        tag = (f" [{results[i].finish.value}]"
+               if i in results and results[i].detail else "")
+        print(f"req{i}: prompt={reqs[i].tokens.tolist()} -> "
+              f"{np.asarray(o).tolist()}{tag}")
 
 
 if __name__ == "__main__":

@@ -16,7 +16,14 @@ Public entry points:
       pos is a per-slot (B,) int32 position vector (scalar broadcasts), so
       one jitted step serves batch slots at heterogeneous sequence offsets;
       an optional ``block_tables`` (B, max_blocks) int32 arg switches the
-      kv cache to the PAGED layout (see init_paged_cache)
+      kv cache to the PAGED layout (see init_paged_cache); static
+      ``with_health=True`` additionally returns the per-slot
+      :func:`logits_health` probe, computed in the same jitted step
+  logits_health(cfg, logits) -> (B,) bool
+      per-slot fault probe: True where the last-position logits over the
+      real vocab are all finite (a NaR anywhere in a slot's datapath
+      dequantizes to NaN and trips this); the serve engine quarantines
+      slots whose probe goes False
   write_cache_slot(cfg, cache, mini, slot) -> cache
       scatter a freshly prefilled batch=1 cache into one batch slot of a
       persistent serving cache (continuous-batching admission)
@@ -480,8 +487,25 @@ def _gate_state(new, old, pos, start):
                                n, o), new, old)
 
 
+def logits_health(cfg: ModelConfig, lg) -> jnp.ndarray:
+    """Per-slot fault probe: (B,) bool, True where the LAST position's
+    logits over the real vocab are all finite.
+
+    Posit arithmetic concentrates every fault into NaR, which
+    ``posit_dequantize`` maps to NaN — so one finiteness reduction over the
+    logits catches a NaR (or float Inf/NaN) anywhere in a slot's datapath:
+    a 0 denominator in an SRT divide, a corrupted KV page, a poisoned
+    activation.  The reduction is per batch row, so one slot's fault never
+    shows in another slot's probe, and it runs in-device inside the same
+    jitted step that produced the logits — the (B,) result ships with the
+    existing per-step token transfer, no extra sync.
+    """
+    row = lg[:, -1, : cfg.vocab].astype(jnp.float32)
+    return jnp.all(jnp.isfinite(row), axis=-1)
+
+
 def decode_step(params: Params, cfg: ModelConfig, cache, token, pos,
-                start=None, block_tables=None):
+                start=None, block_tables=None, with_health: bool = False):
     """One-token decode. token: (B, 1) int32; pos: PER-SLOT (B,) int32
     position vector (a scalar broadcasts — the aligned static-batch case).
 
@@ -503,6 +527,11 @@ def decode_step(params: Params, cfg: ModelConfig, cache, token, pos,
     ``block_tables[b, r // block_size]``.  Decode outputs are bit-identical
     to the dense layout — the per-slot logical kv sequence is the same
     values in the same order, only its physical placement changes.
+
+    ``with_health=True`` (static) additionally returns the per-slot
+    :func:`logits_health` probe — ``(logits, cache, health)`` — computed on
+    the step's own logits inside the same jitted call, so fault detection
+    costs one fused (B,) reduction and no extra device round-trip.
     """
     B = token.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
@@ -595,6 +624,8 @@ def decode_step(params: Params, cfg: ModelConfig, cache, token, pos,
 
     x = L.rmsnorm(x, params["ln_f"], cfg)
     lg = L.logits(params["embed"], x, cfg)
+    if with_health:
+        return lg, new_cache, logits_health(cfg, lg)
     return lg, new_cache
 
 

@@ -1,1 +1,10 @@
-from .engine import Request, Scheduler, ServeConfig, ServeEngine  # noqa: F401
+from .engine import (  # noqa: F401
+    FinishEvent,
+    FinishReason,
+    Request,
+    Scheduler,
+    ServeConfig,
+    ServeEngine,
+    ServeResult,
+    TokenEvent,
+)

@@ -27,8 +27,8 @@ Slot lifecycle (the :class:`Scheduler`)
   and its first output token sampled from the prefill logits.
 * **Decode**: every step runs ONE ``decode_step`` over all B slots at
   their own positions, then ONE vectorized sample (per-slot temperature /
-  PRNG key / step counter — no per-slot Python loop, one (B,) device->host
-  transfer per step for EOS bookkeeping).
+  PRNG key / step counter — no per-slot Python loop, one (B, 2) device->
+  host transfer per step carrying each slot's token AND health bit).
 * **Eviction**: a slot frees when its request hits its ``eos_id`` or its
   per-request ``max_new`` budget (clamped against ``max_seq``).  Freed
   slots keep decoding garbage (their outputs are ignored and their cache
@@ -94,8 +94,8 @@ GLOBAL block pool ``(num_blocks, block_size, KV, hd)`` plus an engine-owned
     in an LRU cached list (still matchable) and is reclaimed only when
     the free list runs dry; unregistered blocks return to the free list
     directly.  An admission that cannot get enough blocks is deferred
-    until an eviction frees some (or raises a clean ``ValueError`` if no
-    request is in flight to ever free one).
+    until an eviction frees some (or sheds / raises a clean ``ValueError``
+    if no request is in flight to ever free one).
   * **Prefix sharing** — admission hashes the prompt's full token blocks
     as a rolling chain and looks the chain up in the allocator's prefix
     table; matches compare the FULL token prefix (hash collisions cannot
@@ -115,13 +115,86 @@ GLOBAL block pool ``(num_blocks, block_size, KV, hd)`` plus an engine-owned
 
 Families: dense/moe page their kv caches; ssm/hybrid (recurrent O(1)
 state) silently keep the dense slot path under ``kv_layout="paged"``.
+
+Serving robustness contract
+===========================
+The serve loop is fault-isolating and always-admitting: a request can
+arrive, expire, or go numerically toxic without touching any other
+request's tokens, and every submitted request terminates with exactly one
+structured :class:`ServeResult` — the loop itself never raises mid-stream
+unless ``strict`` is on.
+
+**Status taxonomy** (:class:`FinishReason`; every request gets exactly
+one, delivered in a :class:`FinishEvent` and in ``ServeResult.finish``):
+
+  ``EOS``       the request sampled its ``eos_id`` (output includes it)
+  ``MAX_NEW``   the per-request token budget (clamped to ``max_seq``) ran
+                out
+  ``DEADLINE``  ``Request.deadline_ms`` (wall-clock ms since submission)
+                or ``ServeConfig.max_queue_wait_ms`` (queue-wait cap)
+                expired; an in-flight request is evicted with its partial
+                output, a queued one finishes empty
+  ``SHED``      admission refused: invalid request (empty / oversized
+                prompt, ``max_new < 1``) under ``strict=False``, bounded-
+                queue overflow (``ServeConfig.max_queue``), or a paged
+                pool that can never satisfy the request
+  ``FAULT``     the NaR quarantine tripped (below); partial output is
+                returned
+
+**NaR / non-finite quarantine.**  Posit arithmetic concentrates every
+error into NaR, which dequantizes to NaN — so one in-device finiteness
+reduction over each slot's last-position logits
+(:func:`repro.models.transformer.logits_health`) catches a NaR (or float
+Inf/NaN) anywhere in a slot's datapath.  The ``(B,)`` health bits ship
+packed with the sampled tokens in the existing per-step transfer (no
+extra device sync).  A slot whose probe goes False is evicted with
+``FAULT`` *before* its garbage token is recorded, its paged blocks are
+freed (and never registered for prefix sharing), and its partial output
+is returned.  Because the model is batch-composition invariant (pad
+masking, per-slot positions, per-request keys) and — for MoE — expert
+capacity dispatch is per batch row, every other slot's tokens are
+bit-identical to a fault-free run; ``tests/test_serve_faults.py`` asserts
+this across dense/paged layouts.  ``ServeConfig.health_checks=False``
+disables the sweep (the probe still computes in-device; its bit is
+ignored).
+
+**Deadlines** are wall-clock milliseconds measured from ``submit()``
+(``serve()`` submits all requests up front).  Expiry is checked once per
+decode step and once per admission sweep — resolution is therefore one
+decode step, not a hard real-time bound.  The engine takes an injectable
+``clock`` callable (seconds, default ``time.monotonic``) so tests drive
+deadlines deterministically.
+
+**Backpressure.**  ``ServeConfig.max_queue`` bounds the number of
+requests waiting for a slot; ``submit()`` beyond it sheds (or raises
+under ``strict``).  ``serve(requests)`` batch submission is exempt — the
+caller already holds the whole list.
+
+**Snapshot / restore.**  :meth:`ServeEngine.snapshot` captures the entire
+serve session — scheduler, allocator (refcounts, free list, LRU park,
+prefix table), per-slot host mirrors, per-request bookkeeping, and the
+device cache leaves (``jax.device_get``) — as one picklable dict.
+:meth:`ServeEngine.restore` on a compatible engine (same ``ModelConfig``,
+params, and ``ServeConfig``; this is the caller's contract) rebuilds the
+session so the remaining stream completes with BIT-IDENTICAL tokens:
+decode state is exactly (cache leaves, ``pos``/``start``/``cur`` mirrors)
+and sampling state is exactly (per-request key, step counter), all of
+which the snapshot carries.  Deadline clocks are rebased on restore
+(elapsed time is preserved, downtime does not count against a deadline).
+
+``strict=True`` (``ServeConfig.strict`` or the per-call override)
+restores the legacy raising behavior for tests and batch drivers that
+prefer exceptions: invalid requests, queue overflow, and unsatisfiable
+paged admissions raise ``ValueError`` instead of shedding.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import List, Optional, Sequence, Union
+import enum
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -153,6 +226,39 @@ def _bucket(n: int, max_seq: int) -> int:
     return p if p + 1 <= max_seq else n
 
 
+class FinishReason(str, enum.Enum):
+    """Terminal status of a served request (see module docstring)."""
+
+    EOS = "eos"            # sampled its eos_id
+    MAX_NEW = "max_new"    # token budget exhausted
+    DEADLINE = "deadline"  # deadline_ms / max_queue_wait_ms expired
+    SHED = "shed"          # refused at admission (overflow / invalid)
+    FAULT = "fault"        # NaR / non-finite quarantine tripped
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Structured terminal record for one request.
+
+    ``tokens`` is always present (possibly empty / partial);
+    ``queue_wait_ms``/``ttft_ms``/``latency_ms`` are wall-clock
+    milliseconds (``ttft_ms`` is None when no token was ever produced).
+    """
+
+    rid: int
+    tokens: np.ndarray
+    finish: FinishReason
+    detail: str = ""
+    queue_wait_ms: float = 0.0
+    ttft_ms: Optional[float] = None
+    latency_ms: float = 0.0
+
+
+#: Streaming events yielded by :meth:`ServeEngine.serve_stream`.
+TokenEvent = collections.namedtuple("TokenEvent", ("rid", "token"))
+FinishEvent = collections.namedtuple("FinishEvent", ("rid", "result"))
+
+
 @dataclasses.dataclass
 class ServeConfig:
     """Engine limits + default sampling parameters.
@@ -175,6 +281,11 @@ class ServeConfig:
     kv_layout: str = "dense"
     block_size: int = 16                 # pool page rows (pow2, 8..128)
     num_blocks: Optional[int] = None     # pool size; None = worst case + sink
+    # robustness knobs (see "Serving robustness contract" above)
+    max_queue: Optional[int] = None          # submit() backpressure bound
+    max_queue_wait_ms: Optional[float] = None  # queue-wait deadline for all
+    strict: bool = False                 # legacy raising behavior
+    health_checks: bool = True           # NaR / non-finite quarantine
 
     @classmethod
     def from_model(cls, cfg: ModelConfig, **overrides) -> "ServeConfig":
@@ -190,7 +301,9 @@ class Request:
     ``temperature``/``eos_id`` default to the engine's ``ServeConfig``
     values; ``seed`` pins the sampling-key id (defaults to the request's
     submission index) so sampled decoding reproduces across runs and batch
-    compositions.
+    compositions.  ``deadline_ms`` is a wall-clock budget in milliseconds
+    from submission (None = no deadline): a request still queued or still
+    decoding past it finishes ``DEADLINE`` with whatever it produced.
     """
 
     tokens: np.ndarray
@@ -198,6 +311,7 @@ class Request:
     temperature: Optional[float] = None
     eos_id: Optional[int] = None
     seed: Optional[int] = None
+    deadline_ms: Optional[float] = None
 
 
 class BlockAllocator:
@@ -268,6 +382,18 @@ class BlockAllocator:
                 self.cached[bid] = None  # registered: park, stay matchable
             else:
                 self.free.append(bid)
+
+    def quarantine(self, bid: int) -> None:
+        """Fault path (call AFTER the owning slot's decref): a block owned
+        by a quarantined slot may hold poisoned rows and must never be
+        served to a future prefix match.  If it just parked (refcount 0),
+        unregister it and return it straight to the free list; a block
+        still shared (refcount > 0) stays — its other readers would trip
+        their own health probes and quarantine in turn."""
+        if self.refcount[bid] == 0 and bid in self.owner:
+            self.cached.pop(bid, None)
+            self._unregister(bid)
+            self.free.append(bid)
 
     def blocks_in_use(self) -> int:
         return int((self.refcount > 0).sum())
@@ -341,7 +467,15 @@ class Scheduler:
     def free_slots(self) -> np.ndarray:
         return np.flatnonzero(~self.active)
 
+    def grow_out(self, max_out: int) -> None:
+        """Widen the output buffer to hold ``max_out`` tokens per slot
+        (live submission means the largest budget isn't known up front)."""
+        cur = self.out_buf.shape[1]
+        if max_out > cur:
+            self.out_buf = np.pad(self.out_buf, ((0, 0), (0, max_out - cur)))
+
     def admit(self, slot: int, rid: int, max_new: int) -> None:
+        self.grow_out(max_new)
         self.active[slot] = True
         self.slot_req[slot] = rid
         self.out_len[slot] = 0
@@ -375,18 +509,93 @@ class Scheduler:
         return bool(self.active.any())
 
 
+class _ServeState:
+    """One serve SESSION: everything the engine mutates between ``submit``
+    and the last ``FinishEvent``.  A fresh state is created whenever a
+    request is submitted to an idle engine, so request ids (and therefore
+    default sampling-key ids) restart at 0 per session — matching the
+    stream indices the pre-streaming ``serve()`` used.  ``snapshot()``
+    serializes exactly this object (+ the device cache leaves)."""
+
+    def __init__(self, eng: "ServeEngine", init_cache: bool = True):
+        sc = eng.sc
+        B = sc.max_batch
+        # per-request bookkeeping (index = rid)
+        self.reqs: List[Request] = []
+        self.plans: List[Optional[tuple]] = []   # (P, start, budget) | None
+        self.req_temp: List[float] = []
+        self.req_eos: List[int] = []
+        self.req_key: List[int] = []             # resolved sampling-key id
+        self.queue: collections.deque = collections.deque()
+        self.pending: List = []                  # events awaiting the stream
+        self.results: Dict[int, ServeResult] = {}
+        self.t_submit: Dict[int, float] = {}     # ms, engine clock
+        self.t_admit: Dict[int, float] = {}
+        self.ttft: Dict[int, float] = {}         # ms durations
+        self.sched = Scheduler(B, 1)
+        # device-facing per-slot state (host mirrors, shipped each step)
+        self.pos = np.zeros(B, np.int32)
+        self.start = np.zeros(B, np.int32)
+        self.cur = np.zeros((B, 1), np.int32)
+        self.temps = np.zeros(B, np.float32)
+        self.eos = np.full(B, -1, np.int32)
+        self.keys = np.zeros((B, 2), np.uint32)
+        self.steps = np.zeros(B, np.int32)
+        self.last_tok_ms = np.zeros(B, np.float64)
+        # caches
+        if eng._paged:
+            self.cache = (T.init_paged_cache(eng.cfg, eng._num_blocks,
+                                             sc.block_size)
+                          if init_cache else None)
+            self.alloc = BlockAllocator(eng._num_blocks, sc.block_size)
+            self.bt_host = np.zeros((B, eng._max_blocks), np.int32)
+            self.slot_blocks: List[List[int]] = [[] for _ in range(B)]
+            self.mini_zeros: Dict[int, object] = {}
+        else:
+            self.cache = (T.init_cache(eng.cfg, B, sc.max_seq)
+                          if init_cache else None)
+            self.mini_zero = None     # built lazily (first admission)
+        # measured counters
+        self.decode_steps = 0
+        self.active_slot_steps = 0
+        self.admissions = 0
+        self.faults = 0
+        self.deadline_evictions = 0
+        self.shed = 0
+        self.hit_tokens = 0
+        self.fill_tokens = 0
+        self.prompt_tokens = 0
+        self.owned_total = 0
+        self.shared_total = 0
+        self.peak_blocks = 0
+        self.ttfts: List[float] = []
+        self.token_lats: List[float] = []
+
+    @property
+    def drained(self) -> bool:
+        return not (self.pending or self.queue or self.sched.any_active)
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params,
-                 sc: Optional[ServeConfig] = None):
+                 sc: Optional[ServeConfig] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.cfg = cfg
         self.params = params
         self.sc = sc if sc is not None else ServeConfig.from_model(cfg)
+        # injectable wall clock (seconds) so deadline tests run
+        # deterministically without sleeping
+        self._clock = time.monotonic if clock is None else clock
         # the persistent cache is donated (argument 1 / 0): it is rebound on
         # every step, and donation keeps a compiled backend from copying the
         # whole B x max_seq multi-layer cache per decode step / admission.
         # _prefill must NOT donate: serve() reuses one zero mini-cache.
+        # decode always computes the (B,) health probe in-device
+        # (with_health=True): it rides the same jitted call and the same
+        # host transfer, so fault detection costs no extra sync.
         self._decode = jax.jit(
-            lambda p, c, t, i, s: T.decode_step(p, cfg, c, t, i, s),
+            lambda p, c, t, i, s: T.decode_step(p, cfg, c, t, i, s,
+                                                with_health=True),
             donate_argnums=1)
         self._prefill = jax.jit(
             lambda p, c, t, s: T.prefill(p, cfg, {"tokens": t}, c, s))
@@ -395,8 +604,14 @@ class ServeEngine:
             donate_argnums=0)
         self._sample_full = jax.jit(self._sample_impl)
         self._sample_greedy = jax.jit(self._greedy_impl)
+        # packed serve-loop samplers: one (B, 2) int32 [token, healthy]
+        self._sample_full_h = jax.jit(self._sample_h_impl)
+        self._sample_greedy_h = jax.jit(self._greedy_h_impl)
+        self._health = jax.jit(lambda lg: T.logits_health(cfg, lg))
         self._base_key = jax.random.PRNGKey(self.sc.seed)
-        self.last_serve_stats = None    # measured counters of the last serve()
+        self.last_serve_stats = None    # measured counters of the last serve
+        self.last_results: Optional[List[ServeResult]] = None
+        self._st: Optional[_ServeState] = None
 
         # ------------------------------------------------------ paged layout
         sc = self.sc
@@ -431,7 +646,7 @@ class ServeEngine:
             self._share = not cfg.numerics.kv_cache_format
             self._decode_paged = jax.jit(
                 lambda p, c, bt, t, i, s: T.decode_step(
-                    p, cfg, c, t, i, s, block_tables=bt),
+                    p, cfg, c, t, i, s, block_tables=bt, with_health=True),
                 donate_argnums=1)
             self._prefill_t0 = jax.jit(
                 lambda p, c, t, s, t0: T.prefill(p, cfg, {"tokens": t}, c,
@@ -479,6 +694,14 @@ class ServeEngine:
         sampled = jax.vmap(draw)(keys, steps, lg, temps).astype(jnp.int32)
         return jnp.where(temps > 0.0, sampled, greedy)[:, None]
 
+    def _greedy_h_impl(self, lg, health):
+        tok = self._greedy_impl(lg)[:, 0]
+        return jnp.stack([tok, health.astype(jnp.int32)], axis=1)
+
+    def _sample_h_impl(self, lg, health, temps, keys, steps):
+        tok = self._sample_impl(lg, temps, keys, steps)[:, 0]
+        return jnp.stack([tok, health.astype(jnp.int32)], axis=1)
+
     def _sample(self, lg, temps_np, keys, steps):
         """Jitted sampler dispatch: all-greedy batches skip the per-row
         categorical (greedy rows argmax identically on both paths, so the
@@ -495,14 +718,27 @@ class ServeEngine:
         return self._sample_full(lg, jnp.array(temps_np, jnp.float32),
                                  keys, steps)
 
+    def _sample_packed(self, lg, health, temps_np, keys, steps):
+        """Serve-loop sampler: (B, 2) int32 ``[token, healthy]`` — the
+        health bit rides the token transfer, no second device sync.  Token
+        values are identical to :meth:`_sample` (same impls)."""
+        if not np.any(np.asarray(temps_np) > 0.0):
+            return self._sample_greedy_h(lg, health)
+        return self._sample_full_h(lg, health,
+                                   jnp.array(temps_np, jnp.float32),
+                                   keys, steps)
+
     def _request_key(self, rid: int):
         return jax.random.fold_in(self._base_key, rid)
+
+    def _now_ms(self) -> float:
+        return self._clock() * 1e3
 
     # ------------------------------------------------------- static batching
 
     def generate(self, prompts: List[np.ndarray], max_new: int = 32,
-                 temperature=None, eos_id=None,
-                 seeds=None) -> List[np.ndarray]:
+                 temperature=None, eos_id=None, seeds=None,
+                 strict: Optional[bool] = None) -> List[np.ndarray]:
         """Serve one static batch to completion (all prompts admitted
         together, left-padded to the longest; slots idle after their EOS).
         prompts: list of 1D int32 token arrays (<= max_batch).  For
@@ -513,44 +749,98 @@ class ServeEngine:
         call (scalar or one per prompt); ``seeds`` pins each prompt's
         sampling-key id (defaults to the batch index), letting a sampled
         request reproduce its :meth:`serve` stream (same ``Request.seed``).
+
+        Under ``strict=True`` (or ``ServeConfig.strict``) an oversized
+        batch / empty prompt / oversized prompt raises ``ValueError`` as
+        before; under ``strict=False`` (the default) invalid prompts are
+        SHED — their output is empty, their batch row decodes a dummy
+        token (batch invariance keeps the other rows bit-identical), and
+        ``self.last_results`` carries the per-prompt :class:`ServeResult`.
         """
         sc = self.sc
+        strict = sc.strict if strict is None else strict
         B = len(prompts)
+        self.last_results = None
         if B == 0:
             return []
+        shed: Dict[int, str] = {}
         if B > sc.max_batch:
-            raise ValueError(
-                f"{B} prompts exceed max_batch={sc.max_batch}; submit them "
-                f"through serve(), which queues onto free slots")
-        if min(len(p) for p in prompts) == 0:
+            if strict:
+                raise ValueError(
+                    f"{B} prompts exceed max_batch={sc.max_batch}; submit "
+                    f"them through serve(), which queues onto free slots")
+            for i in range(sc.max_batch, B):
+                shed[i] = (f"{B} prompts exceed max_batch={sc.max_batch}; "
+                           "overflow shed (use serve() to queue)")
+            prompts = prompts[:sc.max_batch]
+        if strict and min(len(p) for p in prompts) == 0:
             raise ValueError("prompts must be non-empty")
-        plen = max(len(p) for p in prompts)
-        if plen + 1 > sc.max_seq:
+        work = list(prompts)
+        for i, p in enumerate(work):
+            if len(p) == 0:
+                shed[i] = "prompt must be non-empty"
+            elif len(p) + 1 > sc.max_seq:
+                if strict:
+                    raise ValueError(
+                        f"prompt length {len(p)} leaves no room to generate "
+                        f"within max_seq={sc.max_seq}")
+                shed[i] = (f"prompt length {len(p)} leaves no room to "
+                           f"generate within max_seq={sc.max_seq}")
+            if i in shed:
+                # dummy row: decodes alongside the batch; batch invariance
+                # (pad masking, per-slot state) keeps other rows bit-equal
+                work[i] = np.array([1], np.int32)
+        plen = max(len(p) for p in work)
+        if strict and plen + 1 > sc.max_seq:
             raise ValueError(
                 f"prompt length {plen} leaves no room to generate within "
                 f"max_seq={sc.max_seq}")
+
+        def _results(outs, n_prompts):
+            res = []
+            for i in range(n_prompts):
+                if i in shed:
+                    res.append(ServeResult(i, np.zeros(0, np.int32),
+                                           FinishReason.SHED, shed[i]))
+                else:
+                    o = outs[i]
+                    fin = (FinishReason.EOS
+                           if o.size and o[-1] == eos_arr[i]
+                           else FinishReason.MAX_NEW)
+                    res.append(ServeResult(i, o, fin))
+            return res
+
+        eos_arr = _broadcast(sc.eos_id if eos_id is None else eos_id,
+                             len(work), np.int32, "eos_id")
         if max_new < 1:
-            return [np.zeros(0, np.int32) for _ in prompts]
+            outs = [np.zeros(0, np.int32) for _ in range(B)]
+            self.last_results = [
+                ServeResult(i, outs[i],
+                            FinishReason.SHED if i in shed
+                            else FinishReason.MAX_NEW,
+                            shed.get(i, "max_new < 1"))
+                for i in range(B)]
+            return outs
         # per-batch max-token clamp against the cache size
         max_new = min(max_new, sc.max_seq - plen)
 
+        Bw = len(work)
         temps = _broadcast(sc.temperature if temperature is None
-                           else temperature, B, np.float32, "temperature")
-        eos = _broadcast(sc.eos_id if eos_id is None else eos_id, B,
-                         np.int32, "eos_id")
-        key_ids = range(B) if seeds is None else seeds
+                           else temperature, Bw, np.float32, "temperature")
+        eos = eos_arr
+        key_ids = range(Bw) if seeds is None else seeds
         keys = jnp.stack([self._request_key(i) for i in key_ids])
 
         # left-pad to align decode positions; start[b] = first real slot,
         # so pad positions can be masked out downstream
-        toks = np.zeros((B, plen), np.int32)
-        starts = np.zeros(B, np.int32)
-        for i, p in enumerate(prompts):
+        toks = np.zeros((Bw, plen), np.int32)
+        starts = np.zeros(Bw, np.int32)
+        for i, p in enumerate(work):
             toks[i, plen - len(p):] = p
             starts[i] = plen - len(p)
         start = jnp.asarray(starts)
 
-        cache = T.init_cache(self.cfg, B, sc.max_seq)
+        cache = T.init_cache(self.cfg, Bw, sc.max_seq)
 
         # whole-prompt prefill in one jitted call (chunked attention for
         # dense, scanned decode for the rest) — not plen dispatches
@@ -565,34 +855,40 @@ class ServeEngine:
             # tile geometry -> bit-identical decode.
             mb = self._max_blocks
             bt = jnp.asarray(
-                1 + np.arange(B * mb, dtype=np.int32).reshape(B, mb))
-            pool = T.init_paged_cache(self.cfg, B * mb + 1, sc.block_size)
+                1 + np.arange(Bw * mb, dtype=np.int32).reshape(Bw, mb))
+            pool = T.init_paged_cache(self.cfg, Bw * mb + 1, sc.block_size)
             cache = self._scatter_pool(pool, cache, bt)
 
-        steps = jnp.zeros((B,), jnp.int32)
+        steps = jnp.zeros((Bw,), jnp.int32)
         cur = self._sample(lg, temps, keys, steps)
         emitted = []
-        done = np.zeros(B, bool)
+        done = np.zeros(Bw, bool)
         for step in range(max_new):
             tok_h = np.asarray(cur[:, 0])   # ONE (B,) transfer per step
             emitted.append(tok_h)
             done |= tok_h == eos            # vectorized EOS tracking
             if done.all() or step == max_new - 1:
                 break
-            pos = jnp.full((B,), plen + step, jnp.int32)
+            pos = jnp.full((Bw,), plen + step, jnp.int32)
             if self._paged:
-                lg, cache = self._decode_paged(self.params, cache, bt, cur,
-                                               pos, start)
+                lg, cache, _h = self._decode_paged(self.params, cache, bt,
+                                                   cur, pos, start)
             else:
-                lg, cache = self._decode(self.params, cache, cur, pos, start)
+                lg, cache, _h = self._decode(self.params, cache, cur, pos,
+                                             start)
             steps = steps + 1
             cur = self._sample(lg, temps, keys, steps)
         mat = np.stack(emitted, axis=1)     # (B, <=max_new)
         outs = []
-        for i in range(B):
+        for i in range(Bw):
+            if i in shed:
+                outs.append(np.zeros(0, np.int32))
+                continue
             hits = np.flatnonzero(mat[i] == eos[i])
             end = hits[0] + 1 if hits.size else mat.shape[1]
             outs.append(mat[i, :end].astype(np.int32))
+        outs += [np.zeros(0, np.int32)] * (B - Bw)   # overflow-shed tail
+        self.last_results = _results(outs, B)
         return outs
 
     def serve_static(self, requests: Sequence,
@@ -628,20 +924,141 @@ class ServeEngine:
 
     # --------------------------------------------------- continuous batching
 
+    def _plan(self, r: Request) -> tuple:
+        """Validate one request -> admission plan ``(P, start, budget)``.
+        Raises ``ValueError`` (caller decides raise vs shed)."""
+        sc = self.sc
+        plen = len(r.tokens)
+        if plen == 0:
+            raise ValueError("prompt is empty")
+        if plen + 1 > sc.max_seq:
+            raise ValueError(
+                f"prompt length {plen} cannot fit max_seq={sc.max_seq} "
+                "with at least one new token")
+        if r.max_new < 1:
+            raise ValueError(f"max_new={r.max_new} < 1")
+        # the budget clamp must match generate()'s (max_seq - plen) so a
+        # request emits the same number of tokens either way: when the
+        # power-of-two bucket's pad rows would eat into that budget,
+        # admit at the exact prompt length instead (one extra jit
+        # signature, but no silent truncation)
+        budget = min(r.max_new, sc.max_seq - plen)
+        if self._paged:
+            # paged admission prefills UNPADDED at start 0: prefix
+            # pages must be a pure function of the prefix tokens (the
+            # sharing contract), which left-pad offsets would break.
+            # One jit signature per (plen, t0) pair instead of per
+            # bucket — the price of content-addressable pages.
+            return (plen, 0, budget)
+        P = _bucket(plen, sc.max_seq)
+        if sc.max_seq - P < budget:
+            P = plen
+        return (P, P - plen, budget)
+
+    def _scalar_default(self, value, what: str, dtype):
+        arr = np.asarray(value)
+        if arr.ndim != 0:
+            raise ValueError(
+                f"per-request ServeConfig {what} (a sequence) only works "
+                f"through serve(), which resolves it by stream index; "
+                f"submit() needs Request.{what} or a scalar default")
+        return dtype(arr)
+
+    def _register(self, st: _ServeState, r: Request) -> int:
+        """Append request-level bookkeeping; returns its rid."""
+        rid = len(st.reqs)
+        st.reqs.append(r)
+        st.plans.append(None)
+        st.req_temp.append(
+            float(r.temperature) if r.temperature is not None
+            else self._scalar_default(self.sc.temperature, "temperature",
+                                      float))
+        st.req_eos.append(
+            int(r.eos_id) if r.eos_id is not None
+            else self._scalar_default(self.sc.eos_id, "eos_id", int))
+        st.req_key.append(r.seed if r.seed is not None else rid)
+        st.t_submit[rid] = self._now_ms()
+        return rid
+
+    def _finish(self, st: _ServeState, rid: int, tokens,
+                reason: FinishReason, detail: str, now: float) -> ServeResult:
+        t_sub = st.t_submit.get(rid, now)
+        res = ServeResult(
+            rid=rid, tokens=np.asarray(tokens, np.int32), finish=reason,
+            detail=detail,
+            queue_wait_ms=max(0.0, st.t_admit.get(rid, now) - t_sub),
+            ttft_ms=st.ttft.get(rid),
+            latency_ms=max(0.0, now - t_sub))
+        st.results[rid] = res
+        return res
+
+    def submit(self, request, max_new: int = 32,
+               strict: Optional[bool] = None, _bounded: bool = True) -> int:
+        """Queue one request onto the live engine; returns its rid.
+
+        Can be called before :meth:`serve_stream` or *while* a stream is
+        being consumed — the request is admitted into the next freed slot.
+        A request submitted to an IDLE engine (previous stream fully
+        drained) starts a fresh session: rids — and therefore default
+        sampling-key ids — restart at 0.
+
+        Invalid requests and queue overflow raise under ``strict`` and
+        SHED otherwise (the :class:`FinishEvent` is delivered by the
+        stream; the :class:`ServeResult` is also immediately final).
+        """
+        sc = self.sc
+        strict = sc.strict if strict is None else strict
+        r = (request if isinstance(request, Request)
+             else Request(np.asarray(request, np.int32), max_new=max_new))
+        if self._st is None or self._st.drained:
+            self._st = _ServeState(self)
+        st = self._st
+        try:
+            plan = self._plan(r)
+        except ValueError as e:
+            if strict:
+                raise
+            rid = self._register(st, r)
+            st.shed += 1
+            res = self._finish(st, rid, np.zeros(0, np.int32),
+                               FinishReason.SHED, str(e), self._now_ms())
+            st.pending.append(FinishEvent(rid, res))
+            return rid
+        if (_bounded and sc.max_queue is not None
+                and len(st.queue) >= sc.max_queue):
+            msg = (f"queue overflow: {len(st.queue)} requests already "
+                   f"queued (max_queue={sc.max_queue})")
+            if strict:
+                raise ValueError(msg)
+            rid = self._register(st, r)
+            st.shed += 1
+            res = self._finish(st, rid, np.zeros(0, np.int32),
+                               FinishReason.SHED, msg, self._now_ms())
+            st.pending.append(FinishEvent(rid, res))
+            return rid
+        rid = self._register(st, r)
+        st.plans[rid] = plan
+        st.queue.append(rid)
+        return rid
+
     def serve(self, requests: Sequence, max_new: int = 32,
-              ) -> List[np.ndarray]:
+              strict: Optional[bool] = None) -> List[np.ndarray]:
         """Serve a request stream with continuous batching.
 
         ``requests``: a sequence of :class:`Request` or raw 1D int32 token
         arrays (wrapped with ``max_new`` and the config's sampling
         defaults).  Any number of requests — they queue onto the engine's
         ``max_batch`` slots, each slot freed and re-admitted the moment its
-        request finishes.  Returns outputs in request order, and leaves
-        measured scheduler counters in ``self.last_serve_stats``
-        (decode_steps, slot_steps, active_slot_steps, admissions).
+        request finishes.  Returns outputs in request order (a shed /
+        faulted / expired request yields its — possibly empty — partial
+        output); ``self.last_results`` carries the per-request
+        :class:`ServeResult` records and ``self.last_serve_stats`` the
+        measured scheduler/SLO counters.  For token-level streaming and
+        live admission use :meth:`submit` + :meth:`serve_stream` directly
+        (this method is that loop, drained to completion).
         """
         sc = self.sc
-        B = sc.max_batch
+        strict = sc.strict if strict is None else strict
         reqs: List[Request] = []
         for r in requests:
             if not isinstance(r, Request):
@@ -650,283 +1067,567 @@ class ServeEngine:
         n = len(reqs)
         if n == 0:
             return []
-
-        # validation + per-request max-token clamp (satellites: clean
-        # ValueError on overflow, never a bare assert)
-        plans = []                       # (bucket P, start offset, budget)
-        for i, r in enumerate(reqs):
-            plen = len(r.tokens)
-            if plen == 0:
-                raise ValueError(f"request {i} has an empty prompt")
-            if plen + 1 > sc.max_seq:
-                raise ValueError(
-                    f"request {i} prompt length {plen} cannot fit "
-                    f"max_seq={sc.max_seq} with at least one new token")
-            if r.max_new < 1:
-                raise ValueError(f"request {i} has max_new={r.max_new} < 1")
-            # the budget clamp must match generate()'s (max_seq - plen) so a
-            # request emits the same number of tokens either way: when the
-            # power-of-two bucket's pad rows would eat into that budget,
-            # admit at the exact prompt length instead (one extra jit
-            # signature, but no silent truncation)
-            budget = min(r.max_new, sc.max_seq - plen)
-            if self._paged:
-                # paged admission prefills UNPADDED at start 0: prefix
-                # pages must be a pure function of the prefix tokens (the
-                # sharing contract), which left-pad offsets would break.
-                # One jit signature per (plen, t0) pair instead of per
-                # bucket — the price of content-addressable pages.
-                plans.append((plen, 0, budget))
-                continue
-            P = _bucket(plen, sc.max_seq)
-            if sc.max_seq - P < budget:
-                P = plen
-            plans.append((P, P - plen, budget))
-
+        # resolve sequence-valued config defaults by stream index (the
+        # legacy per-request ServeConfig contract) onto the requests
         def_temp = _broadcast(sc.temperature, n, np.float32, "temperature")
         def_eos = _broadcast(sc.eos_id, n, np.int32, "eos_id")
-        req_temp = np.array([r.temperature if r.temperature is not None
-                             else def_temp[i] for i, r in enumerate(reqs)],
-                            np.float32)
-        req_eos = np.array([r.eos_id if r.eos_id is not None
-                            else def_eos[i] for i, r in enumerate(reqs)],
-                           np.int32)
+        reqs = [dataclasses.replace(
+                    r,
+                    temperature=(r.temperature if r.temperature is not None
+                                 else float(def_temp[i])),
+                    eos_id=(r.eos_id if r.eos_id is not None
+                            else int(def_eos[i])))
+                for i, r in enumerate(reqs)]
+        if strict:
+            # legacy semantics: validate the WHOLE batch before any work
+            for i, r in enumerate(reqs):
+                try:
+                    self._plan(r)
+                except ValueError as e:
+                    raise ValueError(f"request {i}: {e}") from None
+        # batch submission is exempt from max_queue backpressure: the
+        # caller already holds the full list (bound applies to submit())
+        rids = [self.submit(r, strict=False, _bounded=False) for r in reqs]
+        st = self._st
+        for _ in self.serve_stream(strict=strict):
+            pass
+        self.last_results = [st.results[rid] for rid in rids]
+        return [st.results[rid].tokens for rid in rids]
 
-        paged = self._paged
-        if paged:
-            cache = T.init_paged_cache(self.cfg, self._num_blocks,
-                                       sc.block_size)
-            alloc = BlockAllocator(self._num_blocks, sc.block_size)
-            bt_host = np.zeros((B, self._max_blocks), np.int32)
-            slot_blocks: List[List[int]] = [[] for _ in range(B)]
-            # zero batch=1 mini caches per block-rounded prompt size
-            # (prefill is pure; templates never hold a request's rows)
-            mini_zeros = {}
+    # ------------------------------------------------------------ admission
 
-            def mini_for(rows: int):
-                if rows not in mini_zeros:
-                    mini_zeros[rows] = T.init_cache(self.cfg, 1, rows)
-                return mini_zeros[rows]
+    def _queue_limit(self, st: _ServeState, rid: int) -> Optional[float]:
+        limits = [x for x in (st.reqs[rid].deadline_ms,
+                              self.sc.max_queue_wait_ms) if x is not None]
+        return min(limits) if limits else None
 
-            hit_tokens = fill_tokens = prompt_tokens = 0
-            owned_total = shared_total = peak_blocks = 0
-        else:
-            cache = T.init_cache(self.cfg, B, sc.max_seq)
-            # zero batch=1 cache reused by every admission (prefill is pure,
-            # so the template never holds a previous request's rows)
-            mini_zero = T.init_cache(self.cfg, 1, sc.max_seq)
-        sched = Scheduler(B, max(p[2] for p in plans))
-        sched.queue.extend(range(n))
-        outputs: List[Optional[np.ndarray]] = [None] * n
+    def _admit_dense(self, st: _ServeState, slot: int, rid: int) -> List:
+        sc = self.sc
+        P, s0, budget = st.plans[rid]
+        r = st.reqs[rid]
+        if st.mini_zero is None:
+            # zero batch=1 cache reused by every admission (prefill is
+            # pure, so the template never holds a previous request's rows)
+            st.mini_zero = T.init_cache(self.cfg, 1, sc.max_seq)
+        toks = np.zeros((1, P), np.int32)
+        toks[0, s0:] = r.tokens
+        # prefill into a fresh (zero) batch=1 cache, then scatter it
+        # into the freed slot — the other slots keep their rows and
+        # state and never stop decoding
+        lg, mini = self._prefill(self.params, st.mini_zero,
+                                 jnp.asarray(toks),
+                                 jnp.asarray([s0], jnp.int32))
+        st.admissions += 1
+        if sc.health_checks and not bool(np.asarray(self._health(lg))[0]):
+            # the request's own prompt already produces NaR/non-finite
+            # logits: quarantine at admission — the poisoned mini cache is
+            # discarded, never scattered into the shared slot cache
+            now = self._now_ms()
+            st.t_admit[rid] = now
+            st.faults += 1
+            res = self._finish(st, rid, np.zeros(0, np.int32),
+                               FinishReason.FAULT,
+                               "non-finite prefill logits quarantined", now)
+            return [FinishEvent(rid, res)]
+        st.cache = self._write_slot(st.cache, mini, jnp.int32(slot))
+        return self._finish_admission(st, slot, rid, lg, P, s0, budget)
 
-        # device-facing per-slot state (host mirrors, shipped each step)
-        pos = np.zeros(B, np.int32)
-        start = np.zeros(B, np.int32)
-        cur = np.zeros((B, 1), np.int32)
-        temps = np.zeros(B, np.float32)
-        eos = np.full(B, -1, np.int32)
-        keys = np.zeros((B, 2), np.uint32)
-        steps = np.zeros(B, np.int32)
+    def _admit_paged(self, st: _ServeState, slot: int, rid: int):
+        """Paged admission; ``(False, [])`` = not enough free blocks
+        (deferred).
 
-        def admit(slot: int, rid: int) -> None:
-            nonlocal cache
-            P, s0, budget = plans[rid]
-            r = reqs[rid]
-            toks = np.zeros((1, P), np.int32)
-            toks[0, s0:] = r.tokens
-            # prefill into a fresh (zero) batch=1 cache, then scatter it
-            # into the freed slot — the other slots keep their rows and
-            # state and never stop decoding
-            lg, mini = self._prefill(self.params, mini_zero,
-                                     jnp.asarray(toks),
-                                     jnp.asarray([s0], jnp.int32))
-            cache = self._write_slot(cache, mini, jnp.int32(slot))
-            key_r = self._request_key(r.seed if r.seed is not None else rid)
-            t0 = self._sample(lg, req_temp[rid:rid + 1],
-                              key_r[None], jnp.zeros((1,), jnp.int32))
-            pos[slot], start[slot] = P, s0
-            temps[slot], eos[slot] = req_temp[rid], req_eos[rid]
-            keys[slot], steps[slot] = np.asarray(key_r), 1
-            tok = int(np.asarray(t0)[0, 0])
-            cur[slot] = tok
-            sched.admit(slot, rid, budget)
-            if sched.record_one(slot, tok, int(req_eos[rid])):
-                outputs[rid] = sched.evict(slot)
-                temps[slot] = 0.0   # keep the all-greedy sampler fast path
-
-        def release_blocks(slot: int) -> None:
-            """Eviction-side block bookkeeping: drop this slot's refs (a
-            registered prefix block parks in the allocator's LRU cache at
-            refcount 0, an unregistered one frees) and zero its table row
-            so the parked slot writes the block-0 sink."""
-            for b in slot_blocks[slot]:
+        Maps the longest registered prefix (full blocks only), gathers
+        it — plus a partially-shared CoW source block, NOT increfed:
+        its copy is rewritten into an owned page — into a dense mini
+        cache, prefills just the suffix from ``t0``, scatters the owned
+        blocks into the pool, and registers the new chain.
+        """
+        sc = self.sc
+        alloc = st.alloc
+        plen, _, budget = st.plans[rid]
+        r = st.reqs[rid]
+        bs = sc.block_size
+        total = -(-plen // bs)          # blocks covering rows [0, plen)
+        toks = tuple(int(t) for t in r.tokens)
+        shared = alloc.match_prefix(toks) if self._share else []
+        # always leave >= 1 suffix token: prefill must produce logits
+        t0 = min(len(shared) * bs, plen - 1)
+        s_blk = t0 // bs                # fully-shared blocks mapped
+        gather_n = -(-t0 // bs)         # + the partial CoW source
+        shared = shared[:gather_n]
+        # incref the mapped prefix FIRST so our own allocs below cannot
+        # LRU-reclaim it; the CoW source (if any) needs no ref — the
+        # gather captures its value before any write lands
+        for b in shared[:s_blk]:
+            alloc.incref(b)
+        owned: List[int] = []
+        try:
+            for _ in range(total - s_blk):
+                owned.append(alloc.alloc())
+        except ValueError:
+            for b in owned:
                 alloc.decref(b)
-            slot_blocks[slot] = []
-            bt_host[slot, :] = 0
-
-        def admit_paged(slot: int, rid: int) -> bool:
-            """Paged admission; False = not enough free blocks (deferred).
-
-            Maps the longest registered prefix (full blocks only), gathers
-            it — plus a partially-shared CoW source block, NOT increfed:
-            its copy is rewritten into an owned page — into a dense mini
-            cache, prefills just the suffix from ``t0``, scatters the owned
-            blocks into the pool, and registers the new chain.
-            """
-            nonlocal cache, hit_tokens, fill_tokens, prompt_tokens
-            nonlocal owned_total, shared_total, peak_blocks
-            plen, _, budget = plans[rid]
-            r = reqs[rid]
-            bs = sc.block_size
-            total = -(-plen // bs)          # blocks covering rows [0, plen)
-            toks = tuple(int(t) for t in r.tokens)
-            shared = alloc.match_prefix(toks) if self._share else []
-            # always leave >= 1 suffix token: prefill must produce logits
-            t0 = min(len(shared) * bs, plen - 1)
-            s_blk = t0 // bs                # fully-shared blocks mapped
-            gather_n = -(-t0 // bs)         # + the partial CoW source
-            shared = shared[:gather_n]
-            # incref the mapped prefix FIRST so our own allocs below cannot
-            # LRU-reclaim it; the CoW source (if any) needs no ref — the
-            # gather captures its value before any write lands
             for b in shared[:s_blk]:
-                alloc.incref(b)
-            owned: List[int] = []
-            try:
-                for _ in range(total - s_blk):
-                    owned.append(alloc.alloc())
-            except ValueError:
-                for b in owned:
-                    alloc.decref(b)
-                for b in shared[:s_blk]:
-                    alloc.decref(b)
-                return False
-            rows = total * bs
-            if t0:
-                mini = self._mini_prefix(cache,
-                                         jnp.asarray(shared, jnp.int32),
-                                         rows)
-            else:
-                mini = mini_for(rows)
-            lg, mini = self._prefill_t0(
-                self.params, mini,
-                jnp.asarray(np.asarray(r.tokens, np.int32)[None]),
-                jnp.zeros((1,), jnp.int32), t0)
-            cache = self._write_blocks(cache, mini,
-                                       jnp.asarray(owned, jnp.int32),
-                                       jnp.int32(s_blk))
-            chain = shared[:s_blk] + owned
-            if self._share:
-                alloc.register_prefix(toks, chain)
-            bt_host[slot, :] = 0
-            bt_host[slot, :total] = chain
-            slot_blocks[slot] = chain
-            hit_tokens += t0
-            fill_tokens += plen - t0
-            prompt_tokens += plen
-            owned_total += len(owned)
-            shared_total += s_blk
-            peak_blocks = max(peak_blocks, alloc.blocks_in_use())
+                alloc.decref(b)
+            return False, []
+        rows = total * bs
+        if t0:
+            mini = self._mini_prefix(st.cache,
+                                     jnp.asarray(shared, jnp.int32),
+                                     rows)
+        else:
+            if rows not in st.mini_zeros:
+                st.mini_zeros[rows] = T.init_cache(self.cfg, 1, rows)
+            mini = st.mini_zeros[rows]
+        lg, mini = self._prefill_t0(
+            self.params, mini,
+            jnp.asarray(np.asarray(r.tokens, np.int32)[None]),
+            jnp.zeros((1,), jnp.int32), t0)
+        st.admissions += 1
+        if sc.health_checks and not bool(np.asarray(self._health(lg))[0]):
+            # quarantine BEFORE the pool write and BEFORE registration: a
+            # poisoned page must never be published for prefix sharing —
+            # and the shared prefix pages this prefill READ are themselves
+            # suspect, so evict them from the prefix table too
+            for b in owned:
+                alloc.decref(b)
+            for b in shared[:s_blk]:
+                alloc.decref(b)
+                alloc.quarantine(b)
+            now = self._now_ms()
+            st.t_admit[rid] = now
+            st.faults += 1
+            res = self._finish(st, rid, np.zeros(0, np.int32),
+                               FinishReason.FAULT,
+                               "non-finite prefill logits quarantined", now)
+            return True, [FinishEvent(rid, res)]
+        st.cache = self._write_blocks(st.cache, mini,
+                                      jnp.asarray(owned, jnp.int32),
+                                      jnp.int32(s_blk))
+        chain = shared[:s_blk] + owned
+        if self._share:
+            alloc.register_prefix(toks, chain)
+        st.bt_host[slot, :] = 0
+        st.bt_host[slot, :total] = chain
+        st.slot_blocks[slot] = chain
+        st.hit_tokens += t0
+        st.fill_tokens += plen - t0
+        st.prompt_tokens += plen
+        st.owned_total += len(owned)
+        st.shared_total += s_blk
+        st.peak_blocks = max(st.peak_blocks, alloc.blocks_in_use())
+        return True, self._finish_admission(st, slot, rid, lg, plen, 0,
+                                            budget)
 
-            key_r = self._request_key(r.seed if r.seed is not None else rid)
-            t0s = self._sample(lg, req_temp[rid:rid + 1],
-                               key_r[None], jnp.zeros((1,), jnp.int32))
-            pos[slot], start[slot] = plen, 0
-            temps[slot], eos[slot] = req_temp[rid], req_eos[rid]
-            keys[slot], steps[slot] = np.asarray(key_r), 1
-            tok = int(np.asarray(t0s)[0, 0])
-            cur[slot] = tok
-            sched.admit(slot, rid, budget)
-            if sched.record_one(slot, tok, int(req_eos[rid])):
-                outputs[rid] = sched.evict(slot)
-                release_blocks(slot)
-                temps[slot] = 0.0
-            return True
+    def _finish_admission(self, st: _ServeState, slot: int, rid: int,
+                          lg, P: int, s0: int, budget: int) -> List:
+        """Shared admission tail: sample the prefill token, arm the slot
+        mirrors, record the token (evicting right away if it finishes the
+        request).  Returns the stream events this admission produced."""
+        key_r = self._request_key(st.req_key[rid])
+        t0 = self._sample(lg, np.asarray([st.req_temp[rid]], np.float32),
+                          key_r[None], jnp.zeros((1,), jnp.int32))
+        st.pos[slot], st.start[slot] = P, s0
+        st.temps[slot], st.eos[slot] = st.req_temp[rid], st.req_eos[rid]
+        st.keys[slot], st.steps[slot] = np.asarray(key_r), 1
+        tok = int(np.asarray(t0)[0, 0])
+        st.cur[slot] = tok
+        st.sched.admit(slot, rid, budget)
+        now = self._now_ms()
+        st.t_admit.setdefault(rid, now)
+        st.ttft[rid] = now - st.t_submit.get(rid, now)
+        st.ttfts.append(st.ttft[rid])
+        st.last_tok_ms[slot] = now
+        events: List = [TokenEvent(rid, tok)]
+        if st.sched.record_one(slot, tok, st.req_eos[rid]):
+            out = st.sched.evict(slot)
+            if self._paged:
+                self._release_blocks(st, slot)
+            st.temps[slot] = 0.0   # keep the all-greedy sampler fast path
+            reason = (FinishReason.EOS if tok == st.req_eos[rid]
+                      else FinishReason.MAX_NEW)
+            res = self._finish(st, rid, out, reason, "", now)
+            events.append(FinishEvent(rid, res))
+        return events
 
-        decode_steps = active_slot_steps = 0
-        while sched.queue or sched.any_active:
-            for slot in sched.free_slots():
-                if not sched.queue:
+    def _release_blocks(self, st: _ServeState, slot: int,
+                        quarantine: bool = False) -> None:
+        """Eviction-side block bookkeeping: drop this slot's refs (a
+        registered prefix block parks in the allocator's LRU cache at
+        refcount 0, an unregistered one frees) and zero its table row
+        so the parked slot writes the block-0 sink.  ``quarantine=True``
+        (FAULT eviction) additionally unregisters the slot's now-unmapped
+        registered blocks — possibly-poisoned pages must not be matched by
+        future prefix lookups."""
+        blocks = st.slot_blocks[slot]
+        for b in blocks:
+            st.alloc.decref(b)
+        if quarantine:
+            for b in blocks:
+                st.alloc.quarantine(b)
+        st.slot_blocks[slot] = []
+        st.bt_host[slot, :] = 0
+
+    def _evict(self, st: _ServeState, slot: int, rid: int,
+               reason: FinishReason, detail: str, now: float) -> ServeResult:
+        """Common slot teardown for every non-admission finish path."""
+        out = st.sched.evict(slot)
+        if self._paged:
+            self._release_blocks(st, slot,
+                                 quarantine=reason is FinishReason.FAULT)
+        # a parked sampled slot would otherwise disable the all-greedy
+        # sampler shortcut for the rest of the stream
+        st.temps[slot] = 0.0
+        return self._finish(st, rid, out, reason, detail, now)
+
+    # --------------------------------------------------------- the serve loop
+
+    def serve_stream(self, strict: Optional[bool] = None):
+        """Drive the live session to completion, yielding
+        :class:`TokenEvent`/:class:`FinishEvent` as they happen.
+
+        One consumer at a time: the generator mutates the engine's session
+        state, so interleaving two ``serve_stream`` iterators is undefined.
+        New :meth:`submit` calls made BETWEEN iterations (e.g. from the
+        consuming loop's body) are admitted into freed slots — the loop
+        runs until queue, slots, and pending events are all drained, then
+        finalizes ``self.last_serve_stats``.
+
+        Every event passes through the session's ``pending`` buffer and is
+        only yielded at a consistent STEP BOUNDARY (all bookkeeping for the
+        step — records, evictions, block releases — already applied).  A
+        consumer may therefore abandon the generator at any yield and
+        :meth:`snapshot` right there: events it never consumed are still
+        in the buffer and are re-delivered by the restored engine's
+        stream.
+        """
+        sc = self.sc
+        strict = sc.strict if strict is None else strict
+        st = self._st
+        if st is None:
+            return
+        emit = st.pending.append
+        while not st.drained:
+            # submit-time events (sheds) first, in submission order
+            while st.pending:
+                yield st.pending.pop(0)
+            if st.drained:
+                break
+            # queue-wait expiry: a queued request past its deadline (or the
+            # global queue-wait cap) finishes DEADLINE without a slot
+            if st.queue:
+                now = self._now_ms()
+                kept: collections.deque = collections.deque()
+                while st.queue:
+                    rid = st.queue.popleft()
+                    lim = self._queue_limit(st, rid)
+                    if lim is not None and now - st.t_submit[rid] > lim:
+                        st.deadline_evictions += 1
+                        res = self._finish(st, rid, np.zeros(0, np.int32),
+                                           FinishReason.DEADLINE,
+                                           "expired while queued", now)
+                        emit(FinishEvent(rid, res))
+                    else:
+                        kept.append(rid)
+                st.queue = kept
+            # admission into freed slots (FIFO; paged may defer on pool
+            # starvation until an eviction frees blocks)
+            for slot in st.sched.free_slots():
+                if not st.queue:
                     break
-                if paged:
-                    # peek-then-pop: a pool-starved admission stays queued
-                    # until an eviction frees blocks (FIFO order preserved)
-                    if not admit_paged(int(slot), sched.queue[0]):
-                        if not sched.any_active:
-                            raise ValueError(
-                                f"request {sched.queue[0]} needs more KV "
-                                f"blocks than the pool can ever free "
-                                f"(num_blocks={self._num_blocks}); raise "
-                                "ServeConfig.num_blocks")
+                if self._paged:
+                    ok, events = self._admit_paged(st, int(slot),
+                                                   st.queue[0])
+                    if not ok:
+                        if not st.sched.any_active:
+                            rid = st.queue.popleft()
+                            msg = (f"request {rid} needs more KV blocks "
+                                   f"than the pool can ever free "
+                                   f"(num_blocks={self._num_blocks}); "
+                                   "raise ServeConfig.num_blocks")
+                            if strict:
+                                raise ValueError(msg)
+                            st.shed += 1
+                            res = self._finish(st, rid,
+                                               np.zeros(0, np.int32),
+                                               FinishReason.SHED, msg,
+                                               self._now_ms())
+                            emit(FinishEvent(rid, res))
+                            continue
                         break
-                    sched.queue.popleft()
+                    st.queue.popleft()
                 else:
-                    admit(int(slot), sched.queue.popleft())
-            if not sched.any_active:
+                    events = self._admit_dense(st, int(slot),
+                                               st.queue.popleft())
+                for ev in events:
+                    emit(ev)
+            # admission boundary: a consistent point to hand events out
+            while st.pending:
+                yield st.pending.pop(0)
+            if not st.sched.any_active:
                 continue    # admitted requests may finish at token 0
-            decode_steps += 1
-            active_slot_steps += int(sched.active.sum())
+            st.decode_steps += 1
+            st.active_slot_steps += int(st.sched.active.sum())
 
-            if paged:
+            if self._paged:
                 # grow each active slot's table before the row it is about
                 # to write crosses into an unmapped block
-                for slot in np.flatnonzero(sched.active):
-                    need = int(pos[slot]) // sc.block_size
-                    if need >= len(slot_blocks[slot]):
-                        b = alloc.alloc()   # pool sized so this never fails
-                        slot_blocks[slot].append(b)
-                        bt_host[slot, need] = b
-                        peak_blocks = max(peak_blocks,
-                                          alloc.blocks_in_use())
+                for slot in np.flatnonzero(st.sched.active):
+                    need = int(st.pos[slot]) // sc.block_size
+                    if need >= len(st.slot_blocks[slot]):
+                        b = st.alloc.alloc()  # pool sized: never fails here
+                        st.slot_blocks[slot].append(b)
+                        st.bt_host[slot, need] = b
+                        st.peak_blocks = max(st.peak_blocks,
+                                             st.alloc.blocks_in_use())
 
             # ONE decode step for ALL slots at their own positions + ONE
-            # vectorized sample; a single (B,) transfer back per step.
+            # vectorized sample; a single (B, 2) transfer back per step
+            # carrying [token, healthy] per slot.
             # jnp.array COPIES each host mirror at hand-off: jnp.asarray
             # would zero-copy alias the numpy buffers on CPU, racing the
-            # async dispatch against the in-place updates below / in admit
-            if paged:
-                lg, cache = self._decode_paged(
-                    self.params, cache, jnp.array(bt_host), jnp.array(cur),
-                    jnp.array(pos), jnp.array(start))
+            # async dispatch against the in-place updates below
+            if self._paged:
+                lg, st.cache, health = self._decode_paged(
+                    self.params, st.cache, jnp.array(st.bt_host),
+                    jnp.array(st.cur), jnp.array(st.pos),
+                    jnp.array(st.start))
             else:
-                lg, cache = self._decode(self.params, cache, jnp.array(cur),
-                                         jnp.array(pos), jnp.array(start))
-            tok_d = self._sample(lg, temps, jnp.array(keys),
-                                 jnp.array(steps))
-            np.minimum(pos + 1, sc.max_seq - 1, out=pos)
-            steps += 1
-            tok_h = np.asarray(tok_d)[:, 0]
-            cur = tok_h[:, None].astype(np.int32)
-            for slot in sched.record(tok_h, eos):
-                rid = int(sched.slot_req[slot])
-                outputs[rid] = sched.evict(slot)
-                if paged:
-                    release_blocks(int(slot))
-                # a parked sampled slot would otherwise disable the
-                # all-greedy sampler shortcut for the rest of the stream
-                temps[slot] = 0.0
+                lg, st.cache, health = self._decode(
+                    self.params, st.cache, jnp.array(st.cur),
+                    jnp.array(st.pos), jnp.array(st.start))
+            packed = self._sample_packed(lg, health, st.temps,
+                                         jnp.array(st.keys),
+                                         jnp.array(st.steps))
+            np.minimum(st.pos + 1, sc.max_seq - 1, out=st.pos)
+            st.steps += 1
+            arr = np.asarray(packed)
+            tok_h = arr[:, 0].astype(np.int32)
+            healthy = arr[:, 1].astype(bool)
+            st.cur = tok_h[:, None].copy()
+            now = self._now_ms()
 
+            # NaR / non-finite quarantine — BEFORE record(), so the faulted
+            # slot's garbage token never lands in its output.  Other slots
+            # are untouched: the model is batch-composition invariant, so
+            # their logits (and tokens) are bit-identical to a clean run.
+            if sc.health_checks:
+                for slot in np.flatnonzero(st.sched.active & ~healthy):
+                    rid = int(st.sched.slot_req[slot])
+                    st.faults += 1
+                    res = self._evict(st, int(slot), rid, FinishReason.FAULT,
+                                      "non-finite logits quarantined "
+                                      "mid-decode", now)
+                    emit(FinishEvent(rid, res))
+
+            act = np.flatnonzero(st.sched.active)
+            finished = st.sched.record(tok_h, st.eos)
+            token_events = []
+            for slot in act:
+                rid = int(st.sched.slot_req[slot])
+                if st.last_tok_ms[slot] > 0:
+                    st.token_lats.append(now - st.last_tok_ms[slot])
+                st.last_tok_ms[slot] = now
+                token_events.append(TokenEvent(rid, int(tok_h[slot])))
+            finish_events = []
+            for slot in finished:
+                rid = int(st.sched.slot_req[slot])
+                reason = (FinishReason.EOS if tok_h[slot] == st.eos[slot]
+                          else FinishReason.MAX_NEW)
+                res = self._evict(st, int(slot), rid, reason, "", now)
+                finish_events.append(FinishEvent(rid, res))
+            # in-flight deadline sweep (after record: the step's token is
+            # part of the partial output)
+            for slot in np.flatnonzero(st.sched.active):
+                rid = int(st.sched.slot_req[slot])
+                dl = st.reqs[rid].deadline_ms
+                if dl is not None and now - st.t_submit[rid] > dl:
+                    st.deadline_evictions += 1
+                    res = self._evict(st, int(slot), rid,
+                                      FinishReason.DEADLINE,
+                                      "deadline exceeded mid-decode", now)
+                    finish_events.append(FinishEvent(rid, res))
+            # the step's bookkeeping is fully applied — NOW hand events out
+            # (tokens before finishes; snapshot() is safe at every yield)
+            for ev in token_events + finish_events:
+                emit(ev)
+            while st.pending:
+                yield st.pending.pop(0)
+        self._finalize_stats(st)
+
+    def _finalize_stats(self, st: _ServeState) -> None:
         # measured scheduler counters (e.g. the decode-throughput benchmark
         # reports real slot utilization from these, not an estimate)
-        self.last_serve_stats = {
-            "decode_steps": decode_steps,
-            "slot_steps": decode_steps * B,
-            "active_slot_steps": active_slot_steps,
-            "admissions": n,
-            "kv_layout": "paged" if paged else "dense",
+        sc = self.sc
+        stats = {
+            "decode_steps": st.decode_steps,
+            "slot_steps": st.decode_steps * sc.max_batch,
+            "active_slot_steps": st.active_slot_steps,
+            "admissions": st.admissions,
+            "kv_layout": "paged" if self._paged else "dense",
+            "requests": len(st.reqs),
+            "faults": st.faults,
+            "deadline_evictions": st.deadline_evictions,
+            "shed": st.shed,
+            "finish_reasons": collections.Counter(
+                r.finish.value for r in st.results.values()),
+            "ttft_ms": list(st.ttfts),
+            "token_latency_ms": list(st.token_lats),
         }
-        if paged:
-            self.last_serve_stats.update({
+        if self._paged:
+            stats.update({
                 "block_size": sc.block_size,
                 "pool_blocks": self._num_blocks - 1,
-                "peak_blocks_in_use": peak_blocks,
-                "prompt_tokens": prompt_tokens,
-                "prefill_tokens": fill_tokens,
-                "prefix_hit_tokens": hit_tokens,
-                "prefix_hit_rate": hit_tokens / max(prompt_tokens, 1),
-                "owned_blocks": owned_total,
-                "shared_blocks": shared_total,
-                "prefix_lookups": alloc.lookups,
-                "prefix_matches": alloc.hits,
+                "peak_blocks_in_use": st.peak_blocks,
+                "prompt_tokens": st.prompt_tokens,
+                "prefill_tokens": st.fill_tokens,
+                "prefix_hit_tokens": st.hit_tokens,
+                "prefix_hit_rate": st.hit_tokens / max(st.prompt_tokens, 1),
+                "owned_blocks": st.owned_total,
+                "shared_blocks": st.shared_total,
+                "prefix_lookups": st.alloc.lookups,
+                "prefix_matches": st.alloc.hits,
             })
-        return outputs
+        self.last_serve_stats = stats
+
+    # -------------------------------------------------- snapshot / restore
+
+    def snapshot(self) -> dict:
+        """Capture the live serve session as one picklable dict.
+
+        Includes every byte the remaining stream depends on: the device
+        cache leaves (``jax.device_get``), scheduler + allocator state,
+        per-slot host mirrors, and per-request bookkeeping.  Deadline
+        timestamps are stored as ELAPSED ms so :meth:`restore` rebases
+        them onto the restoring engine's clock (downtime doesn't count
+        against a deadline).  Restore on an engine built from the same
+        ``ModelConfig`` + params + ``ServeConfig`` completes the stream
+        with bit-identical tokens (see the module docstring contract).
+        """
+        st = self._st
+        if st is None:
+            raise ValueError("no serve session to snapshot")
+        sc = self.sc
+        now = self._now_ms()
+        sched = st.sched
+        snap = {
+            "version": 1,
+            "kv_layout": "paged" if self._paged else "dense",
+            "max_batch": sc.max_batch,
+            "max_seq": sc.max_seq,
+            "reqs": [dataclasses.replace(
+                         r, tokens=np.array(r.tokens, np.int32))
+                     for r in st.reqs],
+            "plans": list(st.plans),
+            "req_temp": list(st.req_temp),
+            "req_eos": list(st.req_eos),
+            "req_key": list(st.req_key),
+            "queue": list(st.queue),
+            "pending": list(st.pending),
+            "results": dict(st.results),
+            "submit_elapsed_ms": {r: now - t for r, t in st.t_submit.items()},
+            "admit_elapsed_ms": {r: now - t for r, t in st.t_admit.items()},
+            "ttft": dict(st.ttft),
+            "sched": {
+                "active": sched.active.copy(),
+                "slot_req": sched.slot_req.copy(),
+                "out_buf": sched.out_buf.copy(),
+                "out_len": sched.out_len.copy(),
+                "budget": sched.budget.copy(),
+            },
+            "mirrors": {k: getattr(st, k).copy()
+                        for k in ("pos", "start", "cur", "temps", "eos",
+                                  "keys", "steps")},
+            "last_tok_elapsed_ms": np.where(
+                st.last_tok_ms > 0, now - st.last_tok_ms, 0.0),
+            "counters": {k: getattr(st, k)
+                         for k in ("decode_steps", "active_slot_steps",
+                                   "admissions", "faults",
+                                   "deadline_evictions", "shed",
+                                   "hit_tokens", "fill_tokens",
+                                   "prompt_tokens", "owned_total",
+                                   "shared_total", "peak_blocks")},
+            "ttfts": list(st.ttfts),
+            "token_lats": list(st.token_lats),
+            "cache": jax.device_get(st.cache),
+        }
+        if self._paged:
+            a = st.alloc
+            snap["bt_host"] = st.bt_host.copy()
+            snap["slot_blocks"] = [list(b) for b in st.slot_blocks]
+            snap["alloc"] = {
+                "refcount": a.refcount.copy(),
+                "free": list(a.free),
+                "cached": list(a.cached.keys()),
+                "table": {h: list(v) for h, v in a.table.items()},
+                "owner": dict(a.owner),
+                "hits": a.hits,
+                "lookups": a.lookups,
+            }
+        return snap
+
+    def restore(self, snap: dict) -> None:
+        """Rebuild a serve session from :meth:`snapshot` (see there).  The
+        engine must have been constructed with the same ``ModelConfig``,
+        params, and ``ServeConfig`` as the snapshotting one — that
+        compatibility is the caller's contract (layout mismatches are
+        rejected; weight mismatches cannot be detected cheaply)."""
+        sc = self.sc
+        want = "paged" if self._paged else "dense"
+        if snap.get("kv_layout") != want or \
+                snap.get("max_batch") != sc.max_batch or \
+                snap.get("max_seq") != sc.max_seq:
+            raise ValueError(
+                f"snapshot layout ({snap.get('kv_layout')}, "
+                f"max_batch={snap.get('max_batch')}, "
+                f"max_seq={snap.get('max_seq')}) does not match this "
+                f"engine ({want}, max_batch={sc.max_batch}, "
+                f"max_seq={sc.max_seq})")
+        st = _ServeState(self, init_cache=False)
+        now = self._now_ms()
+        st.reqs = list(snap["reqs"])
+        st.plans = list(snap["plans"])
+        st.req_temp = list(snap["req_temp"])
+        st.req_eos = list(snap["req_eos"])
+        st.req_key = list(snap["req_key"])
+        st.queue = collections.deque(snap["queue"])
+        st.pending = list(snap["pending"])
+        st.results = dict(snap["results"])
+        st.t_submit = {r: now - e
+                       for r, e in snap["submit_elapsed_ms"].items()}
+        st.t_admit = {r: now - e
+                      for r, e in snap["admit_elapsed_ms"].items()}
+        st.ttft = dict(snap["ttft"])
+        sd = snap["sched"]
+        sch = Scheduler(sc.max_batch, sd["out_buf"].shape[1])
+        sch.active = sd["active"].copy()
+        sch.slot_req = sd["slot_req"].copy()
+        sch.out_buf = sd["out_buf"].copy()
+        sch.out_len = sd["out_len"].copy()
+        sch.budget = sd["budget"].copy()
+        st.sched = sch
+        for k, v in snap["mirrors"].items():
+            setattr(st, k, v.copy())
+        el = np.asarray(snap["last_tok_elapsed_ms"], np.float64)
+        st.last_tok_ms = np.where(el > 0, now - el, 0.0)
+        for k, v in snap["counters"].items():
+            setattr(st, k, v)
+        st.ttfts = list(snap["ttfts"])
+        st.token_lats = list(snap["token_lats"])
+        # jnp.array COPIES the host leaves: the donated decode step may not
+        # alias a buffer the snapshot dict still references
+        st.cache = jax.tree.map(jnp.array, snap["cache"])
+        if self._paged:
+            st.bt_host = snap["bt_host"].copy()
+            st.slot_blocks = [list(b) for b in snap["slot_blocks"]]
+            a = BlockAllocator(self._num_blocks, sc.block_size)
+            sa = snap["alloc"]
+            a.refcount = sa["refcount"].copy()
+            a.free = collections.deque(sa["free"])
+            a.cached = collections.OrderedDict(
+                (b, None) for b in sa["cached"])
+            a.table = {h: list(v) for h, v in sa["table"].items()}
+            a.owner = dict(sa["owner"])
+            a.hits, a.lookups = sa["hits"], sa["lookups"]
+            st.alloc = a
+        self._st = st

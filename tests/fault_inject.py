@@ -1,0 +1,56 @@
+"""Fault-injection helpers for the serve engine's quarantine tests.
+
+The injection point is the engine's LIVE session cache between decode
+steps: :meth:`ServeEngine.serve_stream` yields between steps, so a test
+driving the stream can corrupt exactly one slot's KV storage and watch
+the health probe quarantine that slot while every other slot stays
+bit-identical to a clean run.
+
+Injections are slot-local by construction (that is the point): the dense
+layout's kv leaves are ``(L, B, S, kv, hd)`` — one batch row per slot —
+and the paged layout's pool pages are mapped by exactly one slot's block
+table (a shared prefix page poisons every reader, which is the shared-
+prefix quarantine test, not the isolation test).  Stacked attention
+families (dense/moe) only; the recurrent families keep per-slot state in
+differently-shaped leaves.
+"""
+
+import jax
+import numpy as np
+
+
+def poison_slot(engine, slot: int, value: float = float("nan")) -> bool:
+    """Overwrite one slot's attention KV rows with ``value`` (NaN by
+    default — what a posit NaR dequantizes to; ``inf`` models an
+    overflow-style bit flip) in the live session cache.
+
+    Returns True if anything was poisoned (False for a paged slot that
+    maps no blocks yet).
+    """
+    st = engine._st
+    assert st is not None and st.cache is not None, "no live session"
+    if engine._paged:
+        bids = np.asarray(st.slot_blocks[slot], np.int32)
+        if bids.size == 0:
+            return False
+        return poison_blocks(engine, bids, value)
+    st.cache = jax.tree.map(lambda x: x.at[:, slot].set(value), st.cache)
+    return True
+
+
+def poison_blocks(engine, block_ids, value: float = float("nan")) -> bool:
+    """Overwrite specific pool pages (paged layout) with ``value`` — e.g.
+    a registered shared-prefix chain, to test admission-time quarantine of
+    requests that would gather those pages."""
+    st = engine._st
+    bids = np.asarray(block_ids, np.int32)
+    st.cache = {"layers": jax.tree.map(
+        lambda x: x.at[:, bids].set(value), st.cache["layers"])}
+    return True
+
+
+def flip_logit_sign_bit(engine, slot: int) -> bool:
+    """A milder corruption than NaN: scale one slot's KV to +/-inf via a
+    sign/exponent-style blowup.  Trips the same finiteness probe without
+    touching any other slot's rows."""
+    return poison_slot(engine, slot, value=float("inf"))

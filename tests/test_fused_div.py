@@ -145,3 +145,78 @@ def test_config_validation_rejects_bad_backend():
     with pytest.raises(ValueError, match="storage"):
         NumericsConfig(posit_division=True,
                        kv_cache_format="posit64").validate()
+
+
+# =====================================================================
+# NaR / special-value parity: x/0, NaR/x, x/NaR, 0/0 (the serve
+# engine's quarantine path depends on these encodings being exact)
+# =====================================================================
+
+_SPECIALS = np.array([1.5, -2.25, 0.0, -0.0, np.inf, -np.inf, np.nan,
+                      1e30, -1e-30, 3.0], np.float32)
+
+
+def _special_grid():
+    """All ordered (a, b) pairs over the special-value alphabet."""
+    a, b = np.meshgrid(_SPECIALS, _SPECIALS, indexing="ij")
+    return a.reshape(-1), b.reshape(-1)
+
+
+@pytest.mark.parametrize("n", [8, 16, 32])
+@pytest.mark.parametrize("variant", ops.FUSED_DIV_VARIANTS)
+def test_nar_parity_fused_vs_emulate(n, variant):
+    """x/0, NaR/x, x/NaR and 0/0 produce the SAME NaR encoding through
+    every fused Table IV datapath as through the BitVec emulate divider:
+    the single pattern 100...0 at the bit level, bit-identical NaN at
+    the float level — and only for the lanes the posit standard says."""
+    from repro.core import divider
+
+    fmt = PositFormat(n)
+    if not ops.fused_variant_supported(fmt, variant):
+        pytest.skip(f"no fused datapath for {fmt}/{variant}")
+    an, bn = _special_grid()
+    a, b = jnp.asarray(an), jnp.asarray(bn)
+    fused = ops.posit_div_fused(fmt, a, b, variant=variant)
+    pa = np.asarray(ops.posit_quantize(fmt, a))
+    pb = np.asarray(ops.posit_quantize(fmt, b))
+    emu = np.asarray(divider.posit_divide(
+        fmt, jnp.asarray(pa), jnp.asarray(pb), variant))
+    np.testing.assert_array_equal(
+        _bits(fused), _bits(ops.posit_dequantize(fmt, jnp.asarray(emu))))
+    np.testing.assert_array_equal(
+        np.asarray(ops.posit_div(fmt, jnp.asarray(pa), jnp.asarray(pb),
+                                 variant=variant)), emu)
+    # NaN/Inf quantize to NaR; NaR comes out iff an operand is NaR or
+    # the divisor is zero, and always as THE pattern 100...0.
+    nar = np.uint32(1 << (n - 1))
+    assert (pa[~np.isfinite(an)] == nar).all()
+    assert (pb[~np.isfinite(bn)] == nar).all()
+    expect = (pa == nar) | (pb == nar) | (pb == 0)
+    np.testing.assert_array_equal(emu == nar, expect)
+    fn = np.asarray(fused)
+    assert np.isnan(fn[expect]).all()
+    assert np.isfinite(fn[~expect]).all()
+
+
+@pytest.mark.parametrize("variant", ops.FUSED_DIV_VARIANTS)
+def test_nar_parity_posit64_two_word(variant):
+    """Same sweep through the two-word posit64 datapath (float-level
+    entry points) against the BitVec wide emulate divider."""
+    fmt = PositFormat(64)
+    if not ops.fused_variant_supported(fmt, variant):
+        pytest.skip(f"no fused datapath for {fmt}/{variant}")
+    cfg_f = NumericsConfig(posit_division=True, div_backend="fused",
+                           div_format="posit64", div_algo=variant).validate()
+    cfg_e = NumericsConfig(posit_division=True, div_backend="emulate",
+                           div_format="posit64", div_algo=variant).validate()
+    an, bn = _special_grid()
+    a, b = jnp.asarray(an), jnp.asarray(bn)
+    f = posit_div_values(a, b, cfg_f)
+    e = posit_div_values(a, b, cfg_e)
+    np.testing.assert_array_equal(_bits(f), _bits(e))
+    expect = ~np.isfinite(an) | ~np.isfinite(bn) | (bn == 0.0)
+    fn = np.asarray(f)
+    assert np.isnan(fn[expect]).all()
+    # NaR is the ONLY NaN source; finite posit64 quotients can still
+    # render as +/-inf in float32 (e.g. 1e30 / -1e-30 = -1e60).
+    assert not np.isnan(fn[~expect]).any()

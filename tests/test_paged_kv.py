@@ -10,7 +10,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serve import Request, ServeConfig, ServeEngine
+from repro.serve import FinishReason, Request, ServeConfig, ServeEngine
 from repro.serve.engine import BlockAllocator
 
 # _PA spans >2 blocks of 8; _PB shares _PA's first two FULL blocks and
@@ -162,7 +162,15 @@ def test_paged_pool_exhaustion_raises(engines):
         max_batch=1, max_seq=64, kv_layout="paged", block_size=8,
         num_blocks=2))
     with pytest.raises(ValueError, match="num_blocks"):
-        eng.serve([Request(_PA, max_new=8)])
+        eng.serve([Request(_PA, max_new=8)], strict=True)
+    # non-strict: same starvation sheds with a structured result instead
+    eng2 = ServeEngine(paged.cfg, paged.params, ServeConfig(
+        max_batch=1, max_seq=64, kv_layout="paged", block_size=8,
+        num_blocks=2))
+    outs = eng2.serve([Request(_PA, max_new=8)])
+    assert outs[0].size == 0
+    assert eng2.last_results[0].finish == FinishReason.SHED
+    assert "num_blocks" in eng2.last_results[0].detail
 
 
 def test_paged_config_validation(engines):

@@ -224,12 +224,12 @@ def test_generate_errors_and_clamp(engine):
     sc = engine.sc
     too_many = [np.array([1, 2], np.int32)] * (sc.max_batch + 1)
     with pytest.raises(ValueError, match="max_batch"):
-        engine.generate(too_many)
+        engine.generate(too_many, strict=True)
     with pytest.raises(ValueError, match="non-empty"):
-        engine.generate([np.zeros(0, np.int32)])
+        engine.generate([np.zeros(0, np.int32)], strict=True)
     long_prompt = np.arange(1, sc.max_seq + 1, dtype=np.int32) % 100 + 1
     with pytest.raises(ValueError, match="max_seq"):
-        engine.generate([long_prompt])
+        engine.generate([long_prompt], strict=True)
     # per-batch max-token clamp: plen + max_new never exceeds max_seq
     p = np.array([3, 5, 7], np.int32)
     out = engine.generate([p], max_new=10 * sc.max_seq)[0]
@@ -242,11 +242,12 @@ def test_serve_errors_and_clamp(engine):
     sc = engine.sc
     long_prompt = np.arange(1, sc.max_seq + 1, dtype=np.int32) % 100 + 1
     with pytest.raises(ValueError, match="max_seq"):
-        engine.serve([Request(long_prompt)])
+        engine.serve([Request(long_prompt)], strict=True)
     with pytest.raises(ValueError, match="empty"):
-        engine.serve([Request(np.zeros(0, np.int32))])
+        engine.serve([Request(np.zeros(0, np.int32))], strict=True)
     with pytest.raises(ValueError, match="max_new"):
-        engine.serve([Request(np.array([1], np.int32), max_new=0)])
+        engine.serve([Request(np.array([1], np.int32), max_new=0)],
+                     strict=True)
     # per-REQUEST max-token clamp, and it must MATCH generate()'s clamp
     # even when the prompt's power-of-two admission bucket would leave
     # less room than the prompt itself (exact-length admission fallback)

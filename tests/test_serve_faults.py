@@ -1,0 +1,429 @@
+"""Serving robustness: NaR/non-finite quarantine (fault isolation),
+deadlines, backpressure shedding, paged-block leak freedom, and
+crash-safe snapshot/restore.
+
+The invariance contract under test: a fault injected into ONE slot's
+datapath (NaN/Inf in its KV rows — exactly what a posit NaR dequantizes
+to) must never change any other slot's emitted tokens (bit-identical to
+a clean run), the faulted request must finish ``FAULT`` with its partial
+output, and a snapshot taken mid-stream must restore on a fresh engine
+to bit-identical completions.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from fault_inject import poison_blocks, poison_slot
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve import (FinishEvent, FinishReason, Request, ServeConfig,
+                         ServeEngine, TokenEvent)
+
+_P0 = np.array([3, 5, 7], np.int32)
+_P1 = np.array([11, 13, 2, 9, 4, 6, 8], np.int32)
+_P2 = np.array([17, 19, 23], np.int32)
+
+_MODELS = {}
+
+
+def _model(fused=False):
+    if fused not in _MODELS:
+        cfg = get_config("smollm-360m", smoke=True, fused=fused)
+        _MODELS[fused] = (cfg, T.init_params(cfg, jax.random.PRNGKey(0)))
+    return _MODELS[fused]
+
+
+class FakeClock:
+    """Deterministic injectable clock (seconds): deadlines fire exactly
+    when the test advances ``t``, never from wall time."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _drain(eng, on_event=None):
+    """Run the stream to completion; returns ({rid: [tokens]}, {rid:
+    ServeResult})."""
+    toks, results = {}, {}
+    for ev in eng.serve_stream():
+        if isinstance(ev, TokenEvent):
+            toks.setdefault(ev.rid, []).append(ev.token)
+        else:
+            results[ev.rid] = ev.result
+        if on_event is not None:
+            on_event(ev)
+    return toks, results
+
+
+# =====================================================================
+# Fault isolation: one poisoned slot never perturbs its neighbors
+# =====================================================================
+
+
+@pytest.mark.parametrize("kv_layout,fused,value", [
+    ("dense", False, float("nan")),
+    ("paged", False, float("nan")),
+    ("dense", False, float("inf")),
+    pytest.param("dense", True, float("nan"), marks=pytest.mark.slow),
+    pytest.param("paged", True, float("nan"), marks=pytest.mark.slow),
+])
+def test_fault_isolation_bit_identical(kv_layout, fused, value):
+    """Poison request 1's KV mid-decode: requests 0 and 2 decode tokens
+    BIT-IDENTICAL to the clean run (dense/paged x xla/fused), request 1
+    finishes FAULT with the clean prefix it produced before injection."""
+    cfg, params = _model(fused)
+    sc = ServeConfig(max_batch=3, max_seq=64 if fused else 128,
+                     kv_layout=kv_layout, block_size=8)
+    eng = ServeEngine(cfg, params, sc)
+    reqs = [Request(_P0, max_new=6), Request(_P1, max_new=6),
+            Request(_P2, max_new=5)]
+    clean = eng.serve([dataclasses.replace(r) for r in reqs])
+    assert all(len(c) == r.max_new for c, r in zip(clean, reqs))
+
+    victim = 1
+    rids = [eng.submit(dataclasses.replace(r)) for r in reqs]
+    seen = {"n": 0, "injected": False}
+
+    def inject(ev):
+        if isinstance(ev, TokenEvent) and ev.rid == rids[victim]:
+            seen["n"] += 1
+            if seen["n"] == 2 and not seen["injected"]:
+                slot = int(np.flatnonzero(
+                    eng._st.sched.slot_req == rids[victim])[0])
+                assert poison_slot(eng, slot, value)
+                seen["injected"] = True
+
+    toks, results = _drain(eng, inject)
+    assert seen["injected"]
+    # victim: FAULT, partial output is a clean-run prefix (garbage token
+    # from the poisoned step never recorded)
+    vres = results[rids[victim]]
+    assert vres.finish == FinishReason.FAULT
+    n = len(vres.tokens)
+    assert 2 <= n < reqs[victim].max_new
+    np.testing.assert_array_equal(vres.tokens, clean[victim][:n])
+    # every other slot: bit-identical to the fault-free run
+    for i in (0, 2):
+        assert results[rids[i]].finish in (FinishReason.EOS,
+                                           FinishReason.MAX_NEW)
+        np.testing.assert_array_equal(results[rids[i]].tokens, clean[i])
+        np.testing.assert_array_equal(np.asarray(toks[rids[i]], np.int32),
+                                      clean[i])
+    assert eng.last_serve_stats["faults"] == 1
+
+
+def test_admission_fault_quarantines_shared_prefix():
+    """A poisoned SHARED page is caught at the next sharer's admission:
+    the sharer finishes FAULT with no output, and the poisoned prefix is
+    evicted from the prefix table (never matched again) with every block
+    returned to the free list — no parked-forever poison."""
+    cfg, params = _model()
+    eng = ServeEngine(cfg, params, ServeConfig(
+        max_batch=1, max_seq=128, kv_layout="paged", block_size=8))
+    sys_p = (np.arange(1, 9) % 50 + 1).astype(np.int32)   # one full block
+    ra = Request(np.concatenate([sys_p, [50, 51, 52]]).astype(np.int32),
+                 max_new=2)
+    rb = Request(np.concatenate([sys_p, [60, 61, 62]]).astype(np.int32),
+                 max_new=4)
+    rid_a, rid_b = eng.submit(ra), eng.submit(rb)
+    chain = {}
+
+    def capture_and_poison(ev):
+        st = eng._st
+        if not chain and st.sched.any_active:
+            chain["ids"] = list(st.slot_blocks[0])[:1]  # the prefix block
+        if isinstance(ev, FinishEvent) and ev.rid == rid_a:
+            poison_blocks(eng, chain["ids"])            # parked shared page
+
+    _, results = _drain(eng, capture_and_poison)
+    assert results[rid_a].finish == FinishReason.MAX_NEW
+    assert results[rid_b].finish == FinishReason.FAULT
+    assert results[rid_b].tokens.size == 0
+    alloc = eng._st.alloc
+    assert alloc.blocks_in_use() == 0
+    assert int(alloc.refcount.sum()) == 0
+    assert not alloc.table and not alloc.cached   # quarantined, not parked
+    assert set(alloc.free) == set(range(1, eng._num_blocks))
+
+
+def test_health_checks_off_keeps_decoding():
+    """ServeConfig.health_checks=False: the same injection is ignored —
+    the faulted request runs to its budget (garbage tokens) and no other
+    request is perturbed."""
+    cfg, params = _model()
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=128,
+                                               health_checks=False))
+    clean = eng.serve([Request(_P0, max_new=5), Request(_P2, max_new=5)])
+    rid0 = eng.submit(Request(_P0, max_new=5))
+    rid1 = eng.submit(Request(_P2, max_new=5))
+    state = {"done": False}
+
+    def inject(ev):
+        if isinstance(ev, TokenEvent) and ev.rid == rid0 \
+                and not state["done"]:
+            slot = int(np.flatnonzero(eng._st.sched.slot_req == rid0)[0])
+            poison_slot(eng, slot)
+            state["done"] = True
+
+    _, results = _drain(eng, inject)
+    assert results[rid0].finish == FinishReason.MAX_NEW   # never FAULTed
+    assert len(results[rid0].tokens) == 5
+    np.testing.assert_array_equal(results[rid1].tokens, clean[1])
+    assert eng.last_serve_stats["faults"] == 0
+
+
+# =====================================================================
+# Paged-block leak freedom under fault / deadline eviction
+# =====================================================================
+
+
+def test_paged_fault_eviction_leaks_no_blocks():
+    """After a mid-decode FAULT eviction the allocator is back to its
+    pre-admission state for the faulted request: zero refcounts, every
+    usable block free or parked, the faulted chain not in the prefix
+    table."""
+    cfg, params = _model()
+    eng = ServeEngine(cfg, params, ServeConfig(
+        max_batch=2, max_seq=128, kv_layout="paged", block_size=8))
+    # 9-token victim prompt: one FULL block gets REGISTERED for prefix
+    # sharing, so the quarantine-on-fault unregistration is exercised
+    victim_p = (np.arange(1, 10) % 40 + 1).astype(np.int32)
+    rid0 = eng.submit(Request(victim_p, max_new=6))      # victim
+    rid1 = eng.submit(Request(_P2, max_new=6))
+    state = {"n": 0}
+
+    def inject(ev):
+        if isinstance(ev, TokenEvent) and ev.rid == rid0:
+            state["n"] += 1
+            if state["n"] == 2:
+                slot = int(np.flatnonzero(
+                    eng._st.sched.slot_req == rid0)[0])
+                poison_slot(eng, slot)
+
+    _, results = _drain(eng, inject)
+    assert results[rid0].finish == FinishReason.FAULT
+    alloc = eng._st.alloc
+    assert alloc.blocks_in_use() == 0
+    assert int(alloc.refcount.sum()) == 0
+    nb = eng._num_blocks
+    usable = set(range(1, nb))
+    assert set(alloc.free) | set(alloc.cached) == usable
+    # the faulted slot's registered block was quarantined OUT of the
+    # prefix table and the LRU park (the 3-token survivor registers
+    # nothing), so nothing poisoned can ever be matched again
+    assert not alloc.table and not alloc.cached
+    assert set(alloc.free) == usable
+
+
+def test_paged_deadline_eviction_leaks_no_blocks():
+    """DEADLINE evictions (queued AND mid-decode) decref every mapped
+    block: the pool drains back to zero refcounts with nothing orphaned."""
+    cfg, params = _model()
+    clock = FakeClock()
+    eng = ServeEngine(cfg, params, ServeConfig(
+        max_batch=1, max_seq=128, kv_layout="paged", block_size=8),
+        clock=clock)
+    rid0 = eng.submit(Request(_P0, max_new=8, deadline_ms=500.0))
+    rid1 = eng.submit(Request(_P1, max_new=4, deadline_ms=200.0))
+    state = {"n": 0}
+
+    def advance(ev):
+        if isinstance(ev, TokenEvent) and ev.rid == rid0:
+            state["n"] += 1
+            if state["n"] == 3:
+                clock.t += 1.0      # 1000 ms: expires both deadlines
+    _, results = _drain(eng, advance)
+    assert results[rid0].finish == FinishReason.DEADLINE   # mid-decode
+    n = len(results[rid0].tokens)
+    assert 3 <= n < 8
+    assert results[rid1].finish == FinishReason.DEADLINE   # in queue
+    assert results[rid1].tokens.size == 0
+    alloc = eng._st.alloc
+    assert alloc.blocks_in_use() == 0
+    assert int(alloc.refcount.sum()) == 0
+    assert set(alloc.free) | set(alloc.cached) == \
+        set(range(1, eng._num_blocks))
+    assert eng.last_serve_stats["deadline_evictions"] == 2
+
+
+# =====================================================================
+# Deadlines (dense) and backpressure
+# =====================================================================
+
+
+def test_deadline_midflight_partial_output():
+    """A mid-decode deadline eviction returns the clean-run PREFIX the
+    request produced, and its slot neighbor is untouched bit-for-bit."""
+    cfg, params = _model()
+    clock = FakeClock()
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=128),
+                      clock=clock)
+    clean = eng.serve([Request(_P0, max_new=6), Request(_P1, max_new=6)])
+    rid0 = eng.submit(Request(_P0, max_new=6, deadline_ms=50.0))
+    rid1 = eng.submit(Request(_P1, max_new=6))
+    state = {"n": 0}
+
+    def advance(ev):
+        if isinstance(ev, TokenEvent) and ev.rid == rid0:
+            state["n"] += 1
+            if state["n"] == 3:
+                clock.t += 1.0
+    _, results = _drain(eng, advance)
+    r0 = results[rid0]
+    assert r0.finish == FinishReason.DEADLINE
+    n = len(r0.tokens)
+    assert 3 <= n < 6
+    np.testing.assert_array_equal(r0.tokens, clean[0][:n])
+    assert r0.latency_ms >= 50.0
+    np.testing.assert_array_equal(results[rid1].tokens, clean[1])
+
+
+def test_queue_wait_deadline_expires_without_slot():
+    """max_queue_wait_ms expires a QUEUED request (empty output, DEADLINE)
+    while the in-flight request completes bit-identically to solo."""
+    cfg, params = _model()
+    clock = FakeClock()
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(max_batch=1, max_seq=128,
+                                  max_queue_wait_ms=100.0), clock=clock)
+    solo = eng.generate([_P0], max_new=6)[0]
+    rid0 = eng.submit(Request(_P0, max_new=6))
+    rid1 = eng.submit(Request(_P2, max_new=4))
+    state = {"done": False}
+
+    def advance(ev):
+        if isinstance(ev, TokenEvent) and not state["done"]:
+            clock.t += 1.0          # exceeds the queue-wait cap
+            state["done"] = True
+    _, results = _drain(eng, advance)
+    assert results[rid1].finish == FinishReason.DEADLINE
+    assert results[rid1].tokens.size == 0
+    assert results[rid1].queue_wait_ms >= 100.0
+    np.testing.assert_array_equal(results[rid0].tokens, solo)
+
+
+def test_queue_overflow_sheds_and_strict_raises():
+    cfg, params = _model()
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=1, max_seq=128,
+                                               max_queue=2))
+    rid0 = eng.submit(Request(_P0, max_new=2))
+    rid1 = eng.submit(Request(_P1, max_new=2))
+    rid2 = eng.submit(Request(_P2, max_new=2))      # bounded queue: shed
+    with pytest.raises(ValueError, match="queue overflow"):
+        eng.submit(Request(_P2, max_new=2), strict=True)
+    _, results = _drain(eng)
+    assert results[rid2].finish == FinishReason.SHED
+    assert "queue overflow" in results[rid2].detail
+    assert results[rid0].finish == FinishReason.MAX_NEW
+    assert results[rid1].finish == FinishReason.MAX_NEW
+    assert eng.last_serve_stats["shed"] == 1
+
+
+def test_invalid_requests_shed_not_raise():
+    """Non-strict submission turns the legacy ValueErrors into SHED
+    results; the rest of the stream is unaffected."""
+    cfg, params = _model()
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=128))
+    solo = eng.generate([_P0], max_new=4)[0]
+    outs = eng.serve([
+        Request(_P0, max_new=4),
+        Request(np.zeros(0, np.int32)),                     # empty
+        Request(np.arange(1, 200, dtype=np.int32), max_new=4),  # too long
+        Request(_P2, max_new=0),                            # bad budget
+    ])
+    np.testing.assert_array_equal(outs[0], solo)
+    for i, needle in ((1, "empty"), (2, "max_seq"), (3, "max_new")):
+        assert outs[i].size == 0
+        assert eng.last_results[i].finish == FinishReason.SHED
+        assert needle in eng.last_results[i].detail
+    # and generate() under non-strict sheds per-prompt without perturbing
+    # the valid prompt's row (batch invariance)
+    g = eng.generate([_P0, np.zeros(0, np.int32)], max_new=4)
+    np.testing.assert_array_equal(g[0], solo)
+    assert g[1].size == 0
+    assert eng.last_results[1].finish == FinishReason.SHED
+
+
+# =====================================================================
+# Crash-safe snapshot / restore
+# =====================================================================
+
+
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+def test_snapshot_restore_bit_identical(kv_layout):
+    """Kill the engine mid-stream, restore the snapshot on a FRESH engine:
+    every request completes with bit-identical tokens, including requests
+    still in the queue at snapshot time."""
+    cfg, params = _model()
+    sc = ServeConfig(max_batch=2, max_seq=128, kv_layout=kv_layout,
+                     block_size=8)
+    eng = ServeEngine(cfg, params, sc)
+    reqs = [Request(_P0, max_new=6), Request(_P1, max_new=5),
+            Request(_P2, max_new=4)]
+    clean = eng.serve([dataclasses.replace(r) for r in reqs])
+
+    eng2 = ServeEngine(cfg, params, sc)
+    rids = [eng2.submit(dataclasses.replace(r)) for r in reqs]
+    n = 0
+    for ev in eng2.serve_stream():
+        if isinstance(ev, TokenEvent):
+            n += 1
+            if n == 5:          # mid-stream: slots hot, request 2 queued
+                break
+    snap = eng2.snapshot()
+
+    eng3 = ServeEngine(cfg, params, sc)
+    eng3.restore(snap)
+    for _ in eng3.serve_stream():
+        pass
+    results = eng3._st.results
+    assert len(results) == len(reqs)
+    for rid, cl in zip(rids, clean):
+        np.testing.assert_array_equal(results[rid].tokens, cl)
+        assert results[rid].finish == FinishReason.MAX_NEW
+    # the interrupted engine must not have been required: stats finalized
+    # on the restored one
+    assert eng3.last_serve_stats["requests"] == len(reqs)
+
+
+def test_snapshot_restore_rejects_layout_mismatch():
+    cfg, params = _model()
+    eng = ServeEngine(cfg, params, ServeConfig(max_batch=2, max_seq=128))
+    eng.submit(Request(_P0, max_new=2))
+    snap = eng.snapshot()
+    other = ServeEngine(cfg, params, ServeConfig(max_batch=4, max_seq=128))
+    with pytest.raises(ValueError, match="does not match"):
+        other.restore(snap)
+    # drain the original so the module leaves no half-open session
+    for _ in eng.serve_stream():
+        pass
+
+
+def test_restored_stream_redelivers_unconsumed_events():
+    """Events sitting in the pending buffer at snapshot time (produced by
+    a fully-applied step but never consumed) are re-delivered by the
+    restored stream — an abandoned consumer loses nothing."""
+    cfg, params = _model()
+    sc = ServeConfig(max_batch=1, max_seq=128)
+    eng = ServeEngine(cfg, params, sc)
+    solo = eng.generate([_P0], max_new=1)[0]
+    rid = eng.submit(Request(_P0, max_new=1))   # finishes AT admission
+    stream = eng.serve_stream()
+    first = next(stream)            # token event; FinishEvent still pending
+    assert isinstance(first, TokenEvent) and first.rid == rid
+    snap = eng.snapshot()
+    assert len(snap["pending"]) == 1
+
+    eng2 = ServeEngine(cfg, params, sc)
+    eng2.restore(snap)
+    events = list(eng2.serve_stream())
+    assert len(events) == 1 and isinstance(events[0], FinishEvent)
+    assert events[0].rid == rid
+    assert events[0].result.finish == FinishReason.MAX_NEW
+    np.testing.assert_array_equal(events[0].result.tokens, solo)
