@@ -803,3 +803,42 @@ def serve_slo_rows():
                  f"clean-prefix partial of {len(vr.tokens)} tokens; other "
                  f"{len(clean) - 1} requests bit-identical to clean run)"))
     return rows
+
+
+def static_analysis_rows():
+    """Static guarantees as benchmark artifacts: per-check tightest exact
+    margins of the datapath proof over every accepted plan, plus the lint
+    status of the jitted entry points (no timing — these are proofs)."""
+    from fractions import Fraction
+
+    from repro.analysis import (
+        DEFAULT_RULES,
+        build_traced_entries,
+        lint_kernel_sources,
+        prove_all,
+        run_rules,
+    )
+
+    report = prove_all(raise_on_violation=False)
+    rows = []
+    tightest = {}
+    for plan in report["plans"]:
+        for c in plan["checks"]:
+            if c["margin"] is None:
+                continue
+            m = Fraction(c["margin"])
+            key = c["name"]
+            if key not in tightest or m < tightest[key][0]:
+                tightest[key] = (m, f"{plan['format']}/{plan['variant']}")
+    for check, (m, where) in sorted(tightest.items()):
+        rows.append((f"static_analysis/margin/{check}", float("nan"),
+                     f"tightest_margin={m} at {where} "
+                     f"(exact rational; >= 0 proves the condition)"))
+    rows.append(("static_analysis/datapath", float("nan"),
+                 f"proven={report['proven']} violations="
+                 f"{report['violations']} skipped={len(report['skipped'])}"))
+    entries = build_traced_entries()
+    lint = run_rules(entries, DEFAULT_RULES) + lint_kernel_sources()
+    rows.append(("static_analysis/lint", float("nan"),
+                 f"entries={len(entries)} violations={len(lint)}"))
+    return rows

@@ -47,6 +47,8 @@ def main() -> None:
          B.divider_hlo_flops_rows, False),
         ("Beyond-paper: radix-16 overlapped design point",
          B.radix16_rows, False),
+        ("Static analysis (datapath proof margins + lint)",
+         B.static_analysis_rows, False),
         ("Rowwise vs broadcast fused division",
          B.rowwise_vs_broadcast_rows, True),
         ("Flash bwd (fused recompute kernels vs float reference)",

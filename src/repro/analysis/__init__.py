@@ -1,0 +1,103 @@
+"""Static analysis of the posit-division serve stack: prove, then gate.
+
+Two halves, both run by ``python -m repro.analysis`` (CI job
+``static-analysis``; violations fail the build):
+
+Datapath prover — :mod:`repro.analysis.datapath`
+================================================
+Exact :class:`fractions.Fraction` proofs over interval endpoints (no
+sampling) for every ``(format, variant)`` the kernel datapath accepts,
+keyed to the paper's correctness argument:
+
+  ==========================  =============================================
+  check                       paper anchor
+  ==========================  =============================================
+  ``containment``             Eq 26 (radix-2 exact), Eq 27 (radix-2
+                              carry-save), Eq 28 (radix-4 tabled m_k),
+                              Eq 29 (radix-4 scaled): selection constants
+                              keep ``|w(i)| <= rho * d`` including the
+                              truncated carry-save estimate error
+  ``residual_frame``          Section III-E1 sizing: the W-word int32
+                              frame's ``32W - 3`` fraction bits hold every
+                              reachable residual, divisor multiple and
+                              termination add inside ``[-4, 4)``
+  ``scaling_range``           Table I: ``M * d`` lands in ``[63/64, 9/8]``
+                              for every divisor interval (the range Eq 29
+                              assumes)
+  ``otf_width``               Eqs 18-19 (on-the-fly conversion never
+                              borrows below word 0) and Eqs 30-31
+                              (iteration count emits the ``n - 1``
+                              quotient bits; registers hold ``fp + 2``)
+  ==========================  =============================================
+
+:func:`repro.core.seltables.verify_radix4_table_exhaustive` now delegates
+to the same exact check — the legacy float-grid sampling is gone.
+
+Jaxpr / structure linter — :mod:`repro.analysis.jaxpr_lint` + ``rules``
+=======================================================================
+Abstractly traces the jitted entry points (model decode with and without
+the health probe, prefill, the posit softmax/router/div ops on both
+backends, fused flash attention forward + backward) and enforces:
+no f64 avals; no (Sq, Sk) score materialization in the flash backward;
+no compiler-ordered ``reduce_sum`` on posit-datapath tensors (fixed-order
+or quire routes only); no host callbacks in the serve hot path; AST-level
+``pallas_call`` discipline (``compiler_params`` + ``vmem_limit_bytes``
+everywhere, ``interpret=None`` defaults); and — via executable probes —
+exactly one compiled decode executable per (family, numerics backend).
+"""
+
+from .datapath import (
+    CheckResult,
+    DatapathProofError,
+    PlanVerdict,
+    SelectionSpec,
+    check_otf_width,
+    check_residual_frame,
+    check_scaling_range,
+    check_selection_containment,
+    prove_all,
+    prove_plan,
+    selection_spec_for,
+)
+from .jaxpr_lint import (
+    LintRule,
+    TracedEntry,
+    Violation,
+    iter_avals,
+    iter_eqns,
+    run_rules,
+    trace_entry,
+)
+from .rules import (
+    DEFAULT_RULES,
+    EXECUTABLE_PROBES,
+    build_traced_entries,
+    lint_kernel_sources,
+    run_executable_probes,
+)
+
+__all__ = [
+    "CheckResult",
+    "DatapathProofError",
+    "PlanVerdict",
+    "SelectionSpec",
+    "check_otf_width",
+    "check_residual_frame",
+    "check_scaling_range",
+    "check_selection_containment",
+    "prove_all",
+    "prove_plan",
+    "selection_spec_for",
+    "LintRule",
+    "TracedEntry",
+    "Violation",
+    "iter_avals",
+    "iter_eqns",
+    "run_rules",
+    "trace_entry",
+    "DEFAULT_RULES",
+    "EXECUTABLE_PROBES",
+    "build_traced_entries",
+    "lint_kernel_sources",
+    "run_executable_probes",
+]

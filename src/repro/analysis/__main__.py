@@ -1,0 +1,101 @@
+"""CLI: ``python -m repro.analysis [--json ANALYSIS.json]``.
+
+Runs the datapath prover and the jaxpr/structure linter, writes a
+machine-readable report, prints a human summary, and exits non-zero on any
+violation (the CI ``static-analysis`` job gates on this).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static datapath-correctness prover + jaxpr linter")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable report here")
+    ap.add_argument("--families", default="smollm-360m",
+                    help="comma-separated arch names to trace decode/prefill "
+                         "entries for (default: smollm-360m)")
+    ap.add_argument("--probes", choices=("full", "fast", "none"),
+                    default="full",
+                    help="executable one-decode-executable probes: full = "
+                         "every family x backend, fast = dense/emulate "
+                         "only, none = skip (default: full)")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import (
+        DEFAULT_RULES,
+        build_traced_entries,
+        lint_kernel_sources,
+        prove_all,
+        run_executable_probes,
+        run_rules,
+    )
+
+    t0 = time.time()
+
+    # ---- datapath prover -------------------------------------------------
+    datapath = prove_all(raise_on_violation=False)
+    print(f"[datapath] {datapath['proven']} plans proven, "
+          f"{datapath['violations']} violations, "
+          f"{len(datapath['skipped'])} unplannable pairs "
+          f"(tightest margin {datapath['tightest_margin']})")
+
+    # ---- jaxpr linter ----------------------------------------------------
+    families = [f for f in args.families.split(",") if f]
+    entries = build_traced_entries(families)
+    violations = run_rules(entries, DEFAULT_RULES)
+    print(f"[lint] {len(entries)} entries traced, "
+          f"{len(violations)} jaxpr violations")
+
+    # ---- kernel-source AST scan -----------------------------------------
+    ast_violations = lint_kernel_sources()
+    print(f"[lint] kernel AST scan: {len(ast_violations)} violations")
+
+    # ---- executable probes ----------------------------------------------
+    probe_violations = []
+    if args.probes != "none":
+        probe_violations = run_executable_probes(fast=args.probes == "fast")
+        print(f"[probe] one-decode-executable: "
+              f"{len(probe_violations)} violations")
+
+    all_lint = violations + ast_violations + probe_violations
+    ok = datapath["violations"] == 0 and not all_lint
+    report = {
+        "ok": ok,
+        "elapsed_s": round(time.time() - t0, 2),
+        "datapath": datapath,
+        "lint": {
+            "entries": [e.name for e in entries],
+            "rules": [r.name for r in DEFAULT_RULES]
+            + ["pallas-call-discipline", "one-decode-executable"],
+            "violations": [v.as_json() for v in all_lint],
+        },
+    }
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2)
+        print(f"[report] wrote {args.json}")
+
+    for v in all_lint:
+        print(f"VIOLATION {v}")
+    if datapath["violations"]:
+        for plan in datapath["plans"]:
+            if not plan["proven"]:
+                for c in plan["checks"]:
+                    if not c["ok"]:
+                        print(f"VIOLATION [{c['name']}] "
+                              f"{plan['format']}/{plan['variant']}: "
+                              f"{c['detail']}")
+    print(f"{'OK' if ok else 'FAILED'} in {report['elapsed_s']}s")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

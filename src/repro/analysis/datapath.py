@@ -1,0 +1,498 @@
+"""Static datapath-correctness prover: exact rational proofs per plan.
+
+For every ``(format, variant)`` pair that
+:func:`repro.kernels.posit_div.kernel_datapath_plan` accepts — all Table IV
+variants x posit8/16/32/64, scaled and unscaled — this module PROVES, with
+exact :class:`fractions.Fraction` arithmetic over interval endpoints (no
+sampling anywhere), the four static conditions the paper's correctness
+argument rests on:
+
+``containment``
+    The frozen selection constants (Eq 26/27/28/29, exported by
+    :mod:`repro.core.seltables`) satisfy P-D containment: for every divisor
+    interval and every reachable truncated carry-save estimate, the chosen
+    digit keeps the next residual inside ``|w| <= rho * d`` — including the
+    truncated-estimate error term (2 ulp for a carry-save pair, 1 ulp for a
+    non-redundant residual, exact for the nonrestoring sign select) and the
+    first folded iteration's ``w(0) = x / r`` initialization.
+
+``residual_frame``
+    The W-word int32 carry-save frame cannot overflow: ``32*W - 3``
+    fraction bits leave 3 integer bits (incl. sign), and every reachable
+    value — the shifted residual plus estimate error, the ``2d`` multiple,
+    the termination adds ``w + d``, the (scaled) initial dividend — stays
+    strictly inside ``[-4, 4)``; operand alignment keeps >= 3 (scaled)
+    or >= 1 guard bits so the Table I shifts drop only zeros.  The emulate
+    (BitVec) frame of :func:`repro.core.divider.datapath_widths` is proven
+    under the same conditions.
+
+``scaling_range``
+    Operand scaling keeps the scaled divisor ``z = M*d`` inside
+    ``[63/64, 9/8]`` for every Table I interval, which is exactly the
+    divisor range the Eq 29 containment proof above assumes.
+
+``otf_width``
+    ``iterations`` and ``qwords`` suffice: the recurrence emits at least
+    the ``n - 1`` quotient bits Eq 30/31 requires, the OTF registers hold
+    ``fp + 2`` bits, appended digit values are non-negative (OTF never
+    borrows below word 0), and the round-bit index ``fp - F - 1`` is
+    non-negative for posit RNE termination.
+
+Violations raise :class:`DatapathProofError` (or are collected into the
+machine-readable report by :func:`prove_all`).  Known-bad inputs — a plan
+with one fewer guard bit, an ``m_k`` off by one ulp — must FAIL; the test
+suite pins that.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from fractions import Fraction as Fr
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import seltables
+from repro.core.divider import VARIANTS, datapath_widths, selection_bits
+from repro.core.posit import PositFormat
+from repro.kernels.posit_div import (
+    RESIDUAL_INT_BITS,
+    DatapathPlan,
+    kernel_plan_error,
+    planned_pairs,
+)
+
+__all__ = [
+    "DatapathProofError",
+    "CheckResult",
+    "PlanVerdict",
+    "SelectionSpec",
+    "selection_spec_for",
+    "check_selection_containment",
+    "check_residual_frame",
+    "check_scaling_range",
+    "check_otf_width",
+    "prove_plan",
+    "prove_all",
+]
+
+
+class DatapathProofError(AssertionError):
+    """A static correctness condition of the divider datapath is violated."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckResult:
+    """One proven (or refuted) condition with its tightest exact margin."""
+
+    name: str                    # containment|residual_frame|scaling_range|otf_width
+    ok: bool
+    margin: Optional[Fr]         # tightest slack; >= 0 iff ok (None: n/a)
+    detail: str
+
+    def as_json(self) -> Dict:
+        return {
+            "name": self.name,
+            "ok": self.ok,
+            "margin": None if self.margin is None else str(self.margin),
+            "margin_float": (None if self.margin is None
+                             else float(self.margin)),
+            "detail": self.detail,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanVerdict:
+    format: str
+    variant: str
+    words: int
+    proven: bool
+    checks: Tuple[CheckResult, ...]
+
+    def as_json(self) -> Dict:
+        return {
+            "format": self.format,
+            "variant": self.variant,
+            "words": self.words,
+            "proven": self.proven,
+            "checks": [c.as_json() for c in self.checks],
+        }
+
+
+def _min_margin(constraints: Sequence[Tuple[Fr, str]]) -> Tuple[Fr, str]:
+    """The binding (smallest-slack) constraint of an exact constraint set."""
+    margin, label = min(constraints, key=lambda c: c[0])
+    return margin, label
+
+
+# =====================================================================
+# selection rule model
+# =====================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionSpec:
+    """A quotient-digit selection rule as exact rational data.
+
+    ``thresholds`` maps digit ``k`` to the value-units lower threshold
+    ``t_k`` of its selection range ``t_k <= y_hat < t_{k+1}`` (the bottom
+    digit ``-max_digit`` has no entry: its range is unbounded below).
+    ``ulp`` is the estimate grid granularity (0 for the exact sign-only
+    nonrestoring select) and ``err`` the supremum of the truncation error
+    ``y - y_hat`` (2 ulp carry-save, 1 ulp non-redundant, 0 exact).
+    """
+
+    name: str
+    radix: int
+    rho: Fr
+    digits: Tuple[int, ...]      # ordered digit set (nrd: (-1, 1) — no 0)
+    ulp: Fr
+    err: Fr
+    # (dlo, dhi, {digit: threshold in value units})
+    intervals: Tuple[Tuple[Fr, Fr, Dict[int, Fr]], ...]
+    # base divisor intervals feeding w(0) containment (dlo endpoints)
+    init_dlo: Tuple[Fr, ...]
+
+
+def _radix4_intervals(table=None) -> Tuple[Tuple[Fr, Fr, Dict[int, Fr]], ...]:
+    table = seltables.RADIX4_TABLE if table is None else table
+    ulp = Fr(1, 1 << seltables.G_FRAC)
+    out = []
+    for i, row in enumerate(table):
+        dlo = Fr(8 + i, 16)
+        dhi = Fr(9 + i, 16)
+        out.append((dlo, dhi, {k: row[k] * ulp for k in (-1, 0, 1, 2)}))
+    return tuple(out)
+
+
+def selection_spec_for(variant: str, table=None) -> SelectionSpec:
+    """The exact selection rule a Table IV variant implements.
+
+    ``table`` optionally overrides the frozen radix-4 ``m_k`` rows (the
+    known-bad-fixture hook: a tampered table must refute containment).
+    """
+    cfg = VARIANTS[variant]
+    rho = Fr(*cfg.rho_num_den)
+    base_dlo = tuple(Fr(8 + i, 16) for i in range(8))
+    if cfg.nonrestoring:
+        # Algorithm 1: digit = sign(w), exact residual, rho = 1, digit set
+        # {-1, +1} — no zero digit, so the digit tuple is non-contiguous.
+        return SelectionSpec(
+            name=variant, radix=2, rho=Fr(1), digits=(-1, 1), ulp=Fr(0),
+            err=Fr(0), intervals=((Fr(1, 2), Fr(1), {1: Fr(0)}),),
+            init_dlo=(Fr(1, 2),))
+    if cfg.radix == 2:
+        half = Fr(1, 2)
+        if cfg.redundant_residual:   # Eq 27: carry-save estimate
+            th = {1: seltables.R2_CS_M1 * half,
+                  0: seltables.R2_CS_M0 * half}
+            err = 2 * half
+        else:                        # Eq 26: truncated exact residual
+            th = {1: seltables.R2_EXACT_M1 * half,
+                  0: seltables.R2_EXACT_M0 * half}
+            err = half
+        return SelectionSpec(
+            name=variant, radix=2, rho=Fr(1), digits=(-1, 0, 1), ulp=half,
+            err=err, intervals=((Fr(1, 2), Fr(1), th),),
+            init_dlo=(Fr(1, 2),))
+    if cfg.scaling:                  # Eq 29: divisor-independent thresholds
+        ulp = Fr(1, 1 << seltables.SCALED_G_FRAC)
+        th = {2: seltables.SCALED_M2 * ulp, 1: seltables.SCALED_M1 * ulp,
+              0: seltables.SCALED_M0 * ulp, -1: seltables.SCALED_MM1 * ulp}
+        return SelectionSpec(
+            name=variant, radix=4, rho=rho, digits=(-2, -1, 0, 1, 2),
+            ulp=ulp, err=2 * ulp,
+            intervals=((seltables.SCALED_Z_LO, seltables.SCALED_Z_HI, th),),
+            init_dlo=base_dlo)
+    ulp = Fr(1, 1 << seltables.G_FRAC)   # Eq 28: tabled per divisor interval
+    return SelectionSpec(
+        name=variant, radix=4, rho=rho, digits=(-2, -1, 0, 1, 2), ulp=ulp,
+        err=2 * ulp, intervals=_radix4_intervals(table), init_dlo=base_dlo)
+
+
+def check_selection_containment(spec: SelectionSpec) -> CheckResult:
+    """Prove P-D containment for ``spec`` over exact interval endpoints.
+
+    For every divisor interval ``[dlo, dhi)`` and every digit ``k`` with
+    selection range ``[t_k, t_{k+1})``, the worst attainable shifted
+    residual is bounded by threshold endpoints plus the truncation error:
+
+      upper:  (t_{k+1} - ulp) + err <= (k + rho) * dlo      (Eq 14 top)
+      lower:  t_k >= (k - rho) * d_worst                    (Eq 14 bottom)
+
+    with the unbounded outer digits covered by the residual invariant
+    itself (``r*rho <= max_digit + rho``).  Also proven: the first folded
+    iteration's estimate (``y = x``, ``x < 1``) is containable, and the
+    truncated estimate never wraps the ``2^(IB-1)``-bounded window.
+    """
+    r, rho = spec.radix, spec.rho
+    cons: List[Tuple[Fr, str]] = []
+    window = Fr(1 << (RESIDUAL_INT_BITS - 1))  # [-4, 4)
+    for dlo, dhi, th in spec.intervals:
+        dmax = dhi
+        for idx, k in enumerate(spec.digits):
+            t_lo = th.get(k)
+            succ = spec.digits[idx + 1] if idx + 1 < len(spec.digits) else None
+            t_hi = None if succ is None else th.get(succ)
+            where = f"{spec.name} d in [{dlo},{dhi}) digit {k:+d}"
+            if t_hi is None:
+                # top digit: max residual r*rho*d must itself be containable
+                cons.append(((k + rho) - r * rho, f"{where} top-digit bound"))
+            else:
+                y_sup = t_hi - spec.ulp + spec.err
+                cons.append(((k + rho) * dlo - y_sup,
+                             f"{where} upper: max y_hat + err vs (k+rho)*dlo"))
+            if t_lo is None:
+                # bottom digit: -r*rho*d >= (k - rho)*d for every d
+                cons.append((-r * rho - (k - rho),
+                             f"{where} bottom-digit bound"))
+            else:
+                dworst = dmax if (k - rho) >= 0 else dlo
+                cons.append((t_lo - (k - rho) * dworst,
+                             f"{where} lower: t_k vs (k-rho)*d"))
+        # the truncated estimate window [-2^(IB-1), 2^(IB-1)) never wraps
+        cons.append((window - (r * rho * dmax + spec.err),
+                     f"{spec.name} d<={dhi}: estimate low-wrap headroom"))
+        if spec.ulp:
+            cons.append((window - spec.ulp - r * rho * dmax,
+                         f"{spec.name} d<={dhi}: estimate top grid value"))
+    # first folded iteration: y(1) = x (x < 1, sup not attained) must sit
+    # inside the containable window r*rho*d of every base divisor interval
+    for dlo in spec.init_dlo:
+        cons.append((spec.radix * rho * dlo - 1,
+                     f"{spec.name} init w(0)=x/r containment at dlo={dlo}"))
+    margin, label = _min_margin(cons)
+    ok = margin >= 0
+    detail = (f"binding constraint: {label} (slack {margin})" if ok else
+              f"VIOLATED: {label} (slack {margin})")
+    return CheckResult("containment", ok, margin, detail)
+
+
+# =====================================================================
+# residual frame width
+# =====================================================================
+
+
+def check_residual_frame(plan: DatapathPlan) -> CheckResult:
+    """Prove the W-word int32 carry-save frame cannot overflow.
+
+    Bits: ``32*W - 3`` fraction bits must cover the operand fraction plus
+    its guard margin (3 scaled / 1 unscaled) so alignment and the Table I
+    scaling shifts are exact.  Range: every reachable value — shifted
+    residual + estimate error, ``2d``, termination ``w + d``, the (scaled)
+    initial dividend — stays strictly inside ``[-4, 4)``.  The emulate
+    BitVec frame (``core.divider.datapath_widths``) is held to the same
+    conditions.
+    """
+    spec = selection_spec_for(plan.variant)
+    r, rho = spec.radix, spec.rho
+    cfg = VARIANTS[plan.variant]
+    cons: List[Tuple[Fr, str]] = []
+
+    # ---- estimate grid consistency --------------------------------------
+    # the tb-bit estimate the recurrence actually reads must be the grid
+    # the containment proof above assumed (and the kernel's gbits match it)
+    tb = selection_bits(cfg)
+    if tb is not None:
+        gfrac = tb - RESIDUAL_INT_BITS
+        cons.append((Fr(1) if spec.ulp == Fr(1, 1 << gfrac) else Fr(-1),
+                     f"estimate grid: proof ulp {spec.ulp} vs implemented "
+                     f"tb={tb} ({gfrac} fraction bits)"))
+        cons.append((Fr(1) if plan.gbits == gfrac else Fr(-1),
+                     f"kernel estimate bits gbits={plan.gbits} vs emulate "
+                     f"selection {gfrac} fraction bits"))
+
+    # ---- bit-exactness of the kernel frame ------------------------------
+    wf = 32 * plan.words - RESIDUAL_INT_BITS
+    margin_bits = 3 if plan.scaled else 1
+    shift = wf - plan.frac
+    cons.append((Fr(shift - margin_bits),
+                 f"kernel guard bits: shift {shift} vs required "
+                 f"{margin_bits} ({'scaled Table I shifts' if plan.scaled else 'alignment headroom'})"))
+    if shift != plan.shift:
+        return CheckResult(
+            "residual_frame", False, Fr(-1),
+            f"VIOLATED: plan.shift={plan.shift} inconsistent with frame "
+            f"(32*{plan.words} - {RESIDUAL_INT_BITS} - frac {plan.frac} "
+            f"= {shift})")
+
+    # ---- reachable-value range ------------------------------------------
+    window = Fr(1 << (RESIDUAL_INT_BITS - 1))  # 2^(IB-1) = 4
+    dmax = max(dhi for _, dhi, _ in spec.intervals)
+    x_sup = Fr(1)
+    if plan.scaled:
+        # sup of the scaled dividend M*x over Table I (x < 1)
+        x_sup = max(_table1_factor(i) for i in range(8))
+    cons.append((window - (r * rho * dmax + spec.err),
+                 "shifted residual + estimate error"))
+    if r == 4:
+        cons.append((window - 2 * dmax, "2d divisor multiple"))
+    cons.append((window - (1 + rho) * dmax, "termination add w + d"))
+    cons.append((window - x_sup, "initial dividend"))
+
+    # ---- emulate (BitVec) frame under the same conditions ---------------
+    fmt = PositFormat(plan.n)
+    FRAC, frac_w, _, _, _ = datapath_widths(fmt, cfg)
+    want = FRAC + cfg.p_shift + (3 if cfg.scaling else 0)
+    cons.append((Fr(frac_w - want),
+                 f"emulate frame fraction bits {frac_w} vs exact-alignment "
+                 f"requirement {want}"))
+
+    margin, label = _min_margin(cons)
+    ok = margin >= 0 and shift == plan.shift
+    detail = (f"binding constraint: {label} (slack {margin}); frame holds "
+              f"[-4, 4) with {wf} fraction bits" if ok
+              else f"VIOLATED: {label} (slack {margin})")
+    return CheckResult("residual_frame", ok, margin, detail)
+
+
+def _table1_factor(i: int) -> Fr:
+    s1, s2 = seltables.SCALING_SHIFTS[i]
+    return 1 + Fr(1, 1 << s1) + (Fr(1, 1 << s2) if s2 else 0)
+
+
+# =====================================================================
+# operand scaling range (Table I)
+# =====================================================================
+
+
+def check_scaling_range(plan: DatapathPlan) -> CheckResult:
+    """Prove Table I scaling maps every divisor interval into [63/64, 9/8].
+
+    Exact endpoints: ``z = M_i * d`` for ``d in [(8+i)/16, (9+i)/16)`` must
+    satisfy ``SCALED_Z_LO <= z <= SCALED_Z_HI`` — the divisor range the
+    Eq 29 containment proof assumes.  Trivially proven (margin None) for
+    unscaled variants.
+    """
+    if not plan.scaled:
+        return CheckResult("scaling_range", True, None,
+                           "not applicable (unscaled variant)")
+    cons: List[Tuple[Fr, str]] = []
+    for i in range(8):
+        m = _table1_factor(i)
+        dlo = Fr(8 + i, 16)
+        dhi = Fr(9 + i, 16)
+        cons.append((m * dlo - seltables.SCALED_Z_LO,
+                     f"interval {i}: M*dlo vs z_lo"))
+        cons.append((seltables.SCALED_Z_HI - m * dhi,
+                     f"interval {i}: M*dhi vs z_hi"))
+    margin, label = _min_margin(cons)
+    ok = margin >= 0
+    detail = (f"binding constraint: {label} (slack {margin})" if ok else
+              f"VIOLATED: {label} (slack {margin})")
+    return CheckResult("scaling_range", ok, margin, detail)
+
+
+# =====================================================================
+# quotient / OTF register width
+# =====================================================================
+
+
+def check_otf_width(plan: DatapathPlan) -> CheckResult:
+    """Prove iterations and quotient registers suffice for ``fp+2`` bits.
+
+    Exact integer conditions: the recurrence emits ``fp + log2(r)``
+    quotient bits covering the ``n - 1`` Eq 30 requires; the OTF registers
+    hold ``fp + 2`` bits in ``qwords`` words; OTF appends are non-negative
+    ``log2(r)``-bit values (conversion never borrows below word 0, Eq
+    18-19); the posit round-bit index ``fp - F - 1`` exists.  The emulate
+    register (``WQ = FP + 2``) is checked under its own iteration count.
+    """
+    cfg = VARIANTS[plan.variant]
+    lr = 1 if plan.radix == 2 else 2
+    F = plan.frac - 1
+    cons: List[Tuple[Fr, str]] = []
+    cons.append((Fr(plan.fp + lr - (plan.n - 1)),
+                 f"quotient bits emitted {plan.fp + lr} vs h = n-1 = "
+                 f"{plan.n - 1} (Eq 30/31)"))
+    cons.append((Fr(32 * plan.qwords - (plan.fp + 2)),
+                 f"register bits {32 * plan.qwords} vs fp+2 = {plan.fp + 2}"))
+    cons.append((Fr(plan.fp - F - 1), "round-bit index fp - F - 1"))
+    cons.append((Fr(plan.iterations - 1), "folded-init iteration count"))
+    # OTF append values: q_app in [0, r-1], qd_app in [0, r-1] — both fit
+    # lr bits and never go negative (max digit a <= r - 1)
+    cons.append((Fr((plan.radix - 1) - _max_digit(plan)),
+                 "OTF append non-negative (a <= r - 1)"))
+    # emulate register, its own iteration count (Eq 31 with h = n-1-floor(rho))
+    fmt = PositFormat(plan.n)
+    _, _, _, FP_e, WQ_e = datapath_widths(fmt, cfg)
+    cons.append((Fr(FP_e + cfg.p_shift - cfg.h(fmt)),
+                 f"emulate quotient bits {FP_e + cfg.p_shift} vs h = "
+                 f"{cfg.h(fmt)}"))
+    cons.append((Fr(FP_e - F - 1), "emulate round-bit index FP - F - 1"))
+    cons.append((Fr(WQ_e - (FP_e + 2)), "emulate register WQ vs FP+2"))
+    margin, label = _min_margin(cons)
+    ok = margin >= 0
+    detail = (f"binding constraint: {label} (slack {margin})" if ok else
+              f"VIOLATED: {label} (slack {margin})")
+    return CheckResult("otf_width", ok, margin, detail)
+
+
+def _max_digit(plan: DatapathPlan) -> int:
+    return 1 if plan.radix == 2 else 2
+
+
+# =====================================================================
+# per-plan and whole-table proofs
+# =====================================================================
+
+
+def prove_plan(plan: DatapathPlan, table=None) -> PlanVerdict:
+    """Run all four static checks for one datapath plan.
+
+    ``table`` optionally substitutes the radix-4 selection rows (fixture
+    hook).  Never raises; inspect ``PlanVerdict.proven``.
+    """
+    spec = selection_spec_for(plan.variant, table=table)
+    checks = (
+        check_selection_containment(spec),
+        check_residual_frame(plan),
+        check_scaling_range(plan),
+        check_otf_width(plan),
+    )
+    return PlanVerdict(
+        format=f"posit{plan.n}", variant=plan.variant, words=plan.words,
+        proven=all(c.ok for c in checks), checks=checks)
+
+
+def prove_all(formats=None, raise_on_violation: bool = True) -> Dict:
+    """Prove every ``kernel_datapath_plan``-accepted (format, variant) pair.
+
+    Returns the machine-readable report (per-plan verdicts + tightest
+    margins + the pairs with no plan and why).  With
+    ``raise_on_violation`` (the default), any unproven plan raises
+    :class:`DatapathProofError` naming the violated constraint.
+    """
+    verdicts: List[PlanVerdict] = []
+    for _fmt, _variant, plan in planned_pairs(formats):
+        verdicts.append(prove_plan(plan))
+    skipped = []
+    if formats is None:
+        from repro.numerics.formats import NUMERIC_FORMATS
+
+        formats = tuple(NUMERIC_FORMATS.values())
+    for fmt in formats:
+        for variant in VARIANTS:
+            err = kernel_plan_error(fmt, variant)
+            if err is not None:
+                skipped.append({"format": f"posit{fmt.n}", "variant": variant,
+                                "reason": err})
+    bad = [v for v in verdicts if not v.proven]
+    if bad and raise_on_violation:
+        lines = []
+        for v in bad:
+            for c in v.checks:
+                if not c.ok:
+                    lines.append(f"{v.format}/{v.variant}: {c.name}: "
+                                 f"{c.detail}")
+        raise DatapathProofError(
+            "datapath proof FAILED for "
+            f"{len(bad)}/{len(verdicts)} plans:\n" + "\n".join(lines))
+    margins = [c.margin for v in verdicts for c in v.checks
+               if c.margin is not None]
+    return {
+        "plans": [v.as_json() for v in verdicts],
+        "skipped": skipped,
+        "proven": len(verdicts) - len(bad),
+        "violations": len(bad),
+        "tightest_margin": (str(min(margins)) if margins else None),
+        "tightest_margin_float": (float(min(margins)) if margins else None),
+    }

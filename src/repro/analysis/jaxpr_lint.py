@@ -1,0 +1,171 @@
+"""Reusable jaxpr invariant linter: trace jitted entry points, run rules.
+
+The serve stack's structural guarantees — no f64 anywhere, no (Sq, Sk)
+score tensor in the fused attention backward, no compiler-ordered
+``reduce_sum`` on posit-datapath tensors, no host callbacks in the serve
+hot path — were previously enforced (when at all) by one-off jaxpr walks
+inside individual tests.  This module generalizes that into a small pass
+framework:
+
+  * :class:`TracedEntry` — a named, tagged ``ClosedJaxpr`` of one jitted
+    entry point (built abstractly via :func:`trace_entry`; nothing
+    executes).
+  * :class:`LintRule` — a named predicate over one entry, optionally
+    restricted by tag (``requires_tag``), producing :class:`Violation`
+    records with actionable messages.
+  * :func:`iter_eqns` / :func:`iter_avals` — recursive equation/aval
+    walks that descend into every sub-jaxpr held in ``eqn.params``
+    (``cond`` branches, ``while`` bodies, ``scan``/``pjit``/``custom_vjp``
+    bodies, ``pallas_call`` kernel jaxprs, and lists thereof), so a rule
+    sees the WHOLE program, not just the top level.
+  * :func:`run_rules` — apply rules to entries, collect violations.
+
+Concrete rules and the traced-entry registry for this repo live in
+:mod:`repro.analysis.rules`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
+
+import jax
+
+__all__ = [
+    "Violation",
+    "TracedEntry",
+    "LintRule",
+    "trace_entry",
+    "iter_eqns",
+    "iter_avals",
+    "run_rules",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One broken invariant, tied to a rule and an entry (or file) name."""
+
+    rule: str
+    entry: str
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.entry}: {self.detail}"
+
+    def as_json(self) -> Dict[str, str]:
+        return {"rule": self.rule, "entry": self.entry, "detail": self.detail}
+
+
+@dataclasses.dataclass(frozen=True)
+class TracedEntry:
+    """One abstractly-traced jitted entry point plus its rule tags.
+
+    ``tags`` routes rules: a rule with ``requires_tag`` only runs on
+    entries carrying that tag.  ``params`` carries per-entry rule inputs
+    (e.g. the sequence length a score-materialization check compares
+    shapes against).
+    """
+
+    name: str
+    closed: Any                      # jax.core.ClosedJaxpr
+    tags: frozenset
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def trace_entry(name: str, fn, args, tags: Iterable[str],
+                params: Optional[Dict[str, Any]] = None) -> TracedEntry:
+    """Abstractly trace ``fn(*args)`` (ShapeDtypeStructs welcome) to a
+    tagged :class:`TracedEntry`.  Nothing executes and nothing compiles —
+    this is ``jax.make_jaxpr``, so tracing a whole model decode step is
+    cheap and device-free."""
+    closed = jax.make_jaxpr(fn)(*args)
+    return TracedEntry(name=name, closed=closed, tags=frozenset(tags),
+                       params=dict(params or {}))
+
+
+class LintRule:
+    """Base class: subclasses set ``name``/``requires_tag``, implement
+    ``check(entry) -> list[Violation]``."""
+
+    name: str = "?"
+    requires_tag: Optional[str] = None
+
+    def applies(self, entry: TracedEntry) -> bool:
+        return self.requires_tag is None or self.requires_tag in entry.tags
+
+    def check(self, entry: TracedEntry) -> List[Violation]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# recursive jaxpr walking (duck-typed: no dependence on jax.core paths)
+# ---------------------------------------------------------------------------
+
+
+def _as_jaxpr(obj):
+    """The raw Jaxpr of ``obj`` (Jaxpr or ClosedJaxpr), else None."""
+    if hasattr(obj, "jaxpr") and hasattr(obj, "consts"):
+        return obj.jaxpr
+    if hasattr(obj, "eqns") and hasattr(obj, "invars"):
+        return obj
+    return None
+
+
+def _jaxprs_in(val) -> Iterator[Any]:
+    """Every (possibly nested) jaxpr inside one ``eqn.params`` value."""
+    j = _as_jaxpr(val)
+    if j is not None:
+        yield j
+        return
+    if isinstance(val, (list, tuple)):
+        for item in val:
+            yield from _jaxprs_in(item)
+
+
+def iter_eqns(jaxpr) -> Iterator[Any]:
+    """All equations of ``jaxpr``, recursing into sub-jaxprs in params."""
+    j = _as_jaxpr(jaxpr)
+    if j is None:
+        return
+    for eqn in j.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            for sub in _jaxprs_in(val):
+                yield from iter_eqns(sub)
+
+
+def iter_avals(jaxpr) -> Iterator[Tuple[str, Any]]:
+    """``(context, aval)`` for every abstract value in the whole program:
+    top-level in/outvars plus every equation's in/out variables, at every
+    nesting level.  ``context`` names the producing primitive (or
+    ``"input"``/``"output"``)."""
+    j = _as_jaxpr(jaxpr)
+    if j is None:
+        return
+    for v in list(j.invars) + list(j.constvars):
+        aval = getattr(v, "aval", None)
+        if aval is not None:
+            yield "input", aval
+    for v in j.outvars:
+        aval = getattr(v, "aval", None)
+        if aval is not None:
+            yield "output", aval
+    for eqn in iter_eqns(j):
+        prim = getattr(eqn.primitive, "name", str(eqn.primitive))
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None:
+                yield prim, aval
+
+
+def run_rules(entries: Iterable[TracedEntry],
+              rules: Iterable[LintRule]) -> List[Violation]:
+    """Apply every applicable rule to every entry; collect violations."""
+    out: List[Violation] = []
+    rules = list(rules)
+    for entry in entries:
+        for rule in rules:
+            if rule.applies(entry):
+                out.extend(rule.check(entry))
+    return out

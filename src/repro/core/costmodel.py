@@ -82,7 +82,6 @@ class CostReport:
 
 def _stage_costs(fmt: PositFormat, cfg: DividerConfig):
     """(area, delay) of one recurrence iteration + per-design extras."""
-    n = fmt.n
     F = fmt.F
     frac = F + 1
     W = frac + cfg.p_shift + 3 + (3 if cfg.scaling else 0)  # residual width
@@ -231,7 +230,6 @@ def radix16_overlap_estimate(fmt: PositFormat, pipelined: bool = True) -> CostRe
     import dataclasses as _dc
 
     base = estimate(fmt, "srt_r4_cs_of_fr", pipelined)
-    it4 = VARIANTS["srt_r4_cs_of_fr"].iterations(fmt)
     it16 = -(-(fmt.n - 1) // 4)
     cycles = it16 + 3
     # second overlapped stage: CSA row + speculative selection (5x) + mux

@@ -116,7 +116,14 @@ DEFAULT_VARIANT = "srt_r4_cs_of_fr"
 _IB = 3  # residual integer bits incl sign: covers |r*w| < 4 for every variant
 
 
-def _widths(fmt: PositFormat, cfg: DividerConfig):
+def datapath_widths(fmt: PositFormat, cfg: DividerConfig):
+    """Emulate-datapath widths (Section III-E1 sizing), exported for the
+    static prover (:mod:`repro.analysis.datapath`).
+
+    Returns ``(FRAC, frac_w, W, FP, WQ)``: operand fraction bits, residual
+    fraction bits, total residual width (``frac_w + _IB``), quotient
+    fraction bits, and quotient register width (``FP + 2``).
+    """
     FRAC = fmt.F + 1
     if cfg.scaling:
         frac_w = FRAC + 3 + cfg.p_shift  # scaled operands carry 3 extra bits
@@ -126,6 +133,28 @@ def _widths(fmt: PositFormat, cfg: DividerConfig):
     FP = cfg.iterations(fmt) * cfg.log2r - cfg.p_shift  # frac bits of quotient
     WQ = FP + 2
     return FRAC, frac_w, W, FP, WQ
+
+
+_widths = datapath_widths
+
+
+def selection_bits(cfg: DividerConfig) -> Optional[int]:
+    """Estimate width ``tb`` (int + fraction bits) the digit selection of
+    ``cfg`` reads, or ``None`` for the sign-only nonrestoring select.
+
+    This is the same dispatch the recurrence body uses; exported so the
+    prover checks the constants against the estimate precision actually
+    implemented rather than a re-derivation.
+    """
+    if cfg.nonrestoring:
+        return None
+    if not cfg.redundant_residual:
+        return _IB + 1
+    if cfg.radix == 2:
+        return _IB + 1          # 3 int + 1 frac (paper Section III-D2)
+    if cfg.scaling:
+        return _IB + seltables.SCALED_G_FRAC  # 6 bits (Eq 29)
+    return _IB + seltables.G_FRAC             # 7 bits (Eq 28)
 
 
 # ---------------------------------------------------------------------------
@@ -140,12 +169,14 @@ def _sel_nrd(west):
 
 def _sel_srt_r2_exact(yh):
     """Eq 26 — non-redundant residual; yh = floor(2w) in units of 1/2."""
-    return jnp.where(yh >= 1, _I32(1), jnp.where(yh >= -1, _I32(0), _I32(-1)))
+    return jnp.where(yh >= seltables.R2_EXACT_M1, _I32(1),
+                     jnp.where(yh >= seltables.R2_EXACT_M0, _I32(0), _I32(-1)))
 
 
 def _sel_srt_r2_cs(yh):
     """Eq 27 — carry-save estimate, units of 1/2 (4-bit estimate)."""
-    return jnp.where(yh >= 0, _I32(1), jnp.where(yh == -1, _I32(0), _I32(-1)))
+    return jnp.where(yh >= seltables.R2_CS_M1, _I32(1),
+                     jnp.where(yh == seltables.R2_CS_M0, _I32(0), _I32(-1)))
 
 
 def _sel_srt_r4_cs(yh, didx):
@@ -278,16 +309,7 @@ def _fraction_divide(fmt: PositFormat, cfg: DividerConfig, xsig, dsig,
     zero = bv_zeros(W, bv_to_u32(w0))
 
     # --- digit selection dispatcher --------------------------------------
-    if cfg.nonrestoring:
-        tb = None
-    elif not cfg.redundant_residual:
-        tb = _IB + 1
-    elif r == 2:
-        tb = _IB + 1          # 3 int + 1 frac (paper Section III-D2)
-    elif cfg.scaling:
-        tb = _IB + seltables.SCALED_G_FRAC  # 6 bits (Eq 29)
-    else:
-        tb = _IB + seltables.G_FRAC         # 7 bits (Eq 28)
+    tb = selection_bits(cfg)
 
     def select_digit(rws, rwc):
         if cfg.nonrestoring:

@@ -8,7 +8,6 @@ meaningful.  Handles any n (Posit8..Posit64) with es parametric (default 2).
 
 from __future__ import annotations
 
-from typing import Tuple
 
 
 def fields(n: int, es: int = 2):

@@ -29,7 +29,6 @@ from .bitvec import (
     bv_shl_dyn,
     bv_shr_dyn,
     bv_sign,
-    bv_sub,
     bv_to_u32,
     bv_zeros,
     bv_from_u32,

@@ -81,6 +81,22 @@ SCALED_M1 = 4     # 1/2
 SCALED_M0 = -4    # -1/2
 SCALED_MM1 = -13  # -13/8
 
+# Scaled-divisor range (Table I): z = M*d lands in [63/64, 9/8] for every
+# base interval; Eq 29's divisor-independent thresholds must contain the
+# recurrence over this whole range.  The prover (repro.analysis.datapath)
+# verifies both halves exactly.
+SCALED_Z_LO = Fr(63, 64)
+SCALED_Z_HI = Fr(9, 8)
+
+# Radix-2 selection constants, units of 2^-1 (the estimate keeps one
+# fraction bit; tb = 4 = 3 integer + 1 fraction bits).
+#   Eq 26 (non-redundant residual):  q = 1 iff yh >= 1;  0 iff yh >= -1
+R2_EXACT_M1 = 1
+R2_EXACT_M0 = -1
+#   Eq 27 (carry-save estimate):     q = 1 iff yh >= 0;  0 iff yh == -1
+R2_CS_M1 = 0
+R2_CS_M0 = -1
+
 
 # Operand scaling factors, Table I: index = 3 fraction bits of d (0.1xxx).
 # M*d = d + (d >> s1) + (d >> s2);  s = None means no term.
@@ -96,33 +112,23 @@ SCALING_SHIFTS = (
 )
 
 
-def verify_radix4_table_exhaustive(steps: int = 64) -> None:
-    """Cross-check containment on a dense grid (used by tests)."""
-    ulp = Fr(1, 1 << G_FRAC)
-    for i, row in enumerate(RADIX4_TABLE):
-        dlo = Fr(8 + i, 16)
-        dhi = Fr(9 + i, 16)
-        for sd in range(steps + 1):
-            d = dlo + (dhi - dlo) * Fr(sd, steps)
-            if d >= dhi:
-                continue
-            # every reachable estimate must select a digit keeping |w'|<=rho*d
-            y_min = -4 * RHO * d
-            y_max = 4 * RHO * d
-            yh = Fr((y_min / ulp).numerator // (y_min / ulp).denominator, 1) * ulp
-            while yh <= y_max:
-                if yh >= row[2] * ulp:
-                    k = 2
-                elif yh >= row[1] * ulp:
-                    k = 1
-                elif yh >= row[0] * ulp:
-                    k = 0
-                elif yh >= row[-1] * ulp:
-                    k = -1
-                else:
-                    k = -2
-                # true y ranges over [yh, yh + 2*ulp) intersect [y_min, y_max]
-                for y in (max(yh, y_min), min(yh + 2 * ulp - Fr(1, 1 << 20), y_max)):
-                    w_next = y - k * d
-                    assert abs(w_next) <= RHO * d, (i, float(d), float(yh), k, float(w_next))
-                yh += ulp
+def verify_radix4_table_exhaustive(steps: int | None = None) -> None:
+    """Prove P-D containment for the frozen radix-4 table, exactly.
+
+    Historical name: this used to sample a ``steps``-point float grid per
+    divisor interval; it now delegates to the static prover's exact
+    interval-endpoint check (:func:`repro.analysis.datapath.
+    check_selection_containment`), so the legacy entry point and
+    ``python -m repro.analysis`` verify the SAME condition with the same
+    rational arithmetic.  ``steps`` is accepted for backwards
+    compatibility and ignored.  Raises on any violated constraint.
+    """
+    del steps
+    from repro.analysis.datapath import (
+        check_selection_containment,
+        selection_spec_for,
+    )
+
+    res = check_selection_containment(selection_spec_for("srt_r4_cs_of_fr"))
+    if not res.ok:
+        raise AssertionError(res.detail)

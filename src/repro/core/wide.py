@@ -12,7 +12,6 @@ the n<=32 path.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

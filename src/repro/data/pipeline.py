@@ -12,7 +12,7 @@ the synthetic source is the default for tests/benchmarks.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import numpy as np

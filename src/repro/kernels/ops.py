@@ -51,7 +51,6 @@ instead of ``0 / 0 -> NaR/NaN`` and the fused paths stay clean under
 
 from __future__ import annotations
 
-import functools
 
 import jax.numpy as jnp
 import numpy as np

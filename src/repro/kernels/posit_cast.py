@@ -14,6 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.posit import PositFormat, float_to_posit, posit_to_float
 from .posit_div import resolve_interpret
@@ -29,9 +30,10 @@ def _dequant_kernel(p_ref, o_ref, *, fmt: PositFormat):
     o_ref[...] = posit_to_float(fmt, p_ref[...])
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+@functools.partial(jax.jit, static_argnums=(0, 2, 3, 4))
 def posit_quantize_pallas(fmt: PositFormat, x, block=(64, 256),
-                          interpret: Optional[bool] = None):
+                          interpret: Optional[bool] = None,
+                          vmem_limit_bytes: int = 64 * 1024 * 1024):
     assert x.ndim == 2
     interpret = resolve_interpret(interpret)
     bm, bn = block
@@ -44,13 +46,16 @@ def posit_quantize_pallas(fmt: PositFormat, x, block=(64, 256),
         grid=(m // bm, n // bn),
         in_specs=[spec],
         out_specs=spec,
+        compiler_params=pltpu.TPUCompilerParams(
+            vmem_limit_bytes=vmem_limit_bytes),
         interpret=interpret,
     )(x.astype(jnp.float32))
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+@functools.partial(jax.jit, static_argnums=(0, 2, 3, 4))
 def posit_dequantize_pallas(fmt: PositFormat, p, block=(64, 256),
-                            interpret: Optional[bool] = None):
+                            interpret: Optional[bool] = None,
+                            vmem_limit_bytes: int = 64 * 1024 * 1024):
     assert p.ndim == 2
     interpret = resolve_interpret(interpret)
     bm, bn = block
@@ -63,5 +68,7 @@ def posit_dequantize_pallas(fmt: PositFormat, p, block=(64, 256),
         grid=(m // bm, n // bn),
         in_specs=[spec],
         out_specs=spec,
+        compiler_params=pltpu.TPUCompilerParams(
+            vmem_limit_bytes=vmem_limit_bytes),
         interpret=interpret,
     )(p.astype(_U32))

@@ -71,6 +71,13 @@ _IB = 3         # residual integer bits (incl. sign) at the top of the frame
 _WPOINT = 29    # fraction bits held by the TOP residual word (32 - _IB)
 _MAX_WORDS = 2  # widest residual frame: two words, 61 fraction bits
 
+# Exported for the static prover (repro.analysis.datapath): the W-word
+# residual frame holds values in [-2^(_IB-1), 2^(_IB-1)) with 32*W - _IB
+# fraction bits; the prover shows every reachable residual/divisor multiple
+# stays strictly inside that window for every accepted plan.
+RESIDUAL_INT_BITS = _IB
+MAX_RESIDUAL_WORDS = _MAX_WORDS
+
 # Table IV rows with an in-register W-word Pallas datapath (all of them).
 KERNEL_VARIANTS = tuple(_TABLE4)
 DEFAULT_KERNEL_VARIANT = "srt_r4_cs_of_fr"
@@ -154,6 +161,25 @@ def kernel_datapath_plan(fmt: PositFormat, variant: str) -> Optional[DatapathPla
 def kernel_variant_supported(fmt: PositFormat, variant: str) -> bool:
     """Can (fmt, variant) run on the in-register W-word datapath?"""
     return kernel_datapath_plan(fmt, variant) is not None
+
+
+def planned_pairs(formats=None):
+    """Every ``(fmt, variant, plan)`` the kernel datapath accepts.
+
+    ``formats`` defaults to the full registered set (posit8/16/32/64).
+    This is the iteration surface of the static prover: each yielded plan
+    must be PROVEN (containment, residual width, scaling range, OTF width)
+    by ``python -m repro.analysis``.
+    """
+    if formats is None:
+        from repro.numerics.formats import NUMERIC_FORMATS
+
+        formats = tuple(NUMERIC_FORMATS.values())
+    for fmt in formats:
+        for variant in KERNEL_VARIANTS:
+            plan = kernel_datapath_plan(fmt, variant)
+            if plan is not None:
+                yield fmt, variant, plan
 
 
 def kernel_plan_error(fmt: PositFormat, variant: str) -> Optional[str]:
@@ -324,14 +350,15 @@ def _sel_r4(est, didx):
 
 def _sel_r2(est):
     """Radix-2 CS selection (Eq 27): est in units of 1/2 (4-bit estimate)."""
-    return jnp.where(est >= 0, _I32(1),
-                     jnp.where(est == -1, _I32(0), _I32(-1)))
+    return jnp.where(est >= seltables.R2_CS_M1, _I32(1),
+                     jnp.where(est == seltables.R2_CS_M0, _I32(0), _I32(-1)))
 
 
 def _sel_r2_exact(est):
     """Radix-2 non-redundant selection (Eq 26): est = floor(2w) in halves."""
-    return jnp.where(est >= 1, _I32(1),
-                     jnp.where(est >= -1, _I32(0), _I32(-1)))
+    return jnp.where(est >= seltables.R2_EXACT_M1, _I32(1),
+                     jnp.where(est >= seltables.R2_EXACT_M0, _I32(0),
+                               _I32(-1)))
 
 
 def _sel_r4_scaled(est):

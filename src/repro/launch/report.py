@@ -5,7 +5,7 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, List
+from typing import List
 
 ARCH_ORDER = ["granite-8b", "yi-34b", "smollm-360m", "llama3-405b",
               "llama4-scout-17b-a16e", "olmoe-1b-7b", "seamless-m4t-medium",

@@ -12,7 +12,6 @@ import argparse
 import logging
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.data import DataConfig, SyntheticLMDataset

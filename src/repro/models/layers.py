@@ -11,7 +11,6 @@ either BitVec-emulated or as one fused Pallas kernel
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -42,8 +42,7 @@ Public entry points:
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -578,7 +577,6 @@ def decode_step(params: Params, cfg: ModelConfig, cache, token, pos,
 
     elif cfg.family == "hybrid":
         new_list = []
-        W = cfg.local_window
         for i, p in enumerate(params["blocks_list"]):
             c = cache["layers_list"][i]
             a = L.rmsnorm(x, p["ln1"], cfg)

@@ -197,6 +197,14 @@ def posit_rmsnorm_div(x, rms, cfg: NumericsConfig):
 
 
 def posit_router_norm(weights, cfg: NumericsConfig, axis: int = -1):
-    """Normalize MoE router weights to sum to 1 with posit division."""
-    s = jnp.sum(weights, axis=axis, keepdims=True)
+    """Normalize MoE router weights to sum to 1 with posit division.
+
+    The denominator is a FIXED-ORDER row sum (see core.quire): it feeds
+    the posit divider, and the jaxpr linter (repro.analysis) forbids
+    compiler-ordered ``reduce_sum`` on any posit-divide denominator so
+    router normalization stays batch-composition invariant like softmax.
+    """
+    from repro.core.quire import fixed_order_rowsum
+
+    s = fixed_order_rowsum(weights, axis=axis)
     return posit_div_values(weights, s, cfg)

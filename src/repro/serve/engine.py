@@ -186,6 +186,26 @@ which the snapshot carries.  Deadline clocks are rebased on restore
 restores the legacy raising behavior for tests and batch drivers that
 prefer exceptions: invalid requests, queue overflow, and unsatisfiable
 paged admissions raise ``ValueError`` instead of shedding.
+
+Static guarantees (proved, not sampled)
+=======================================
+``python -m repro.analysis`` (the CI ``static-analysis`` job) proves the
+properties this engine's correctness rests on, before anything runs:
+
+  * every divider datapath plan the numerics stack can select is PROVEN
+    with exact rational arithmetic — selection containment (Eqs 26-29),
+    residual-frame width, Table I scaling range, iteration/OTF register
+    sufficiency (Eqs 18-19, 30-31) — so a config that validates cannot
+    silently select an overflowing or under-iterated divider;
+  * the jitted hot path (``_decode``/``_prefill``) carries no f64 avals
+    and no host callbacks — nothing in the step can sync the device
+    beyond the packed (B, 2) token/health transfer;
+  * every posit-divide denominator reduces in fixed order (no
+    compiler-ordered ``reduce_sum``), which is what makes the
+    batch-composition invariance above hold bit-exactly;
+  * serving a heterogeneous stream compiles exactly ONE decode
+    executable per (family, backend) — the no-retrace contract of the
+    slot design is probed by actually serving the admission-trap stream.
 """
 
 from __future__ import annotations

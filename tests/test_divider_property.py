@@ -1,7 +1,6 @@
 """Property-based tests (hypothesis) on posit-division invariants."""
 
 import jax.numpy as jnp
-import numpy as np
 from _hypothesis_compat import given, settings, st
 
 from repro.core import divider, goldens

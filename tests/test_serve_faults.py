@@ -195,7 +195,7 @@ def test_paged_fault_eviction_leaks_no_blocks():
     # sharing, so the quarantine-on-fault unregistration is exercised
     victim_p = (np.arange(1, 10) % 40 + 1).astype(np.int32)
     rid0 = eng.submit(Request(victim_p, max_new=6))      # victim
-    rid1 = eng.submit(Request(_P2, max_new=6))
+    eng.submit(Request(_P2, max_new=6))
     state = {"n": 0}
 
     def inject(ev):
