@@ -715,6 +715,87 @@ def paged_kv_rows():
     return rows
 
 
+def packed_prefill_rows():
+    """Packed multi-prompt prefill vs per-request admission on the PR5
+    traffic shape, both kv layouts, plus the bit-identity CI gate.
+
+    The same heavy-tailed stream (ragged prompts, mixed budgets) is served
+    by a per-request engine and by a packed engine that concatenates
+    queue-head prompts into ONE segment-masked prefill served from
+    ``warmup()``-pre-lowered bucket executables.  Reported per layout:
+    slot utilization (active slots per decode step — the scheduler's
+    measured counter), admission latency (TTFT) p50/p99, pack shape
+    counters, and whether the post-warmup serve added any executable
+    (``zero_retrace``).  The gate row compares every packed output
+    bit-for-bit against per-request admission AND the solo run; run.py
+    exits nonzero on ``match``+``False``.
+    """
+    import time as _time
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serve import Request, ServeConfig, ServeEngine
+
+    cfg = get_config("smollm-360m", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    slots = 4
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(1, cfg.vocab,
+                                 size=int(rng.integers(3, 24))).astype(np.int32),
+                    max_new=int(rng.choice([4, 6, 8, 48])))
+            for _ in range(3 * slots)]
+
+    rows = []
+    ok = True
+    for layout in ("dense", "paged"):
+        solo = ServeEngine(cfg, params, ServeConfig(
+            max_batch=slots, max_seq=96, kv_layout=layout))
+        pack = ServeEngine(cfg, params, ServeConfig(
+            max_batch=slots, max_seq=96, kv_layout=layout,
+            packed_prefill=True))
+        census = pack.warmup()
+        solo.serve(reqs)                     # warm the per-request caches
+        t0 = _time.perf_counter()
+        souts = solo.serve(reqs)
+        solo_s = _time.perf_counter() - t0
+        sst = solo.last_serve_stats
+        t0 = _time.perf_counter()
+        pouts = pack.serve(reqs)
+        pack_s = _time.perf_counter() - t0
+        pst = pack.last_serve_stats
+        zero_retrace = pack.executable_counts() == census
+
+        tokens = sum(len(o) for o in pouts)
+        for tag, st, outs, secs in (("per_request", sst, souts, solo_s),
+                                    ("packed", pst, pouts, pack_s)):
+            ttft = np.asarray(st["ttft_ms"], np.float64)
+            extra = ""
+            if tag == "packed":
+                extra = (f" packs={st['packed_packs']}"
+                         f" segments={st['packed_segments']}"
+                         f" dummies={st['packed_dummies']}"
+                         f" zero_retrace={zero_retrace}"
+                         f" speedup={solo_s / secs:.2f}x")
+            rows.append((
+                f"packed_prefill/{layout}/{tag}", secs * 1e6,
+                f"{tokens / secs:.1f} tok/s requests={len(reqs)} "
+                f"slots={slots} "
+                f"slot_util={st['active_slot_steps'] / st['slot_steps']:.0%} "
+                f"ttft_p50={np.percentile(ttft, 50):.1f}ms "
+                f"ttft_p99={np.percentile(ttft, 99):.1f}ms" + extra))
+
+        ok &= zero_retrace
+        for r, s, p in zip(reqs, souts, pouts):
+            solo_one = solo.generate([r.tokens], max_new=r.max_new)[0]
+            ok &= bool((s == p).all()) and bool((solo_one == p).all())
+
+    rows.append(("packed_prefill/bit_identity", float("nan"),
+                 f"invariance_match={ok} (packed vs per-request vs solo, "
+                 f"{len(reqs)} requests x dense+paged layouts bit-identical"
+                 " AND zero post-warmup retrace)"))
+    return rows
+
+
 def serve_slo_rows():
     """Serving SLOs under faults: TTFT / per-token latency percentiles and
     throughput for a clean stream vs the same stream with ~10% of requests

@@ -10,8 +10,8 @@ Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--only SUBSTR[,SUBSTR]]
 ``--json`` additionally writes every emitted row to a machine-readable JSON
 file (section, name, us_per_call, derived) — CI uploads the
 ``BENCH_PR2.json`` / ``BENCH_PR3.json`` / ``BENCH_PR4.json`` /
-``BENCH_PR5.json`` / ``BENCH_PR6.json`` / ``BENCH_PR7.json`` workflow
-artifacts from it.  ``--only`` filters sections by
+``BENCH_PR5.json`` / ``BENCH_PR6.json`` / ``BENCH_PR7.json`` /
+``BENCH_PR9.json`` workflow artifacts from it.  ``--only`` filters sections by
 case-insensitive title substring (comma-separated alternatives) and
 overrides ``--quick``'s timed-section skip for the sections it selects.
 """
@@ -57,6 +57,8 @@ def main() -> None:
          B.decode_throughput_rows, True),
         ("Paged KV (dense vs paged cache, prefix sharing)",
          B.paged_kv_rows, True),
+        ("Packed prefill (bucketed AOT admission vs per-request)",
+         B.packed_prefill_rows, True),
         ("Serve SLO (TTFT/latency percentiles, fault isolation)",
          B.serve_slo_rows, True),
         ("Train step under the fused backend", B.train_step_fused_rows, True),

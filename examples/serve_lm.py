@@ -37,6 +37,13 @@ def main():
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per KV block (paged; power of two in "
                          "[8, 128])")
+    ap.add_argument("--packed-prefill", action="store_true",
+                    help="admit queued prompts as one packed segment-masked "
+                         "prefill per bucket (bit-identical A/B of the "
+                         "per-request admission path)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile the admission bucket executables "
+                         "before serving (steady state never retraces)")
     args = ap.parse_args()
 
     cfg = get_config("smollm-360m", smoke=True, max_batch=4, max_seq=160)
@@ -45,7 +52,13 @@ def main():
     for kv_fmt in (None, "posit16"):
         c = cfg.with_numerics(kv_cache_format=kv_fmt) if kv_fmt else cfg
         eng = ServeEngine(c, params, ServeConfig.from_model(
-            c, kv_layout=args.kv_layout, block_size=args.block_size))
+            c, kv_layout=args.kv_layout, block_size=args.block_size,
+            packed_prefill=args.packed_prefill))
+        if args.warmup:
+            t0 = time.perf_counter()
+            census = eng.warmup()
+            print(f"warmup: {sum(census.values())} executables in "
+                  f"{time.perf_counter() - t0:.2f}s")
         rng = np.random.default_rng(0)
         # a stream twice as long as the slot count: short requests finish,
         # free their slot, and the queue admits the next one mid-flight.
@@ -68,6 +81,10 @@ def main():
               f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s, "
               f"slots=4, kv_layout={args.kv_layout})")
         st = eng.last_serve_stats
+        if st.get("packed_prefill"):
+            print(f"  packed: packs={st['packed_packs']} "
+                  f"segments={st['packed_segments']} "
+                  f"dummies={st['packed_dummies']}")
         if st.get("kv_layout") == "paged":
             print(f"  paged: peak_blocks="
                   f"{st['peak_blocks_in_use']}/{st['pool_blocks']} "

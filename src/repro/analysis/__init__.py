@@ -71,9 +71,11 @@ from .jaxpr_lint import (
 from .rules import (
     DEFAULT_RULES,
     EXECUTABLE_PROBES,
+    PACKED_WARMUP_PROBES,
     build_traced_entries,
     lint_kernel_sources,
     run_executable_probes,
+    run_packed_warmup_probes,
 )
 
 __all__ = [
@@ -97,7 +99,9 @@ __all__ = [
     "trace_entry",
     "DEFAULT_RULES",
     "EXECUTABLE_PROBES",
+    "PACKED_WARMUP_PROBES",
     "build_traced_entries",
     "lint_kernel_sources",
     "run_executable_probes",
+    "run_packed_warmup_probes",
 ]

@@ -24,9 +24,10 @@ def main(argv=None) -> int:
                          "entries for (default: smollm-360m)")
     ap.add_argument("--probes", choices=("full", "fast", "none"),
                     default="full",
-                    help="executable one-decode-executable probes: full = "
-                         "every family x backend, fast = dense/emulate "
-                         "only, none = skip (default: full)")
+                    help="executable probes (one-decode-executable + "
+                         "packed-warmup-steady-state): full = every family "
+                         "x backend / both kv layouts, fast = dense/emulate "
+                         "and dense-kv only, none = skip (default: full)")
     args = ap.parse_args(argv)
 
     from repro.analysis import (
@@ -35,6 +36,7 @@ def main(argv=None) -> int:
         lint_kernel_sources,
         prove_all,
         run_executable_probes,
+        run_packed_warmup_probes,
         run_rules,
     )
 
@@ -64,6 +66,11 @@ def main(argv=None) -> int:
         probe_violations = run_executable_probes(fast=args.probes == "fast")
         print(f"[probe] one-decode-executable: "
               f"{len(probe_violations)} violations")
+        warmup_violations = run_packed_warmup_probes(
+            fast=args.probes == "fast")
+        print(f"[probe] packed-warmup-steady-state: "
+              f"{len(warmup_violations)} violations")
+        probe_violations = probe_violations + warmup_violations
 
     all_lint = violations + ast_violations + probe_violations
     ok = datapath["violations"] == 0 and not all_lint
@@ -74,7 +81,8 @@ def main(argv=None) -> int:
         "lint": {
             "entries": [e.name for e in entries],
             "rules": [r.name for r in DEFAULT_RULES]
-            + ["pallas-call-discipline", "one-decode-executable"],
+            + ["pallas-call-discipline", "one-decode-executable",
+               "packed-warmup-steady-state"],
             "violations": [v.as_json() for v in all_lint],
         },
     }

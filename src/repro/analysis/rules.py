@@ -25,6 +25,11 @@ stack (see :mod:`repro.analysis.jaxpr_lint` for the framework):
     heterogeneous 3-request stream compiles EXACTLY ONE decode executable
     per (family, numerics backend); a retrace means per-slot positions
     leaked into the jit signature.
+  * ``packed-warmup-steady-state`` — executable probe: with packed prefill
+    enabled, ``ServeEngine.warmup()`` followed by a mixed-length serve
+    session must add ZERO new executables across the engine's entire jit
+    census (``executable_counts()`` delta == {}): all steady-state pack
+    shapes were pre-lowered by warmup, so admission never traces.
 """
 
 from __future__ import annotations
@@ -56,6 +61,8 @@ __all__ = [
     "build_traced_entries",
     "run_executable_probes",
     "EXECUTABLE_PROBES",
+    "run_packed_warmup_probes",
+    "PACKED_WARMUP_PROBES",
 ]
 
 
@@ -406,4 +413,53 @@ def run_executable_probes(
                 "executables (expected exactly 1): per-slot positions or "
                 "shapes leaked into the jit signature and every admission "
                 "will retrace"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# executable probes: packed warmup covers every steady-state pack shape
+# ---------------------------------------------------------------------------
+
+# (probe name, kv_layout) — both cache layouts route packed admission
+# through different executables (segment-scatter vs pool-scatter), so both
+# must be warmed independently.
+PACKED_WARMUP_PROBES: Tuple[Tuple[str, str], ...] = (
+    ("packed/dense-kv", "dense"),
+    ("packed/paged-kv", "paged"),
+)
+
+
+def run_packed_warmup_probes(
+        probes: Optional[Iterable[Tuple[str, str]]] = None,
+        fast: bool = False) -> List[Violation]:
+    """With ``packed_prefill=True``, ``warmup()`` must pre-lower every
+    executable a steady-state mixed-length serve session can hit: the
+    ``executable_counts()`` census taken right after warmup must be
+    UNCHANGED after serving the heterogeneous stream.  ``fast`` keeps only
+    the dense-layout probe."""
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serve import Request, ServeConfig, ServeEngine
+
+    probes = tuple(PACKED_WARMUP_PROBES if probes is None else probes)
+    if fast:
+        probes = probes[:1]
+    out: List[Violation] = []
+    for name, layout in probes:
+        cfg = get_config("smollm-360m", smoke=True)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServeEngine(cfg, params, ServeConfig(
+            max_batch=2, max_seq=64, kv_layout=layout, packed_prefill=True))
+        before = eng.warmup()
+        eng.serve([Request(p, max_new=m) for p, m in _STREAM])
+        after = eng.executable_counts()
+        if before != after:
+            grew = {k: (before.get(k, 0), after[k])
+                    for k in after if after[k] != before.get(k, 0)}
+            out.append(Violation(
+                "packed-warmup-steady-state", name,
+                "serving the heterogeneous stream after warmup() compiled "
+                f"new executables: {grew} — a steady-state pack shape "
+                "escaped the warmup bucket enumeration and admission will "
+                "retrace in production"))
     return out

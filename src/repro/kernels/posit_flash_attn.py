@@ -19,6 +19,17 @@ in memory.  Three optional per-sequence (B,) int32 inputs make the kernel
 serve slot-based continuous batching, where every batch row can sit at a
 different sequence offset inside ONE compiled kernel:
 
+Packed multi-prompt prefill additionally rides two optional PER-POSITION
+int32 inputs, ``seg_q`` (B, Sq) and ``seg_kv`` (B, Sk): when given, score
+entries whose query and key segment ids differ are masked (exact zeros in
+the online-softmax recurrence), which makes causal attention over a
+concatenation of N prompts block-diagonal — one kernel launch prefills N
+admission prompts at once.  Pad positions carry segment id -1 in BOTH
+arrays, so the segment mask subsumes the per-segment pad masking
+``kv_start`` provides in the solo layout.  This is a masking change
+riding the existing per-sequence scalar plumbing, not a new kernel: the
+(m, l, acc) recurrence, tile geometry, and SRT normalizer are untouched.
+
   * ``kv_start`` masks a per-sequence pad PREFIX (``k_pos < kv_start[b]``
     is masked) — the engine's chunked ragged prefill uses this so
     left-padded short prompts never attend pad positions.
@@ -100,7 +111,8 @@ def _flash_kernel(*refs,
                   q_offset: int, scale: float, bq: int, bk: int, nk: int,
                   sk_valid: int, save_res: bool, pages: int = 0,
                   n_heads: int = 0, kv_heads: int = 0, group: int = 1,
-                  num_blocks: int = 0, bt_cols: int = 0):
+                  num_blocks: int = 0, bt_cols: int = 0,
+                  has_seg: bool = False):
     if pages:
         # paged mode: k/v refs are the WHOLE block pools in kernel layout
         # (num_blocks * KV, block_size, hdp) plus this sequence's block
@@ -108,12 +120,17 @@ def _flash_kernel(*refs,
         q_ref, k_ref, v_ref, bt_ref, ks_ref, kl_ref, qp_ref, *out_refs = refs
     else:
         q_ref, k_ref, v_ref, ks_ref, kl_ref, qp_ref, *out_refs = refs
+    if has_seg:
+        # packed prefill: per-position segment ids ride as the last two
+        # inputs (lane-broadcast q rows, sublane-broadcast kv row)
+        sq_ref, skv_ref, out_refs = out_refs[0], out_refs[1], out_refs[2:]
     q = q_ref[0]                                    # (bq, hdp) f32
     kv_start = ks_ref[0, 0]                         # scalar int32 (pad prefix)
     kv_len = jnp.minimum(kl_ref[0, 0], sk_valid)    # per-sequence valid rows
     iq = pl.program_id(1)
     q_pos = qp_ref[0, 0] + q_offset + iq * bq + jax.lax.broadcasted_iota(
         jnp.int32, (bq, 1), 0)
+    seg_q = sq_ref[0][:, :1] if has_seg else None   # (bq, 1) int32
 
     m0 = jnp.full((bq, 1), _NEG_INF, dtype=jnp.float32)
     l0 = jnp.zeros((bq, 1), dtype=jnp.float32)
@@ -156,6 +173,11 @@ def _flash_kernel(*refs,
             mask &= q_pos >= k_pos
         if window:
             mask &= q_pos - k_pos < window
+        if has_seg:
+            # block-diagonal packed-prefill mask: a query may only attend
+            # keys of its own segment (pads carry id -1 in both arrays)
+            skv_j = skv_ref[0, :1, pl.ds(j * bk, bk)]   # (1, bk) int32
+            mask &= seg_q == skv_j
         s = jnp.where(mask, s, _NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
@@ -211,7 +233,8 @@ def _pool_kernel_layout(p, hdp):
 
 def _flash_call(fmt, q, k, v, causal, window, q_offset, scale, variant,
                 interpret, block_q, block_k, vmem_limit_bytes, save_res,
-                kv_start, kv_len=None, q_pos=None, block_tables=None):
+                kv_start, kv_len=None, q_pos=None, block_tables=None,
+                seg_q=None, seg_kv=None):
     if interpret is None:
         interpret = not _on_tpu()
     B, Sq, H, hd = q.shape
@@ -259,10 +282,32 @@ def _flash_call(fmt, q, k, v, causal, window, q_offset, scale, variant,
     klf = _per_seq(kv_len, Sk)
     qpf = _per_seq(q_pos, 0)
 
+    has_seg = seg_q is not None
+    seg_inputs, seg_specs = (), []
+    if has_seg:
+        # Per-position segment ids for packed prefill.  Laid out tileable:
+        # q segments lane-broadcast to (B, Sqp, _RES_LANES) and read back
+        # as a (bq, 1) column; kv segments sublane-broadcast to
+        # (B, 8, Skp) so each kv tile slices a (1, bk) row.  Layout pad
+        # positions get id -1 (they are already masked by kv_len/causal).
+        assert seg_kv is not None and seg_q.shape == (B, Sq), seg_q.shape
+        sqp = jnp.pad(seg_q.astype(jnp.int32), ((0, 0), (0, Sqp - Sq)),
+                      constant_values=-1)
+        skp = jnp.pad(seg_kv.astype(jnp.int32), ((0, 0), (0, Skp - Sk)),
+                      constant_values=-1)
+        seg_inputs = (
+            jnp.broadcast_to(sqp[:, :, None], (B, Sqp, _RES_LANES)),
+            jnp.broadcast_to(skp[:, None, :], (B, 8, Skp)),
+        )
+        seg_specs = [
+            pl.BlockSpec((1, bq, _RES_LANES), lambda b, i: (b // H, i, 0)),
+            pl.BlockSpec((1, 8, Skp), lambda b, i: (b // H, 0, 0)),
+        ]
+
     kernel = functools.partial(
         _flash_kernel, fmt=fmt, variant=variant, causal=causal,
         window=window, q_offset=q_offset, scale=scale, bq=bq, bk=bk,
-        nk=nk, sk_valid=Sk, save_res=save_res, **paged_kw)
+        nk=nk, sk_valid=Sk, save_res=save_res, has_seg=has_seg, **paged_kw)
     out_shape = [jax.ShapeDtypeStruct((B * H, Sqp, hdp), jnp.float32)]
     out_specs = [pl.BlockSpec((1, bq, hdp), lambda b, i: (b, i, 0))]
     if save_res:
@@ -274,13 +319,13 @@ def _flash_call(fmt, q, k, v, causal, window, q_offset, scale, variant,
         # the pools ride along whole (constant index map) — pages are
         # gathered in-kernel from the per-sequence block-table row
         kv_specs = [pl.BlockSpec(kf.shape, lambda b, i: (0, 0, 0))] * 2
-        inputs = (qf, kf, vf, btf, ksf, klf, qpf)
+        inputs = (qf, kf, vf, btf, ksf, klf, qpf) + seg_inputs
         extra = [pl.BlockSpec((1, block_tables.shape[1]),
                               lambda b, i: (b // H, 0))]
     else:
         kv_specs = 2 * [pl.BlockSpec(
             (1, Skp, hdp), lambda b, i: (b // H * KV + (b % H) // G, 0, 0))]
-        inputs = (qf, kf, vf, ksf, klf, qpf)
+        inputs = (qf, kf, vf, ksf, klf, qpf) + seg_inputs
         extra = []
     outs = pl.pallas_call(
         kernel,
@@ -291,7 +336,7 @@ def _flash_call(fmt, q, k, v, causal, window, q_offset, scale, variant,
             pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
             pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
             pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
-        ],
+        ] + seg_specs,
         out_specs=out_specs,
         compiler_params=pltpu.TPUCompilerParams(
             vmem_limit_bytes=vmem_limit_bytes),
@@ -327,6 +372,8 @@ def posit_flash_attention(
     kv_len=None,
     q_pos=None,
     block_tables=None,
+    seg_q=None,
+    seg_kv=None,
 ):
     """Flash attention with the posit SRT normalizer, one kernel launch.
 
@@ -356,11 +403,20 @@ def posit_flash_attention(
     bit-identical to the dense layout.  Forward/decode only (no saved
     residuals); block_size must be a power of two that divides the kv
     tile (<= ``block_k``).
+
+    ``seg_q``/``seg_kv`` are optional PER-POSITION ``(B, Sq)``/``(B, Sk)``
+    int32 segment-id arrays for packed multi-prompt prefill: when given,
+    the score mask additionally requires ``seg_q[b, i] == seg_kv[b, j]``,
+    making causal attention over a concatenation of prompts
+    block-diagonal.  Pad positions carry id -1 in both arrays.  Masked
+    entries contribute exact zeros to the (m, l, acc) recurrence, so each
+    segment's rows are bit-identical to running that prompt alone with
+    the same tile geometry.
     """
     return _flash_call(fmt, q, k, v, causal, window, q_offset, scale,
                        variant, interpret, block_q, block_k,
                        vmem_limit_bytes, False, kv_start, kv_len, q_pos,
-                       block_tables)
+                       block_tables, seg_q, seg_kv)
 
 
 @functools.partial(jax.jit,

@@ -5,7 +5,12 @@ slot engine (or the static batch path with ``--static``).
 are produced); ``--deadline-ms`` / ``--max-queue`` / ``--max-queue-wait-ms``
 exercise the robustness contract (requests past their budget finish
 ``DEADLINE``, overflow submissions ``SHED``) and the run ends with an SLO
-summary: TTFT / per-token latency percentiles and the finish-reason mix."""
+summary: TTFT / per-token latency percentiles and the finish-reason mix.
+
+``--packed-prefill`` admits queue-head prompts as ONE segment-masked
+packed prefill per ``(bucket, pack-size)`` bin and ``--warmup``
+AOT-compiles every bin's executable up front — together the A/B side of
+per-request admission (outputs are bit-identical either way)."""
 
 from __future__ import annotations
 
@@ -53,6 +58,14 @@ def main():
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per KV block (paged layout; power of two "
                          "in [8, 128])")
+    ap.add_argument("--packed-prefill", action="store_true",
+                    help="admit queued prompts as ONE packed segment-masked "
+                         "prefill per bucket (bit-identical to per-request "
+                         "admission; A/B against the default solo path)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile every admission bucket executable "
+                         "before serving (warmup time is reported "
+                         "separately and excluded from the serve timing)")
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="LEN",
                     help="prepend one shared LEN-token system prompt to "
                          "half the stream (exercises the prefix cache)")
@@ -88,7 +101,13 @@ def main():
                           block_size=args.block_size,
                           max_queue=args.max_queue,
                           max_queue_wait_ms=args.max_queue_wait_ms,
+                          packed_prefill=args.packed_prefill,
                           strict=args.strict))
+    if args.warmup:
+        t0 = time.perf_counter()
+        census = eng.warmup(temperature=args.temperature or None)
+        print(f"# warmup: {sum(census.values())} executables compiled in "
+              f"{time.perf_counter() - t0:.2f}s")
 
     # a mixed-length request stream: more requests than slots, ragged
     # prompts and budgets, so slots are freed and re-admitted mid-flight;
@@ -141,6 +160,10 @@ def main():
               f"p50={_pct(lats, 50):.2f} p99={_pct(lats, 99):.2f}  "
               f"finish={reasons}  faults={st['faults']} "
               f"deadline={st['deadline_evictions']} shed={st['shed']}")
+    if st and st.get("packed_prefill"):
+        print(f"# packed: packs={st['packed_packs']} "
+              f"segments={st['packed_segments']} "
+              f"dummies={st['packed_dummies']}")
     if st and st.get("kv_layout") == "paged":
         print(f"# paged: block_size={st['block_size']} "
               f"peak_blocks={st['peak_blocks_in_use']}/{st['pool_blocks']} "

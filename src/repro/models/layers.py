@@ -112,7 +112,8 @@ def _qkv(params, x, cfg: ModelConfig, positions, rope: bool = True):
 
 
 def flash_attention(q, k, v, cfg: ModelConfig, *, causal: bool,
-                    window: int = 0, q_offset: int = 0, kv_start=None):
+                    window: int = 0, q_offset: int = 0, kv_start=None,
+                    seg_q=None, seg_kv=None, seg_len: int = 0):
     """Chunked online-softmax attention (GQA via head grouping).
 
     q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd).  Scans q-chunks in an outer loop
@@ -132,6 +133,18 @@ def flash_attention(q, k, v, cfg: ModelConfig, *, causal: bool,
     lengths: key positions < kv_start[b] are masked out.  The serving
     engine's chunked ragged prefill uses it so left-padded short prompts
     never attend pad positions (forward-only path).
+
+    ``seg_q``/``seg_kv`` are optional (B, Sq)/(B, Sk) int32 PER-POSITION
+    segment ids for packed multi-prompt prefill (pads carry id -1): score
+    entries whose query and key segments differ are masked, so causal
+    attention over a concatenation of ``seg_len``-wide prompt segments is
+    block-diagonal.  ``seg_len`` (static) is the uniform segment width;
+    the chunk/tile sizes are derived from it — NOT from the packed length
+    — so chunk boundaries align with segment boundaries and every
+    segment's (m, l, acc) accumulation walks bit-identically to running
+    that prompt alone at length ``seg_len`` (out-of-segment chunks
+    contribute exact zeros; the segment-local chunk split, mask pattern
+    and reduction order match the solo call exactly).
     """
     if cfg.attn_backend == "fused":
         from repro.kernels.posit_flash_attn import (
@@ -140,7 +153,20 @@ def flash_attention(q, k, v, cfg: ModelConfig, *, causal: bool,
         )
 
         nm = cfg.numerics
-        if kv_start is not None:
+        if seg_q is not None:
+            # packed multi-prompt prefill: forward-only kernel with the
+            # block-diagonal segment mask.  The tile size is the SOLO
+            # prefill's tile for a seg_len-long prompt (min(128,
+            # round_up(seg_len, 8)) == min(128, seg_len) for the power-of-
+            # two bucket widths the planner emits), so tiles never
+            # straddle segment boundaries and each segment's kv scan is
+            # bit-identical to its solo launch.
+            blk = min(128, seg_len)
+            out = posit_flash_attention(
+                nm.div_fmt, q, k, v, causal, window, q_offset, 0.0,
+                nm.div_algo, None, blk, blk, 128 * 1024 * 1024,
+                kv_start=kv_start, seg_q=seg_q, seg_kv=seg_kv)
+        elif kv_start is not None:
             # ragged serving prefill: forward-only kernel with the pad-
             # prefix mask (the training path never carries kv_start)
             out = posit_flash_attention(
@@ -162,8 +188,15 @@ def flash_attention(q, k, v, cfg: ModelConfig, *, causal: bool,
             c -= 1
         return c
 
-    bq = _chunk(Sq, cfg.attn_q_chunk)
-    bk = _chunk(Sk, cfg.attn_kv_chunk)
+    has_seg = seg_q is not None
+    if has_seg:
+        # chunk at the SOLO granularity: _chunk(seg_len) divides seg_len,
+        # which divides the packed Sq/Sk, so chunks tile the segments
+        bq = _chunk(seg_len, cfg.attn_q_chunk)
+        bk = _chunk(seg_len, cfg.attn_kv_chunk)
+    else:
+        bq = _chunk(Sq, cfg.attn_q_chunk)
+        bk = _chunk(Sk, cfg.attn_kv_chunk)
     nq, nk = Sq // bq, Sk // bk
 
     qr = q.reshape(B, nq, bq, KV, G, hd)
@@ -174,11 +207,17 @@ def flash_attention(q, k, v, cfg: ModelConfig, *, causal: bool,
     k_pos = jnp.arange(Sk).reshape(nk, bk)
 
     def q_step(_, qi):
-        qb, qp = qi  # (B, bq, KV, G, hd), (bq,)
+        if has_seg:
+            qb, qp, sq_b = qi  # (B, bq, KV, G, hd), (bq,), (B, bq)
+        else:
+            (qb, qp), sq_b = qi, None
 
         def kv_step(carry, ki):
             m, l, acc = carry
-            kb, vb, kp = ki
+            if has_seg:
+                kb, vb, kp, skv_b = ki
+            else:
+                (kb, vb, kp), skv_b = ki, None
             s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb)
             if cfg.attn_scores_bf16:
                 # keep the (possibly all-reduced) score tensor in bf16; the
@@ -195,6 +234,11 @@ def flash_attention(q, k, v, cfg: ModelConfig, *, causal: bool,
                 # per-sequence pad prefix: keys before kv_start[b] masked
                 pad = kp[None, :] >= kv_start[:, None]        # (B, bk)
                 s = jnp.where(pad[:, None, None, None], s, -1e30)
+            if has_seg:
+                # block-diagonal packed mask: query attends only its own
+                # segment's keys (pads carry id -1 in both arrays)
+                segm = sq_b[:, :, None] == skv_b[:, None, :]  # (B, bq, bk)
+                s = jnp.where(segm[:, None, None], s, -1e30)
             m_new = jnp.maximum(m, s.max(-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -206,16 +250,21 @@ def flash_attention(q, k, v, cfg: ModelConfig, *, causal: bool,
         m0 = jnp.full((B, KV, G, bq), -1e30, dtype=jnp.float32)
         l0 = jnp.zeros((B, KV, G, bq), dtype=jnp.float32)
         a0 = jnp.zeros((B, KV, G, bq, hd), dtype=jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
-            kv_step, (m0, l0, a0),
-            (kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4), k_pos))
+        kv_xs = (kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4),
+                 k_pos)
+        if has_seg:
+            kv_xs += (seg_kv.reshape(B, nk, bk).transpose(1, 0, 2),)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), kv_xs)
         if cfg.numerics.posit_division:
             out = posit_div_values(acc, l[..., None] + 1e-30, cfg.numerics)
         else:
             out = acc / (l[..., None] + 1e-30)
         return None, out.astype(qb.dtype)  # (B, KV, G, bq, hd)
 
-    _, outs = jax.lax.scan(q_step, None, (qr.transpose(1, 0, 2, 3, 4, 5), q_pos))
+    q_xs = (qr.transpose(1, 0, 2, 3, 4, 5), q_pos)
+    if has_seg:
+        q_xs += (seg_q.reshape(B, nq, bq).transpose(1, 0, 2),)
+    _, outs = jax.lax.scan(q_step, None, q_xs)
     # outs: (nq, B, KV, G, bq, hd) -> (B, Sq, H, hd)
     out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hd)
     return out
@@ -397,7 +446,8 @@ def decode_attention_paged(params, x, pool_k, pool_v, block_tables, pos,
 
 
 def prefill_attention(params, x, cache_k, cache_v, cfg: ModelConfig,
-                      positions, start=None):
+                      positions, start=None, seg_q=None, seg_kv=None,
+                      seg_len=0):
     """Whole-prompt attention that fills cache slots [0, S) in ONE shot.
 
     The chunked-prefill counterpart of :func:`decode_attention`: all S
@@ -409,6 +459,12 @@ def prefill_attention(params, x, cache_k, cache_v, cfg: ModelConfig,
     under ``cfg.attn_backend == "fused"``, so serving prefill exercises the
     same kernel the trainer does.  ``start`` masks per-sequence pad
     prefixes (left-padded ragged batches).
+
+    ``seg_q``/``seg_kv``/``seg_len`` switch on PACKED multi-prompt
+    prefill: (B, S) int32 per-position segment ids (query pads -2, key
+    pads -1) make the single concatenated sequence attend
+    block-diagonally — N prompts prefill in one launch, each
+    bit-identical to its solo prefill of width ``seg_len``.
     """
     dt = x.dtype
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
@@ -427,7 +483,8 @@ def prefill_attention(params, x, cache_k, cache_v, cfg: ModelConfig,
                                       (0, 0, 0, 0))
     cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
                                       (0, 0, 0, 0))
-    o = flash_attention(q, k, v, cfg, causal=True, kv_start=start)
+    o = flash_attention(q, k, v, cfg, causal=True, kv_start=start,
+                        seg_q=seg_q, seg_kv=seg_kv, seg_len=seg_len)
     out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
     return out, ck, cv
 

@@ -27,6 +27,25 @@ Public entry points:
   write_cache_slot(cfg, cache, mini, slot) -> cache
       scatter a freshly prefilled batch=1 cache into one batch slot of a
       persistent serving cache (continuous-batching admission)
+  prefill_packed(params, cfg, tokens, cache, positions, seg_ids,
+                 last_idx, seg_len) -> ((N, 1, V) logits, cache)
+      PACKED admission prefill (dense family): N prompts concatenated
+      into one (1, N * seg_len) sequence attend block-diagonally via
+      per-position segment ids; per-segment last-position logits are
+      gathered at ``last_idx`` — each segment bit-identical to its solo
+      prefill at width seg_len
+  prefill_batch_ragged(params, cfg, tokens, cache, start, last_idx)
+      scanned-family packed admission: right-padded (N, S) rows at start
+      0, each row's logits captured at its OWN ``last_idx[i]`` scan step
+  write_cache_slot_segments(cfg, cache, mini, slots, seg_len) -> cache
+      scatter each seg_len-wide segment of a packed batch=1 mini cache
+      into its batch slot (rows beyond seg_len zero-filled, matching the
+      solo mini's init zeros)
+  write_cache_slots(cfg, cache, mini, slots) -> cache
+      scatter each batch row of an N-row mini cache into its slot
+  scatter_segments_to_pool(cfg, cache, mini, block_ids, seg_len) -> cache
+      per-segment blockwise scatter of a packed mini cache into pool
+      pages (non-owned positions point at the reserved sink block 0)
   init_paged_cache(cfg, num_blocks, block_size) -> paged cache pytree
       per-layer global block pools (num_blocks, block_size, KV, hd) shared
       by all slots; per-slot int32 block tables map logical rows to pages
@@ -455,6 +474,95 @@ def write_cache_slot(cfg: ModelConfig, cache, mini, slot):
         cache, mini)
 
 
+def write_cache_slot_segments(cfg: ModelConfig, cache, mini, slots,
+                              seg_len: int):
+    """Scatter each ``seg_len``-wide SEGMENT of a packed batch=1 ``mini``
+    cache into its batch slot of ``cache`` (packed dense admission).
+
+    ``mini`` leaves are (L, 1, N * seg_len, KV, hd) from
+    :func:`prefill_packed`; segment ``i`` (rows [i*seg_len, (i+1)*seg_len))
+    lands in slot ``slots[i]`` with rows [seg_len, max_seq) ZERO-filled —
+    matching the batch=1 solo mini, whose rows beyond the bucket width are
+    init zeros — so the scattered slot state is byte-equivalent to a solo
+    admission (no stale rows from the slot's previous occupant survive,
+    which matters because an evicted FAULTED request can leave NaN rows
+    that masked lanes would still propagate through 0 * NaN products).
+
+    Writes happen in pack order, later segments win: the engine points
+    DUMMY fill segments (packs are padded to a power-of-two prompt count)
+    at a real segment's slot and orders them FIRST, so the real write
+    overwrites the dummy's.  ``slots`` is a traced (N,) int32 vector.
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"family {cfg.family!r} has no packed-segment cache layout")
+    N = slots.shape[0]
+
+    def scatter(c, m):
+        L_, _, _, kv, hd = m.shape
+        S = c.shape[2]
+        out = c
+        for i in range(N):
+            seg = jax.lax.dynamic_slice_in_dim(m, i * seg_len, seg_len,
+                                               axis=2)
+            full = jnp.zeros((L_, 1, S, kv, hd), c.dtype)
+            full = full.at[:, :, :seg_len].set(seg.astype(c.dtype))
+            out = jax.lax.dynamic_update_slice_in_dim(out, full, slots[i],
+                                                      axis=1)
+        return out
+
+    return jax.tree.map(scatter, cache, mini)
+
+
+def write_cache_slots(cfg: ModelConfig, cache, mini, slots):
+    """Scatter each BATCH ROW of an N-row ``mini`` cache into its slot.
+
+    The batch-axis packed-admission counterpart of
+    :func:`write_cache_slot`: scanned families (MoE et al.) prefill N
+    prompts as N batch rows of one mini cache (batch-composition
+    invariance makes each row bit-identical to its solo prefill), then row
+    ``i`` scatters into slot ``slots[i]``.  Mini rows span the full
+    ``max_seq`` (init zeros beyond the prompt), so no stale rows survive.
+    Writes happen in pack order, later segments win (see
+    :func:`write_cache_slot_segments` for the dummy-segment convention).
+    """
+    axis = 0 if cfg.family == "hybrid" else 1
+    N = slots.shape[0]
+    out = cache
+    for i in range(N):
+        out = jax.tree.map(
+            lambda c, m, i=i: jax.lax.dynamic_update_slice_in_dim(
+                c, jax.lax.slice_in_dim(m, i, i + 1, axis=axis).astype(
+                    c.dtype), slots[i], axis=axis),
+            out, mini)
+    return out
+
+
+def scatter_segments_to_pool(cfg: ModelConfig, cache, mini, block_ids,
+                             seg_len: int):
+    """Per-segment blockwise scatter of a packed mini cache into pool pages
+    (packed PAGED admission).
+
+    ``mini`` is either the concatenated (L, 1, N * seg_len, KV, hd) layout
+    from :func:`prefill_packed` or the batched (L, N, seg_len, KV, hd)
+    layout from :func:`prefill_batch_ragged` — both reshape to the same
+    (L, N, nb, bs, KV, hd) block grid since seg_len is a multiple of the
+    block size.  ``block_ids`` is a traced (N, seg_len // block_size)
+    int32 grid: position (i, j) holds the pool page for segment i's j-th
+    block, with NON-OWNED positions (shared-prefix blocks, blocks beyond
+    the segment's prompt) pointing at the reserved sink block 0 — the
+    sink absorbs those writes and is never mapped by a live table, so
+    shared pages are never mutated.
+    """
+    def scatter(pool, m):
+        L_, NB, bs, kv, hd = pool.shape
+        N = block_ids.shape[0]
+        mm = m.reshape(L_, N, seg_len // bs, bs, kv, hd)
+        return pool.at[:, block_ids].set(mm.astype(pool.dtype))
+
+    return jax.tree.map(scatter, cache, mini)
+
+
 def _scan_decode(params_stacked, cache_stacked, x, step, cfg: ModelConfig):
     """Layer scan for decode, unrollable for the roofline extractor."""
     if not cfg.scan_layers:
@@ -762,3 +870,85 @@ def _prefill_chunk(params: Params, cfg: ModelConfig, tokens, cache, start,
     x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg)
     lg = L.logits(params["embed"], x, cfg)
     return lg, {"layers": new_layers}
+
+
+def prefill_packed(params: Params, cfg: ModelConfig, tokens, cache,
+                   positions, seg_ids, last_idx, seg_len: int):
+    """PACKED admission prefill: N prompts concatenated into ONE sequence.
+
+    ``tokens``/``positions``/``seg_ids`` are (1, N * seg_len): segment i
+    occupies positions [i*seg_len, (i+1)*seg_len) with its own per-token
+    RELATIVE positions (as the solo prefill's ``arange - start``) and
+    segment id ``i`` on real tokens; PAD positions carry id -1.  Attention
+    is block-diagonal via the segment mask (the chunk/tile split inside
+    :func:`repro.models.layers.flash_attention` is derived from the static
+    ``seg_len``, so chunks align with segment boundaries), which makes
+    every segment's residual stream — and its cache rows — walk
+    bit-identically to a solo prefill of width ``seg_len``.
+
+    Query-side pads get id -2 (they attend NOTHING) while key-side pads
+    keep -1: a pad row never contributes to any real row either way (its
+    keys are excluded by the real rows' segment ids), and fully masking
+    its own queries reproduces the solo fused kernel's all-masked-row
+    convention for pad rows.
+
+    ``last_idx`` is a traced (N,) int32 vector of each segment's LAST REAL
+    position in packed coordinates; its hidden states are gathered before
+    the final norm so the returned logits are (N, 1, V) — row i exactly
+    the (1, 1, V) logits a solo prefill of prompt i would emit.  Dense
+    family only (scanned families pack on the batch axis instead — see
+    :func:`prefill_batch_ragged`).
+    """
+    if cfg.family != "dense":
+        raise ValueError(
+            f"prefill_packed serves the dense family only, got "
+            f"{cfg.family!r}")
+    seg_q = jnp.where(seg_ids < 0, jnp.int32(-2), seg_ids)
+
+    def step(h, inp):
+        p, c = inp
+        a = L.rmsnorm(h, p["ln1"], cfg)
+        o, ck, cv = L.prefill_attention(
+            p["attn"], a, c["k"], c["v"], cfg, positions,
+            seg_q=seg_q, seg_kv=seg_ids, seg_len=seg_len)
+        h = h + o
+        a = L.rmsnorm(h, p["ln2"], cfg)
+        h = h + L.mlp_block(p["mlp"], a, cfg)
+        return h, {"k": ck, "v": cv}
+
+    x = L.embed(params["embed"], tokens, cfg)
+    x, new_layers = _scan_decode(params["blocks"], cache["layers"], x, step,
+                                 cfg)
+    xl = jnp.take(x, last_idx, axis=1)              # (1, N, D)
+    xl = L.rmsnorm(xl, params["ln_f"], cfg)
+    lg = L.logits(params["embed"], xl, cfg)         # (1, N, V)
+    return jnp.swapaxes(lg, 0, 1), {"layers": new_layers}
+
+
+def prefill_batch_ragged(params: Params, cfg: ModelConfig, tokens, cache,
+                         start, last_idx):
+    """Scanned-family packed admission: N RIGHT-padded rows, one scan.
+
+    Rows all start at position 0 and pad on the right to a common width S;
+    ``decode_step`` scans positions [0, S) as in :func:`prefill`, but each
+    row's logits are captured at its OWN last real step ``last_idx[i]``
+    (``plen_i - 1``) instead of the shared final step — so a short row's
+    sampled first token comes from exactly the logits its solo prefill
+    would have returned (batch rows are independent and batch-composition
+    invariant; the pad steps a short row keeps scanning only touch cache
+    rows/state beyond its prompt, which admission never maps into its
+    slot).  Returns ``((N, 1, V) logits, cache)``.
+    """
+    B, S = tokens.shape
+
+    def step(carry, i):
+        cache, lg_keep = carry
+        lg, cache = decode_step(params, cfg, cache, jax.lax.dynamic_slice(
+            tokens, (0, i), (B, 1)), i, start)
+        lg_keep = jnp.where((last_idx == i)[:, None, None], lg, lg_keep)
+        return (cache, lg_keep), None
+
+    (cache, lg), _ = jax.lax.scan(
+        step, (cache, jnp.zeros((B, 1, cfg.padded_vocab), L.COMPUTE_DTYPE)),
+        jnp.arange(0, S))
+    return lg, cache

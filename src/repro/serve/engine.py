@@ -116,6 +116,67 @@ GLOBAL block pool ``(num_blocks, block_size, KV, hd)`` plus an engine-owned
 Families: dense/moe page their kv caches; ssm/hybrid (recurrent O(1)
 state) silently keep the dense slot path under ``kv_layout="paged"``.
 
+Packed multi-prompt prefill (``ServeConfig.packed_prefill``)
+============================================================
+Per-request admission dispatches one batch=1 prefill per queued prompt,
+so slots sit idle behind serial prefill latency whenever several free up
+at once.  With ``packed_prefill=True`` the admission sweep instead runs
+the whole queue head through ONE prefill executable per sweep:
+
+  **pack -> segment prefill -> scatter -> per-slot decode**
+
+  * **Pack** — :meth:`Scheduler.plan_packs` groups the queue head (at
+    most one entry per free slot, so nothing is reordered past a request
+    that would have been admitted this sweep anyway) into
+    ``(bucket_len, num_prompts)`` bins.  Both coordinates are rounded up
+    to powers of two — short bins are padded with all-pad DUMMY segments
+    — so the executable signature space stays
+    ``O(log max_seq * log max_batch)`` and :meth:`ServeEngine.warmup`
+    can pre-compile every bin a deployment will ever hit.
+  * **Segment prefill** — the dense family concatenates the N prompts
+    into ONE ``(1, N * P)`` sequence and runs
+    :func:`repro.models.transformer.prefill_packed`: per-token segment
+    ids ride the existing ``q_pos``/``kv_len``/``kv_start`` mask inputs
+    (a masking change in the flash kernel, not a new kernel) to make
+    attention block-diagonal, and chunk/tile boundaries are derived from
+    the static segment width ``P`` so no tile straddles two prompts.
+    Scanned families (MoE's per-token expert capacity) pack on the BATCH
+    axis instead — ``(N, P)`` rows through the same scanned prefill
+    (:func:`repro.models.transformer.prefill_batch_ragged` under the
+    paged layout, whose rows are right-padded at start 0).
+  * **Scatter** — each segment's cache rows land in its slot in one
+    fused write (:func:`~repro.models.transformer.write_cache_slot_segments`
+    dense / :func:`~repro.models.transformer.scatter_segments_to_pool`
+    paged; dummy segments write a real slot that a later real segment
+    overwrites, or the paged block-0 sink).  Per-segment health probes,
+    first-token sampling (one vectorized call), and slot arming then
+    mirror solo admission per segment, in FIFO order.
+  * **Per-slot decode** — unchanged: the packed path only changes HOW a
+    slot's rows were produced, never what they contain.
+
+**Invariance contract.**  Every request's tokens are BIT-IDENTICAL to
+solo per-request admission (``packed_prefill=False``): segment masking
+yields exact-zero cross-segment contributions, segment-aligned chunking
+reproduces the solo reduction geometry, RoPE positions stay relative to
+each segment's own start, and the vectorized first-token sample uses the
+same per-request keys (``tests/test_packed_prefill.py`` sweeps dense/moe
+x dense/paged x xla/fused, shared prefixes in one pack, and mid-pack
+faults/deadlines).  Differences are confined to bytes no computation
+ever reads: pad rows beyond a segment's prompt (masked out of every
+reduction; zero-filled in the dense scatter) and intra-pack prefix
+sharing (two requests packed TOGETHER each compute their full prompt —
+registration happens after the pack's health check — so shared-block
+stats, not tokens, can differ from sequential admission).
+
+``ServeEngine.warmup()`` drives synthetic traffic through every
+``(bucket, num_prompts)`` bin plus the decode/sampler/health executables
+and reports the compiled-executable census (:meth:`executable_counts`);
+after it, steady-state serving over bucketable traffic never retraces —
+CI-gated by the ``packed_warmup_steady_state`` analysis probe.  Prompts
+whose power-of-two bucket cannot fit ``max_seq`` fall back to solo
+admission (one extra signature each, exactly as today); recurrent
+families always use solo admission.
+
 Serving robustness contract
 ===========================
 The serve loop is fault-isolating and always-admitting: a request can
@@ -213,6 +274,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import enum
+import itertools
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
@@ -239,11 +301,31 @@ def _bucket(n: int, max_seq: int) -> int:
     """Prompt-length bucket for admission prefills: the smallest power of
     two >= n (so the jitted prefill has O(log max_seq) signatures), falling
     back to the exact length when the bucket would not leave room for a
-    single generated token."""
+    single generated token.
+
+    The ONE shared bucketing helper — legacy per-request planning
+    (:meth:`ServeEngine._plan`) and the packing planner
+    (:meth:`ServeEngine._pack_key`) must agree on bucket geometry, so both
+    route through here.  Oversized prompts are clamped EXPLICITLY: a
+    prompt that cannot fit ``max_seq`` with at least one generated token
+    raises ``ValueError`` here instead of relying on a later shape error
+    downstream."""
+    if n + 1 > max_seq:
+        raise ValueError(
+            f"prompt length {n} cannot fit max_seq={max_seq} "
+            "with at least one new token")
     p = 8
     while p < n:
         p *= 2
     return p if p + 1 <= max_seq else n
+
+
+def _pow2_ceil(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor) (pack-size bucketing)."""
+    p = floor
+    while p < n:
+        p *= 2
+    return p
 
 
 class FinishReason(str, enum.Enum):
@@ -301,6 +383,10 @@ class ServeConfig:
     kv_layout: str = "dense"
     block_size: int = 16                 # pool page rows (pow2, 8..128)
     num_blocks: Optional[int] = None     # pool size; None = worst case + sink
+    # packed multi-prompt prefill (see "Packed multi-prompt prefill"
+    # above): admission packs the queue head into (bucket, num_prompts)
+    # bins served from shared executables; bit-identical to solo admission
+    packed_prefill: bool = False
     # robustness knobs (see "Serving robustness contract" above)
     max_queue: Optional[int] = None          # submit() backpressure bound
     max_queue_wait_ms: Optional[float] = None  # queue-wait deadline for all
@@ -524,6 +610,37 @@ class Scheduler:
         self.slot_req[slot] = -1
         return out
 
+    @staticmethod
+    def plan_packs(head):
+        """Packing planner: group the queue head into admission packs.
+
+        ``head`` is ``[(rid, bucket_len | None)]`` for AT MOST one queue
+        entry per free slot, in FIFO order (``None`` marks an entry the
+        engine cannot pack — exact-length bucket fallback, recurrent
+        family).  Returns ``(packs, rest)``: ``packs`` is
+        ``[(bucket_len, [rids])]`` grouping same-bucket entries in first-
+        seen order, ``rest`` the unpackable rids in FIFO order.  Every
+        head entry lands in exactly one of the two, and since the head is
+        capped at the free-slot count, everything here would have been
+        admitted THIS sweep under solo admission too — same-sweep
+        regrouping never lets a request overtake one that would otherwise
+        already be decoding.  Pack sizes are bucketed to powers of two by
+        the admitter (dummy segments), not here; a pack of ONE is valid —
+        it keeps singleton admissions on the same pre-compiled
+        executables (the warmup no-retrace contract)."""
+        packs: Dict[int, List[int]] = {}
+        order: List[int] = []
+        rest: List[int] = []
+        for rid, key in head:
+            if key is None:
+                rest.append(rid)
+                continue
+            if key not in packs:
+                packs[key] = []
+                order.append(key)
+            packs[key].append(rid)
+        return [(key, packs[key]) for key in order], rest
+
     @property
     def any_active(self) -> bool:
         return bool(self.active.any())
@@ -575,6 +692,9 @@ class _ServeState:
             self.cache = (T.init_cache(eng.cfg, B, sc.max_seq)
                           if init_cache else None)
             self.mini_zero = None     # built lazily (first admission)
+        # packed-prefill zero mini templates, keyed (batch, rows): prefill
+        # is pure, so one zero cache per bin shape serves every pack
+        self.packed_zeros: Dict[tuple, object] = {}
         # measured counters
         self.decode_steps = 0
         self.active_slot_steps = 0
@@ -588,6 +708,9 @@ class _ServeState:
         self.owned_total = 0
         self.shared_total = 0
         self.peak_blocks = 0
+        self.packed_packs = 0        # packed admission dispatches
+        self.packed_segments = 0     # real requests admitted packed
+        self.packed_dummies = 0      # pad segments burned on pow2 rounding
         self.ttfts: List[float] = []
         self.token_lats: List[float] = []
 
@@ -684,6 +807,45 @@ class ServeEngine:
                 lambda c, d, bt: T.scatter_dense_to_pool(cfg, c, d, bt),
                 donate_argnums=0)
 
+        # -------------------------------------------- packed admission path
+        # (see "Packed multi-prompt prefill" in the module docstring);
+        # recurrent families keep solo admission — their O(1) state has no
+        # ragged prefill to amortize
+        self._packed = (bool(sc.packed_prefill)
+                        and cfg.family in ("dense", "moe"))
+        if self._packed:
+            # dense family: N prompts concatenated into ONE (1, N*P)
+            # sequence, block-diagonal via segment ids; seg_len is static
+            # (chunk/tile geometry derives from it)
+            self._prefill_packed = jax.jit(
+                lambda p, c, t, pos, seg, last, P: T.prefill_packed(
+                    p, cfg, t, c, pos, seg, last, P),
+                static_argnums=6)
+            if self._paged:
+                # segment rows -> per-segment pool blocks in one scatter
+                self._scatter_segments = jax.jit(
+                    lambda c, m, bids, P: T.scatter_segments_to_pool(
+                        cfg, c, m, bids, P),
+                    donate_argnums=0, static_argnums=3)
+                # scanned families (moe): batch-axis pack, right-padded
+                # rows at start 0 with per-row last-logit capture
+                self._prefill_ragged = jax.jit(
+                    lambda p, c, t, s, last: T.prefill_batch_ragged(
+                        p, cfg, t, c, s, last))
+            else:
+                # one fused write of every segment into its slot (rows
+                # beyond the segment zero-fill, matching the solo mini)
+                self._write_slot_segments = jax.jit(
+                    lambda c, m, slots, P: T.write_cache_slot_segments(
+                        cfg, c, m, slots, P),
+                    donate_argnums=0, static_argnums=3)
+                # scanned families: (N, P) rows through the existing
+                # batch-capable _prefill, scattered row-per-slot
+                self._write_slots = jax.jit(
+                    lambda c, m, slots: T.write_cache_slots(cfg, c, m,
+                                                            slots),
+                    donate_argnums=0)
+
     # ------------------------------------------------------------- sampling
 
     def _masked_logits(self, lg):
@@ -753,6 +915,35 @@ class ServeEngine:
 
     def _now_ms(self) -> float:
         return self._clock() * 1e3
+
+    def executable_counts(self) -> Dict[str, int]:
+        """Compiled-executable census over every jitted engine callable
+        (the steady-state no-retrace probes diff this across a serve)."""
+        fns = {
+            "decode": self._decode,
+            "prefill": self._prefill,
+            "write_slot": self._write_slot,
+            "sample_full": self._sample_full,
+            "sample_greedy": self._sample_greedy,
+            "sample_full_h": self._sample_full_h,
+            "sample_greedy_h": self._sample_greedy_h,
+            "health": self._health,
+        }
+        if self._paged:
+            fns.update(decode_paged=self._decode_paged,
+                       prefill_t0=self._prefill_t0,
+                       write_blocks=self._write_blocks,
+                       mini_prefix=self._mini_prefix,
+                       scatter_pool=self._scatter_pool)
+        if self._packed:
+            fns.update(prefill_packed=self._prefill_packed)
+            if self._paged:
+                fns.update(scatter_segments=self._scatter_segments,
+                           prefill_ragged=self._prefill_ragged)
+            else:
+                fns.update(write_slot_segments=self._write_slot_segments,
+                           write_slots=self._write_slots)
+        return {k: f._cache_size() for k, f in fns.items()}
 
     # ------------------------------------------------------- static batching
 
@@ -1241,16 +1432,24 @@ class ServeEngine:
 
     def _finish_admission(self, st: _ServeState, slot: int, rid: int,
                           lg, P: int, s0: int, budget: int) -> List:
-        """Shared admission tail: sample the prefill token, arm the slot
-        mirrors, record the token (evicting right away if it finishes the
-        request).  Returns the stream events this admission produced."""
+        """Shared admission tail: sample the prefill token, then arm the
+        slot.  Returns the stream events this admission produced."""
         key_r = self._request_key(st.req_key[rid])
         t0 = self._sample(lg, np.asarray([st.req_temp[rid]], np.float32),
                           key_r[None], jnp.zeros((1,), jnp.int32))
+        return self._arm_slot(st, slot, rid, int(np.asarray(t0)[0, 0]),
+                              np.asarray(key_r), P, s0, budget)
+
+    def _arm_slot(self, st: _ServeState, slot: int, rid: int, tok: int,
+                  key_r, P: int, s0: int, budget: int) -> List:
+        """Arm one slot with an ALREADY-sampled first token: set the
+        per-slot mirrors, record the token (evicting right away if it
+        finishes the request).  Solo admission samples then calls this;
+        packed admission samples its whole pack in one vectorized call
+        and arms per segment."""
         st.pos[slot], st.start[slot] = P, s0
         st.temps[slot], st.eos[slot] = st.req_temp[rid], st.req_eos[rid]
-        st.keys[slot], st.steps[slot] = np.asarray(key_r), 1
-        tok = int(np.asarray(t0)[0, 0])
+        st.keys[slot], st.steps[slot] = key_r, 1
         st.cur[slot] = tok
         st.sched.admit(slot, rid, budget)
         now = self._now_ms()
@@ -1269,6 +1468,360 @@ class ServeEngine:
             res = self._finish(st, rid, out, reason, "", now)
             events.append(FinishEvent(rid, res))
         return events
+
+    # ----------------------------------------------------- packed admission
+
+    def _pack_key(self, st: _ServeState, rid: int) -> Optional[int]:
+        """Packing-bin key (the segment width) for a queued request, or
+        None when it must use solo admission: a prompt whose power-of-two
+        bucket fell back to the exact length (``_bucket``'s max_seq clamp
+        or the dense budget clamp) has per-length geometry no shared
+        executable covers.  Paged segments additionally round up to the
+        block size so every segment scatters a whole number of blocks."""
+        if self._paged:
+            plen, _, _ = st.plans[rid]
+            P = _bucket(plen, self.sc.max_seq)
+            if P & (P - 1):
+                return None
+            return max(P, self.sc.block_size)
+        P, _, _ = st.plans[rid]
+        return None if P & (P - 1) else P
+
+    def _packed_zero(self, st: _ServeState, batch: int, rows: int):
+        """Zero mini-cache template for one pack bin (prefill is pure, so
+        each bin shape's template is built once per session and reused)."""
+        key = (batch, rows)
+        if key not in st.packed_zeros:
+            st.packed_zeros[key] = T.init_cache(self.cfg, batch, rows)
+        return st.packed_zeros[key]
+
+    def _admit_packed_sweep(self, st: _ServeState) -> List:
+        """One packed admission sweep: plan packs over the queue head (at
+        most one entry per free slot) and admit each through the packed
+        executables.  Unpackable entries and anything past a paged pool
+        starvation stay queued for the solo loop / a later sweep."""
+        free = st.sched.free_slots()
+        n = min(len(free), len(st.queue))
+        if n == 0:
+            return []
+        head = [(rid, self._pack_key(st, rid))
+                for rid in itertools.islice(st.queue, n)]
+        packs, _ = Scheduler.plan_packs(head)
+        events: List = []
+        admitted: set = set()
+        si = 0                       # next free slot to hand a pack
+        for P, rids in packs:
+            slots = [int(s) for s in free[si:si + len(rids)]]
+            if self._paged:
+                done, evs = self._admit_packed_paged(st, slots, rids, P)
+            elif self.cfg.family == "dense":
+                evs = self._admit_packed_dense(st, slots, rids, P)
+                done = rids
+            else:
+                evs = self._admit_packed_batch(st, slots, rids, P)
+                done = rids
+            admitted.update(done)
+            si += len(done)
+            events.extend(evs)
+            if len(done) < len(rids):
+                break                # pool starvation: defer the rest
+        if admitted:
+            st.queue = collections.deque(
+                r for r in st.queue if r not in admitted)
+        return events
+
+    def _admit_packed_dense(self, st: _ServeState, slots: List[int],
+                            rids: List[int], P: int) -> List:
+        """Dense-family packed admission (dense layout): left-padded
+        segments concatenated into ONE (1, N*P) sequence, block-diagonal
+        attention via segment ids, one fused per-slot scatter.  Dummy
+        segments (pow2 rounding) come FIRST and write the first real
+        slot, which its real segment overwrites (later write wins)."""
+        n_real = len(rids)
+        N = _pow2_ceil(n_real)
+        nd = N - n_real
+        L = N * P
+        toks = np.zeros((1, L), np.int32)
+        segs = np.full((1, L), -1, np.int32)
+        pos = np.zeros((1, L), np.int32)
+        last = np.zeros(N, np.int32)
+        slot_vec = np.full(N, slots[0], np.int32)
+        for i in range(N):
+            pos[0, i * P:(i + 1) * P] = np.arange(P, dtype=np.int32)
+            last[i] = (i + 1) * P - 1
+        for j, rid in enumerate(rids):
+            i = nd + j
+            r = st.reqs[rid]
+            s0 = P - len(r.tokens)
+            off = i * P
+            toks[0, off + s0:off + P] = r.tokens
+            segs[0, off + s0:off + P] = i
+            pos[0, off:off + P] -= s0
+            slot_vec[i] = slots[j]
+        tmpl = self._packed_zero(st, 1, L)
+        lg, mini = self._prefill_packed(
+            self.params, tmpl, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(segs), jnp.asarray(last), P)
+        # scatter-then-quarantine: a segment that fails the health probe
+        # below leaves poisoned rows in a slot that stays FREE — batch
+        # rows are independent, inactive slots' health bits are ignored,
+        # and the next admission's scatter fully overwrites the slot
+        # (solo admission instead skips the scatter; same observable
+        # tokens either way)
+        st.cache = self._write_slot_segments(st.cache, mini,
+                                             jnp.asarray(slot_vec), P)
+        return self._finish_pack(st, slots, rids, lg, nd,
+                                 [st.plans[rid][0] for rid in rids],
+                                 [st.plans[rid][1] for rid in rids])
+
+    def _admit_packed_batch(self, st: _ServeState, slots: List[int],
+                            rids: List[int], P: int) -> List:
+        """Scanned-family packed admission (dense layout): one (N, P)
+        left-padded batch through the batch-capable solo prefill (MoE's
+        per-token expert capacity keeps ragged batching exact), one fused
+        row-per-slot scatter.  Dummy rows are all-zero pseudo-prompts at
+        start 0 — batch invariance keeps them from touching real rows."""
+        sc = self.sc
+        n_real = len(rids)
+        N = _pow2_ceil(n_real)
+        nd = N - n_real
+        toks = np.zeros((N, P), np.int32)
+        starts = np.zeros(N, np.int32)
+        slot_vec = np.full(N, slots[0], np.int32)
+        for j, rid in enumerate(rids):
+            i = nd + j
+            r = st.reqs[rid]
+            s0 = P - len(r.tokens)
+            toks[i, s0:] = r.tokens
+            starts[i] = s0
+            slot_vec[i] = slots[j]
+        tmpl = self._packed_zero(st, N, sc.max_seq)
+        lg, mini = self._prefill(self.params, tmpl, jnp.asarray(toks),
+                                 jnp.asarray(starts))
+        st.cache = self._write_slots(st.cache, mini,
+                                     jnp.asarray(slot_vec, jnp.int32))
+        return self._finish_pack(st, slots, rids, lg, nd,
+                                 [st.plans[rid][0] for rid in rids],
+                                 [st.plans[rid][1] for rid in rids])
+
+    def _admit_packed_paged(self, st: _ServeState, slots: List[int],
+                            rids: List[int], W: int):
+        """Paged packed admission; returns ``(admitted_rids, events)``.
+
+        Walks the pack FIFO mapping shared prefix blocks and allocating
+        owned ones per request, stopping at the first the pool cannot
+        satisfy (it and everything behind it stay queued — solo deferral
+        semantics).  Segments are RIGHT-padded to the block-aligned
+        width ``W`` at start 0 (the sharing contract) and FULLY
+        recomputed (t0=0: intra-pack gathering would need the pack's own
+        pages before they are written; full recompute is bit-identical
+        by the suffix-prefill contract), then scattered block-wise in
+        one call — shared prefix blocks are mapped, never rewritten
+        (first-writer-wins), and a faulted segment's rows go to the
+        block-0 sink.  Prefix registration happens per segment AFTER the
+        health check, exactly as solo."""
+        sc = self.sc
+        alloc = st.alloc
+        bs = sc.block_size
+        plans = []            # (rid, plen, shared_mapped, owned, t0, total)
+        for rid in rids:
+            plen, _, _ = st.plans[rid]
+            toks_t = tuple(int(t) for t in st.reqs[rid].tokens)
+            shared = alloc.match_prefix(toks_t) if self._share else []
+            t0 = min(len(shared) * bs, plen - 1)
+            s_blk = t0 // bs
+            total = -(-plen // bs)
+            for b in shared[:s_blk]:
+                alloc.incref(b)
+            owned: List[int] = []
+            try:
+                for _ in range(total - s_blk):
+                    owned.append(alloc.alloc())
+            except ValueError:
+                for b in owned:
+                    alloc.decref(b)
+                for b in shared[:s_blk]:
+                    alloc.decref(b)
+                break
+            plans.append((rid, plen, shared[:s_blk], owned, t0, total))
+        if not plans:
+            return [], []
+        n_real = len(plans)
+        N = _pow2_ceil(n_real)
+        nd = N - n_real
+        if self.cfg.family == "dense":
+            L = N * W
+            toks = np.zeros((1, L), np.int32)
+            segs = np.full((1, L), -1, np.int32)
+            pos = np.zeros((1, L), np.int32)
+            last = np.zeros(N, np.int32)
+            for i in range(N):
+                pos[0, i * W:(i + 1) * W] = np.arange(W, dtype=np.int32)
+                last[i] = (i + 1) * W - 1
+            for j, (rid, plen, _, _, _, _) in enumerate(plans):
+                i = nd + j
+                off = i * W
+                toks[0, off:off + plen] = st.reqs[rid].tokens
+                segs[0, off:off + plen] = i
+                last[i] = off + plen - 1
+            tmpl = self._packed_zero(st, 1, L)
+            lg, mini = self._prefill_packed(
+                self.params, tmpl, jnp.asarray(toks), jnp.asarray(pos),
+                jnp.asarray(segs), jnp.asarray(last), W)
+        else:
+            toks = np.zeros((N, W), np.int32)
+            last = np.zeros(N, np.int32)
+            for j, (rid, plen, _, _, _, _) in enumerate(plans):
+                i = nd + j
+                toks[i, :plen] = st.reqs[rid].tokens
+                last[i] = plen - 1
+            tmpl = self._packed_zero(st, N, W)
+            lg, mini = self._prefill_ragged(
+                self.params, tmpl, jnp.asarray(toks),
+                jnp.zeros(N, jnp.int32), jnp.asarray(last))
+        healthy = np.asarray(self._health(lg)).astype(bool)
+        bids = np.zeros((N, W // bs), np.int32)       # default: sink 0
+        for j, (rid, plen, shared_m, owned, t0, total) in enumerate(plans):
+            if sc.health_checks and not healthy[nd + j]:
+                continue
+            bids[nd + j, len(shared_m):total] = owned
+        st.cache = self._scatter_segments(st.cache, mini,
+                                          jnp.asarray(bids), W)
+        toks_s, keys = self._sample_pack(st, [p[0] for p in plans], nd, N,
+                                         lg)
+        st.packed_packs += 1
+        st.packed_segments += n_real
+        st.packed_dummies += nd
+        events: List = []
+        for j, (rid, plen, shared_m, owned, t0, total) in enumerate(plans):
+            st.admissions += 1
+            if sc.health_checks and not healthy[nd + j]:
+                for b in owned:
+                    alloc.decref(b)
+                for b in shared_m:
+                    alloc.decref(b)
+                    alloc.quarantine(b)
+                now = self._now_ms()
+                st.t_admit[rid] = now
+                st.faults += 1
+                res = self._finish(st, rid, np.zeros(0, np.int32),
+                                   FinishReason.FAULT,
+                                   "non-finite prefill logits quarantined",
+                                   now)
+                events.append(FinishEvent(rid, res))
+                continue
+            chain = shared_m + owned
+            if self._share:
+                alloc.register_prefix(
+                    tuple(int(t) for t in st.reqs[rid].tokens), chain)
+            slot = slots[j]
+            st.bt_host[slot, :] = 0
+            st.bt_host[slot, :total] = chain
+            st.slot_blocks[slot] = chain
+            st.hit_tokens += t0
+            st.fill_tokens += plen - t0
+            st.prompt_tokens += plen
+            st.owned_total += len(owned)
+            st.shared_total += len(shared_m)
+            st.peak_blocks = max(st.peak_blocks, alloc.blocks_in_use())
+            events.extend(self._arm_slot(st, slot, rid, int(toks_s[nd + j, 0]),
+                                         keys[nd + j], plen, 0,
+                                         st.plans[rid][2]))
+        return [p[0] for p in plans], events
+
+    def _sample_pack(self, st: _ServeState, rids: List[int], nd: int,
+                     N: int, lg):
+        """ONE vectorized first-token sample for a whole pack: row i uses
+        request i's own key/temperature, so each row's token is exactly
+        what solo admission's (1,)-shaped sample would draw (dummy rows
+        sample greedy garbage that nothing reads)."""
+        temps = np.zeros(N, np.float32)
+        keys = np.zeros((N, 2), np.uint32)
+        for j, rid in enumerate(rids):
+            temps[nd + j] = st.req_temp[rid]
+            keys[nd + j] = np.asarray(self._request_key(st.req_key[rid]))
+        toks = np.asarray(self._sample(lg, temps, jnp.array(keys),
+                                       jnp.zeros(N, jnp.int32)))
+        return toks, keys
+
+    def _finish_pack(self, st: _ServeState, slots: List[int],
+                     rids: List[int], lg, nd: int, Ps: List[int],
+                     s0s: List[int]) -> List:
+        """Dense-layout packed admission tail: per-segment health probe,
+        one vectorized sample, per-segment arming in FIFO order."""
+        sc = self.sc
+        N = nd + len(rids)
+        healthy = np.asarray(self._health(lg)).astype(bool)
+        toks, keys = self._sample_pack(st, rids, nd, N, lg)
+        st.packed_packs += 1
+        st.packed_segments += len(rids)
+        st.packed_dummies += nd
+        events: List = []
+        for j, rid in enumerate(rids):
+            i = nd + j
+            st.admissions += 1
+            if sc.health_checks and not healthy[i]:
+                now = self._now_ms()
+                st.t_admit[rid] = now
+                st.faults += 1
+                res = self._finish(st, rid, np.zeros(0, np.int32),
+                                   FinishReason.FAULT,
+                                   "non-finite prefill logits quarantined",
+                                   now)
+                events.append(FinishEvent(rid, res))
+                continue
+            events.extend(self._arm_slot(st, slots[j], rid,
+                                         int(toks[i, 0]), keys[i],
+                                         Ps[j], s0s[j],
+                                         st.plans[rid][2]))
+        return events
+
+    def warmup(self, prompt_lens: Optional[Sequence[int]] = None,
+               max_new: int = 2,
+               temperature: Optional[float] = None) -> Dict[str, int]:
+        """AOT-compile the serving executables by driving synthetic
+        traffic through every admission bin, so steady-state serving
+        never retraces.
+
+        For each prompt-length bucket (default: every power-of-two
+        bucket that fits ``max_seq``) and one representative real pack
+        size per power-of-two pack bin, a synthetic batch is served to
+        completion — populating the jit caches with REAL calls (a bare
+        ``jit.lower().compile()`` would not populate the call cache)
+        for packed + solo prefill, the cache scatters, the decode step,
+        the samplers (greedy always; the categorical sampler too when
+        ``temperature`` is given) and the health probe.  The warmup
+        sessions are discarded: ``last_serve_stats``/``last_results``
+        are restored and the next ``submit()`` starts fresh.  Returns
+        the compiled-executable census (:meth:`executable_counts`)."""
+        sc = self.sc
+        if self._st is not None and not self._st.drained:
+            raise ValueError("warmup() requires an idle engine")
+        if prompt_lens is None:
+            prompt_lens, p = [], 8
+            while p + 1 <= sc.max_seq:
+                prompt_lens.append(p)
+                p *= 2
+        plens = sorted({_bucket(int(n), sc.max_seq) for n in prompt_lens})
+        # one representative real count per pow2 pack bin (a real count r
+        # packs as _pow2_ceil(r), dummies filling the difference)
+        bins = sorted({_pow2_ceil(r) for r in range(1, sc.max_batch + 1)})
+        sizes = [min(N, sc.max_batch) for N in bins]
+        saved = (self.last_serve_stats, self.last_results)
+        temp = 0.0 if temperature is None else float(temperature)
+        for P in plens:
+            plen = max(1, P - 1)      # lands in bucket P
+            # keep the plan at bucket P: a budget the bucket's pad rows
+            # would eat forces the exact-length fallback signature
+            mn = max(1, min(max_new, sc.max_seq - P))
+            for r in sizes:
+                reqs = [Request(np.ones(plen, np.int32), max_new=mn,
+                                temperature=temp, seed=0)
+                        for _ in range(r)]
+                self.serve(reqs)
+        self._st = None
+        self.last_serve_stats, self.last_results = saved
+        return self.executable_counts()
 
     def _release_blocks(self, st: _ServeState, slot: int,
                         quarantine: bool = False) -> None:
@@ -1350,6 +1903,13 @@ class ServeEngine:
                     else:
                         kept.append(rid)
                 st.queue = kept
+            # packed admission first: the queue head (one entry per free
+            # slot) is grouped into (bucket, count) bins and served from
+            # the shared pack executables; unpackable entries fall
+            # through to the solo loop below (see module docstring)
+            if self._packed and st.queue:
+                for ev in self._admit_packed_sweep(st):
+                    emit(ev)
             # admission into freed slots (FIFO; paged may defer on pool
             # starvation until an eviction frees blocks)
             for slot in st.sched.free_slots():
@@ -1419,9 +1979,14 @@ class ServeEngine:
             packed = self._sample_packed(lg, health, st.temps,
                                          jnp.array(st.keys),
                                          jnp.array(st.steps))
+            # sync BEFORE mutating the pos/steps mirrors: under async
+            # dispatch the jnp.array host->device copies above may still
+            # be pending, and an in-place bump here would let the
+            # in-flight step read the NEXT step's values (a real race —
+            # it fired on the categorical sampler's ``steps`` input)
+            arr = np.asarray(packed)
             np.minimum(st.pos + 1, sc.max_seq - 1, out=st.pos)
             st.steps += 1
-            arr = np.asarray(packed)
             tok_h = arr[:, 0].astype(np.int32)
             healthy = arr[:, 1].astype(bool)
             st.cur = tok_h[:, None].copy()
@@ -1493,6 +2058,10 @@ class ServeEngine:
                 r.finish.value for r in st.results.values()),
             "ttft_ms": list(st.ttfts),
             "token_latency_ms": list(st.token_lats),
+            "packed_prefill": self._packed,
+            "packed_packs": st.packed_packs,
+            "packed_segments": st.packed_segments,
+            "packed_dummies": st.packed_dummies,
         }
         if self._paged:
             stats.update({
@@ -1533,6 +2102,11 @@ class ServeEngine:
         snap = {
             "version": 1,
             "kv_layout": "paged" if self._paged else "dense",
+            # informational only: the packed-admission invariance contract
+            # means a snapshot restores bit-identically onto an engine
+            # with EITHER packed_prefill setting (still-queued requests
+            # are admitted by the restoring engine's own path)
+            "packed_prefill": self._packed,
             "max_batch": sc.max_batch,
             "max_seq": sc.max_seq,
             "reqs": [dataclasses.replace(
@@ -1566,7 +2140,9 @@ class ServeEngine:
                                    "deadline_evictions", "shed",
                                    "hit_tokens", "fill_tokens",
                                    "prompt_tokens", "owned_total",
-                                   "shared_total", "peak_blocks")},
+                                   "shared_total", "peak_blocks",
+                                   "packed_packs", "packed_segments",
+                                   "packed_dummies")},
             "ttfts": list(st.ttfts),
             "token_lats": list(st.token_lats),
             "cache": jax.device_get(st.cache),

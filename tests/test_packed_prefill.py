@@ -1,0 +1,344 @@
+"""Packed multi-prompt prefill: bit-identity vs solo admission across
+family x kv-layout x attention backend, shared-prefix packs, fault and
+deadline eviction mid-pack, the shared ``_bucket`` clamp, warmup's
+zero-retrace guarantee, and snapshot/restore of a packed session.
+
+The contract under test (see ``repro/serve/engine.py`` module docs): with
+``ServeConfig.packed_prefill=True`` the admission path concatenates queued
+prompts into one segment-masked prefill served from pre-lowered bucket
+executables — and every request's emitted tokens stay BIT-IDENTICAL to
+solo per-request admission.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from fault_inject import poison_slot
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve import (FinishReason, Request, ServeConfig, ServeEngine,
+                         TokenEvent)
+from repro.serve.engine import _bucket, _pow2_ceil, Scheduler
+
+_RNG = np.random.default_rng(7)
+_PROMPTS = [_RNG.integers(1, 100, size=n).astype(np.int32)
+            for n in (3, 5, 7, 11, 13, 2, 9, 4, 6, 8, 17, 19)]
+_BUDGETS = [4, 6, 8, 5, 3, 7, 4, 6, 2, 8, 5, 4]
+
+_MODELS = {}
+
+
+def _model(arch="smollm-360m", fused=False):
+    key = (arch, fused)
+    if key not in _MODELS:
+        cfg = get_config(arch, smoke=True, fused=fused)
+        _MODELS[key] = (cfg, T.init_params(cfg, jax.random.PRNGKey(0)))
+    return _MODELS[key]
+
+
+def _pair(cfg, params, **sc_kw):
+    """(solo engine, packed engine) over identical ServeConfigs."""
+    solo = ServeEngine(cfg, params, ServeConfig(**sc_kw))
+    pack = ServeEngine(cfg, params,
+                       ServeConfig(packed_prefill=True, **sc_kw))
+    return solo, pack
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _drain(eng, on_event=None):
+    toks, results = {}, {}
+    for ev in eng.serve_stream():
+        if isinstance(ev, TokenEvent):
+            toks.setdefault(ev.rid, []).append(ev.token)
+        else:
+            results[ev.rid] = ev.result
+        if on_event is not None:
+            on_event(ev)
+    return toks, results
+
+
+# =====================================================================
+# The shared _bucket helper
+# =====================================================================
+
+
+def test_bucket_pow2_and_fallback():
+    assert _bucket(1, 512) == 8
+    assert _bucket(8, 512) == 8
+    assert _bucket(9, 512) == 16
+    assert _bucket(100, 512) == 128
+    # exact-length fallback when the pow2 bucket leaves no decode room
+    assert _bucket(300, 320) == 300
+    assert _pow2_ceil(1) == 1 and _pow2_ceil(3) == 4 and _pow2_ceil(8) == 8
+
+
+def test_bucket_clamps_oversized_prompt():
+    """A prompt that cannot fit max_seq with one new token raises the
+    explicit clamp error — not a downstream shape mismatch."""
+    with pytest.raises(ValueError, match="cannot fit max_seq"):
+        _bucket(64, 64)
+    with pytest.raises(ValueError, match="cannot fit max_seq"):
+        _bucket(100, 64)
+    assert _bucket(63, 64) == 63        # largest admissible: fallback form
+
+
+def test_plan_packs_groups_by_key_first_seen():
+    head = [(1, ("a",)), (2, ("b",)), (3, ("a",)), (4, None), (5, ("b",))]
+    packs, rest = Scheduler.plan_packs(head)
+    assert packs == [(("a",), [1, 3]), (("b",), [2, 5])]
+    assert rest == [4]
+
+
+# =====================================================================
+# Bit-identity: packed admission == solo admission
+# =====================================================================
+
+
+@pytest.mark.parametrize("kv_layout,fused", [
+    ("dense", False),
+    ("paged", False),
+    pytest.param("dense", True, marks=pytest.mark.slow),
+    pytest.param("paged", True, marks=pytest.mark.slow),
+])
+def test_packed_matches_solo_dense_family(kv_layout, fused):
+    """12 mixed-length prompts through 4 slots: every request decodes
+    bit-identically packed vs solo, and packs actually formed."""
+    cfg, params = _model(fused=fused)
+    solo, pack = _pair(cfg, params, max_batch=4, max_seq=96,
+                       kv_layout=kv_layout)
+    reqs = [Request(p, max_new=m) for p, m in zip(_PROMPTS, _BUDGETS)]
+    souts = solo.serve(reqs)
+    pouts = pack.serve(reqs)
+    for i, (a, b) in enumerate(zip(souts, pouts)):
+        np.testing.assert_array_equal(a, b, err_msg=f"req {i}")
+    st = pack.last_serve_stats
+    assert st["packed_prefill"] is True
+    assert st["packed_packs"] >= 1
+    assert st["packed_segments"] == len(reqs)
+    assert solo.last_serve_stats["packed_segments"] == 0
+
+
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+def test_packed_matches_solo_moe(kv_layout):
+    cfg, params = _model("olmoe-1b-7b")
+    solo, pack = _pair(cfg, params, max_batch=4, max_seq=64,
+                       kv_layout=kv_layout)
+    reqs = [Request(p, max_new=m)
+            for p, m in zip(_PROMPTS[:6], _BUDGETS[:6])]
+    souts = solo.serve(reqs)
+    pouts = pack.serve(reqs)
+    for i, (a, b) in enumerate(zip(souts, pouts)):
+        np.testing.assert_array_equal(a, b, err_msg=f"req {i}")
+    assert pack.last_serve_stats["packed_segments"] == len(reqs)
+
+
+def test_packed_shared_prefix_same_pack():
+    """Requests sharing a block-aligned prefix stay bit-identical to solo
+    whether packed together (same pack: sharing forfeited, full
+    recompute) or across packs (later pack hits the radix cache the
+    first pack registered: prefix_hit_tokens > 0)."""
+    cfg, params = _model()
+    base = _RNG.integers(1, 100, size=16).astype(np.int32)
+    fork = np.concatenate([base[:8], _RNG.integers(1, 100, size=5)
+                           .astype(np.int32)])
+    # max_batch=2: base+fork pack together; base.copy() lands in a LATER
+    # pack and must match the prefix chain the first pack registered
+    reqs = [Request(base, max_new=5), Request(fork, max_new=4),
+            Request(base.copy(), max_new=3)]
+    solo, pack = _pair(cfg, params, max_batch=2, max_seq=96,
+                       kv_layout="paged", block_size=8)
+    souts = solo.serve(reqs)
+    pouts = pack.serve(reqs)
+    for i, (a, b) in enumerate(zip(souts, pouts)):
+        np.testing.assert_array_equal(a, b, err_msg=f"req {i}")
+    st = pack.last_serve_stats
+    assert st["prefix_hit_tokens"] > 0
+    assert st["shared_blocks"] >= 1
+    assert st["packed_segments"] == 3
+
+
+def test_packed_sampling_matches_solo():
+    """Per-request seeds/temperatures survive packing: the first sampled
+    token comes from the pack's batched logits, later ones from decode."""
+    cfg, params = _model()
+    reqs = [Request(p, max_new=6, temperature=0.8, seed=100 + i)
+            for i, p in enumerate(_PROMPTS[:5])]
+    solo, pack = _pair(cfg, params, max_batch=4, max_seq=96)
+    souts = solo.serve(reqs)
+    pouts = pack.serve(reqs)
+    for i, (a, b) in enumerate(zip(souts, pouts)):
+        np.testing.assert_array_equal(a, b, err_msg=f"req {i}")
+
+
+# =====================================================================
+# Robustness mid-pack: faults and deadlines
+# =====================================================================
+
+
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+def test_fault_eviction_mid_pack(kv_layout):
+    """Poison one slot mid-decode after a packed admission: the faulted
+    request finishes FAULT with its clean prefix, its pack-mates stay
+    bit-identical to the clean packed run."""
+    cfg, params = _model()
+    sc = dict(max_batch=4, max_seq=96, kv_layout=kv_layout)
+    _, clean_eng = _pair(cfg, params, **sc)
+    reqs = [Request(p, max_new=6) for p in _PROMPTS[:4]]
+    clean = clean_eng.serve(reqs)
+
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(packed_prefill=True, **sc))
+    rids = [eng.submit(Request(p, max_new=6)) for p in _PROMPTS[:4]]
+    state = {"n": 0, "injected": False}
+
+    def inject(ev):
+        if isinstance(ev, TokenEvent) and ev.rid == rids[1]:
+            state["n"] += 1
+            if state["n"] == 3 and not state["injected"]:
+                slot = int(np.flatnonzero(
+                    eng._st.sched.slot_req == rids[1])[0])
+                assert poison_slot(eng, slot)
+                state["injected"] = True
+    _, results = _drain(eng, inject)
+    assert state["injected"]
+    vres = results[rids[1]]
+    assert vres.finish == FinishReason.FAULT
+    n = len(vres.tokens)
+    assert 3 <= n < 6
+    np.testing.assert_array_equal(vres.tokens, clean[1][:n])
+    for i in (0, 2, 3):
+        assert results[rids[i]].finish != FinishReason.FAULT
+        np.testing.assert_array_equal(results[rids[i]].tokens, clean[i],
+                                      err_msg=f"neighbor {i}")
+    assert eng.last_serve_stats["packed_segments"] == 4
+
+
+def test_deadline_eviction_mid_pack():
+    """A deadline firing mid-decode evicts one member of a pack; its
+    neighbors finish bit-identically to the clean packed run."""
+    cfg, params = _model()
+    clock = FakeClock()
+    sc = dict(max_batch=4, max_seq=96)
+    _, clean_eng = _pair(cfg, params, **sc)
+    reqs = [Request(p, max_new=6) for p in _PROMPTS[:4]]
+    clean = clean_eng.serve(reqs)
+
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(packed_prefill=True, **sc), clock=clock)
+    rids = [eng.submit(Request(_PROMPTS[0], max_new=6, deadline_ms=50.0))]
+    rids += [eng.submit(Request(p, max_new=6)) for p in _PROMPTS[1:4]]
+    state = {"n": 0}
+
+    def advance(ev):
+        if isinstance(ev, TokenEvent) and ev.rid == rids[0]:
+            state["n"] += 1
+            if state["n"] == 3:
+                clock.t += 1.0
+    _, results = _drain(eng, advance)
+    r0 = results[rids[0]]
+    assert r0.finish == FinishReason.DEADLINE
+    n = len(r0.tokens)
+    assert 3 <= n < 6
+    np.testing.assert_array_equal(r0.tokens, clean[0][:n])
+    for i in (1, 2, 3):
+        np.testing.assert_array_equal(results[rids[i]].tokens, clean[i])
+
+
+# =====================================================================
+# Warmup: AOT-lowered bucket executables, zero steady-state retrace
+# =====================================================================
+
+
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+def test_warmup_zero_steady_state_retrace(kv_layout):
+    """After warmup(), serving mixed bucketable traffic adds ZERO new
+    executables anywhere in the engine's jit census."""
+    cfg, params = _model()
+    eng = ServeEngine(cfg, params, ServeConfig(
+        max_batch=4, max_seq=96, kv_layout=kv_layout, packed_prefill=True))
+    before = eng.warmup()
+    assert sum(before.values()) > 0
+    outs = eng.serve([Request(p, max_new=m)
+                      for p, m in zip(_PROMPTS, _BUDGETS)])
+    assert len(outs) == len(_PROMPTS)
+    after = eng.executable_counts()
+    assert before == after, {
+        k: (before.get(k, 0), after[k])
+        for k in after if after[k] != before.get(k, 0)}
+
+
+def test_warmup_requires_idle_engine():
+    cfg, params = _model()
+    eng = ServeEngine(cfg, params, ServeConfig(
+        max_batch=2, max_seq=64, packed_prefill=True))
+    eng.submit(Request(_PROMPTS[0], max_new=2))
+    stream = eng.serve_stream()
+    next(stream)                    # engine now holds a live session
+    with pytest.raises(ValueError, match="idle"):
+        eng.warmup()
+    for _ in stream:                # drain so the module cache stays clean
+        pass
+
+
+def test_warmup_preserves_serve_results():
+    """warmup() must not clobber the caller-visible last_serve_stats /
+    last_results of a previous session."""
+    cfg, params = _model()
+    eng = ServeEngine(cfg, params, ServeConfig(
+        max_batch=2, max_seq=64, packed_prefill=True))
+    outs = eng.serve([Request(_PROMPTS[0], max_new=3)])
+    stats = eng.last_serve_stats
+    eng.warmup(prompt_lens=(7,), max_new=1)
+    assert eng.last_serve_stats is stats
+    np.testing.assert_array_equal(eng.last_results[0].tokens, outs[0])
+
+
+# =====================================================================
+# Snapshot / restore of a packed session
+# =====================================================================
+
+
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+def test_snapshot_restore_mid_packed_session(kv_layout):
+    """Kill a packed engine mid-stream; restoring the snapshot on a fresh
+    packed engine finishes every request bit-identically to the clean
+    packed run, and packed counters survive the round-trip."""
+    cfg, params = _model()
+    sc = ServeConfig(max_batch=4, max_seq=96, kv_layout=kv_layout,
+                     packed_prefill=True)
+    reqs = [Request(p, max_new=m)
+            for p, m in zip(_PROMPTS[:6], _BUDGETS[:6])]
+    clean_eng = ServeEngine(cfg, params, sc)
+    clean = clean_eng.serve(reqs)
+
+    eng = ServeEngine(cfg, params, sc)
+    rids = [eng.submit(Request(p, max_new=m))
+            for p, m in zip(_PROMPTS[:6], _BUDGETS[:6])]
+    toks = {}
+    stream = eng.serve_stream()
+    for ev in stream:
+        if isinstance(ev, TokenEvent):
+            toks.setdefault(ev.rid, []).append(ev.token)
+            if sum(len(v) for v in toks.values()) >= 6:
+                break
+    snap = eng.snapshot()
+    assert snap["packed_prefill"] is True
+
+    eng2 = ServeEngine(cfg, params, sc)
+    eng2.restore(snap)
+    for ev in eng2.serve_stream():
+        if isinstance(ev, TokenEvent):
+            toks.setdefault(ev.rid, []).append(ev.token)
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(np.asarray(toks[rid], np.int32),
+                                      clean[i], err_msg=f"req {i}")
+    st = eng2.last_serve_stats
+    assert st["packed_segments"] >= 1   # counters restored + accumulated
