@@ -923,3 +923,133 @@ def static_analysis_rows():
     rows.append(("static_analysis/lint", float("nan"),
                  f"entries={len(entries)} violations={len(lint)}"))
     return rows
+
+
+def sharded_serving_rows():
+    """Mesh-sharded serving: tensor-parallel decode + replica routing on
+    the PR5 traffic shape, plus the bit-identity + scaling CI gates.
+
+    Needs >= 4 devices (the CI ``multi-device`` job forces 8 host
+    devices); on fewer it emits a single ``skipped`` row.  Three timed
+    topologies serve the same heavy-tailed stream: the unsharded
+    single-device engine, one TP=2 engine (shard_map over a ("model",)
+    submesh), and a ReplicaRouter over two TP=2 replicas on disjoint
+    device subsets (tp2_r2 doubles aggregate slot capacity, so the
+    stream drains in fewer sequential decode waves).  Reported per
+    topology: tokens/sec, TTFT p50/p99, slots.  The gate row ANDs
+    (a) bit-identity of every routed TP=2 x replicas=2 output against
+    the single-device engine across dense+paged KV layouts and the
+    xla+fused attention backends, and (b) strict aggregate-throughput
+    scaling of two replicas over one; run.py exits nonzero on
+    ``match``+``False``, so losing either fails CI.
+    """
+    import time as _time
+
+    from repro.configs import get_config
+    from repro.launch import mesh as MX
+    from repro.models import transformer as T
+    from repro.serve import ReplicaRouter, Request, ServeConfig, ServeEngine
+
+    TP, R = 2, 2
+    if jax.device_count() < TP * R:
+        return [("sharded_serving/skipped", float("nan"),
+                 f"needs >= {TP * R} devices for tp={TP} x replicas={R}, "
+                 f"have {jax.device_count()} (run with XLA_FLAGS="
+                 f"--xla_force_host_platform_device_count=8)")]
+
+    slots, max_seq = 2, 96
+
+    def cfg_for(backend):
+        # smoke smollm has 3 heads — resize to a TP-divisible layout and
+        # pin tp_groups so grouped reductions match at every TP degree
+        return get_config("smollm-360m", smoke=True,
+                          fused=backend == "fused").replace(
+            n_heads=4, n_kv_heads=2, head_dim=32, tp_groups=TP)
+
+    def traffic(cfg):
+        rng = np.random.default_rng(0)
+        return [Request(rng.integers(1, cfg.vocab,
+                                     size=int(rng.integers(3, 24))
+                                     ).astype(np.int32),
+                        max_new=int(rng.choice([4, 6, 8, 48])), seed=i)
+                for i in range(3 * TP * R)]
+
+    def gate_traffic(cfg):
+        # short stream for the untimed bit-identity combos: the fused
+        # backend runs the Pallas kernels in interpret mode on this host,
+        # so full PR5 traffic there is minutes per engine; 6 requests
+        # over 4 aggregate slots still exercise re-admission
+        rng = np.random.default_rng(1)
+        return [Request(rng.integers(1, cfg.vocab,
+                                     size=int(rng.integers(3, 12))
+                                     ).astype(np.int32),
+                        max_new=int(rng.choice([2, 3, 4])), seed=i)
+                for i in range(6)]
+
+    def sc(layout):
+        return ServeConfig(max_batch=slots, max_seq=max_seq,
+                           kv_layout=layout, block_size=16)
+
+    def pct(xs, q):
+        return float(np.percentile(np.asarray(xs, np.float64), q))
+
+    # ---- timed topologies (dense/xla) -----------------------------------
+    cfg = cfg_for("xla")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = traffic(cfg)
+    base = ServeEngine(cfg, params, sc("dense"))
+    tp1 = ServeEngine(cfg, params, sc("dense"),
+                      mesh=MX.serve_meshes(TP, 1)[0])
+    tp2r2 = ReplicaRouter([
+        ServeEngine(cfg, params, sc("dense"), mesh=m)
+        for m in MX.serve_meshes(TP, R)])
+
+    rows, timing, outs = [], {}, {}
+    for tag, eng, n_slots in (("baseline_1dev", base, slots),
+                              (f"tp{TP}_r1", tp1, slots),
+                              (f"tp{TP}_r{R}", tp2r2, R * slots)):
+        eng.serve(traffic(cfg))          # warm every jit signature
+        t0 = _time.perf_counter()
+        outs[tag] = eng.serve(traffic(cfg))
+        dt = _time.perf_counter() - t0
+        timing[tag] = dt
+        st = eng.last_serve_stats
+        tokens = sum(len(o) for o in outs[tag])
+        extra = ""
+        if tag.endswith(f"_r{R}"):
+            extra = (f" scaling={timing[f'tp{TP}_r1'] / dt:.2f}x"
+                     f" replicas={st['replicas']}")
+        rows.append((f"sharded_serving/{tag}", dt * 1e6,
+                     f"{tokens / dt:.1f} tok/s requests={len(reqs)} "
+                     f"slots={n_slots} tp={1 if eng is base else TP} "
+                     f"ttft_p50={pct(st['ttft_ms'], 50):.1f}ms "
+                     f"ttft_p99={pct(st['ttft_ms'], 99):.1f}ms" + extra))
+
+    scaling_ok = timing[f"tp{TP}_r{R}"] < timing[f"tp{TP}_r1"]
+
+    # ---- bit-identity gate: every layout x backend ----------------------
+    ok = True
+    for backend in ("xla", "fused"):
+        for layout in ("dense", "paged"):
+            if (backend, layout) == ("xla", "dense"):
+                ref_outs, r_outs = outs["baseline_1dev"], outs[f"tp{TP}_r{R}"]
+            else:
+                c = cfg_for(backend)
+                p = params if backend == "xla" \
+                    else T.init_params(c, jax.random.PRNGKey(0))
+                ref_outs = ServeEngine(c, p, sc(layout)).serve(
+                    gate_traffic(c))
+                r_outs = ReplicaRouter([
+                    ServeEngine(c, p, sc(layout), mesh=m)
+                    for m in MX.serve_meshes(TP, R)]).serve(gate_traffic(c))
+            for a, b in zip(ref_outs, r_outs):
+                ok &= len(a) == len(b) and bool((a == b).all())
+
+    rows.append(("sharded_serving/bit_identity", float("nan"),
+                 f"invariance_match={ok and scaling_ok} "
+                 f"(tp={TP} x replicas={R} vs single-device: "
+                 f"{len(reqs)} requests on xla/dense + "
+                 f"{len(gate_traffic(cfg))}-request gate streams on the "
+                 f"other dense+paged x xla+fused combos, all "
+                 f"bit-identical; throughput_scaling={scaling_ok})"))
+    return rows

@@ -11,7 +11,7 @@ Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--only SUBSTR[,SUBSTR]]
 file (section, name, us_per_call, derived) — CI uploads the
 ``BENCH_PR2.json`` / ``BENCH_PR3.json`` / ``BENCH_PR4.json`` /
 ``BENCH_PR5.json`` / ``BENCH_PR6.json`` / ``BENCH_PR7.json`` /
-``BENCH_PR9.json`` workflow artifacts from it.  ``--only`` filters sections by
+``BENCH_PR9.json`` / ``BENCH_PR10.json`` workflow artifacts from it.  ``--only`` filters sections by
 case-insensitive title substring (comma-separated alternatives) and
 overrides ``--quick``'s timed-section skip for the sections it selects.
 """
@@ -61,6 +61,8 @@ def main() -> None:
          B.packed_prefill_rows, True),
         ("Serve SLO (TTFT/latency percentiles, fault isolation)",
          B.serve_slo_rows, True),
+        ("Sharded serving (tensor-parallel decode + replica router)",
+         B.sharded_serving_rows, True),
         ("Train step under the fused backend", B.train_step_fused_rows, True),
         ("Fused vs chained posit-division path",
          B.fused_vs_chained_rows, True),

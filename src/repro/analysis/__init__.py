@@ -69,13 +69,17 @@ from .jaxpr_lint import (
     trace_entry,
 )
 from .rules import (
+    DECODE_COLLECTIVE_ALLOWLIST,
     DEFAULT_RULES,
     EXECUTABLE_PROBES,
     PACKED_WARMUP_PROBES,
+    SHARDED_PROBES,
     build_traced_entries,
+    decode_collective_violations,
     lint_kernel_sources,
     run_executable_probes,
     run_packed_warmup_probes,
+    run_sharded_probes,
 )
 
 __all__ = [
@@ -97,11 +101,15 @@ __all__ = [
     "iter_eqns",
     "run_rules",
     "trace_entry",
+    "DECODE_COLLECTIVE_ALLOWLIST",
     "DEFAULT_RULES",
     "EXECUTABLE_PROBES",
     "PACKED_WARMUP_PROBES",
+    "SHARDED_PROBES",
     "build_traced_entries",
+    "decode_collective_violations",
     "lint_kernel_sources",
     "run_executable_probes",
     "run_packed_warmup_probes",
+    "run_sharded_probes",
 ]

@@ -38,6 +38,7 @@ def main(argv=None) -> int:
         run_executable_probes,
         run_packed_warmup_probes,
         run_rules,
+        run_sharded_probes,
     )
 
     t0 = time.time()
@@ -70,7 +71,14 @@ def main(argv=None) -> int:
             fast=args.probes == "fast")
         print(f"[probe] packed-warmup-steady-state: "
               f"{len(warmup_violations)} violations")
-        probe_violations = probe_violations + warmup_violations
+        sharded_violations = run_sharded_probes(fast=args.probes == "fast")
+        import jax as _jax
+        print(f"[probe] sharded serving (tp=2): "
+              f"{len(sharded_violations)} violations"
+              + ("" if _jax.device_count() >= 2
+                 else " (skipped: single device)"))
+        probe_violations = (probe_violations + warmup_violations
+                            + sharded_violations)
 
     all_lint = violations + ast_violations + probe_violations
     ok = datapath["violations"] == 0 and not all_lint
@@ -82,7 +90,8 @@ def main(argv=None) -> int:
             "entries": [e.name for e in entries],
             "rules": [r.name for r in DEFAULT_RULES]
             + ["pallas-call-discipline", "one-decode-executable",
-               "packed-warmup-steady-state"],
+               "packed-warmup-steady-state", "sharded-steady-state",
+               "steady-layouts", "decode-collective-lint"],
             "violations": [v.as_json() for v in all_lint],
         },
     }

@@ -63,6 +63,10 @@ __all__ = [
     "EXECUTABLE_PROBES",
     "run_packed_warmup_probes",
     "PACKED_WARMUP_PROBES",
+    "run_sharded_probes",
+    "SHARDED_PROBES",
+    "DECODE_COLLECTIVE_ALLOWLIST",
+    "decode_collective_violations",
 ]
 
 
@@ -462,4 +466,116 @@ def run_packed_warmup_probes(
                 f"new executables: {grew} — a steady-state pack shape "
                 "escaped the warmup bucket enumeration and admission will "
                 "retrace in production"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sharded-serving probes: steady layouts, zero retrace, exact collectives
+# ---------------------------------------------------------------------------
+
+#: every cross-shard communication primitive the walker recognizes
+_COLLECTIVE_PRIMS = frozenset({
+    "psum", "all_reduce", "all_gather", "all_to_all", "ppermute",
+    "pmax", "pmin", "reduce_scatter", "psum_scatter",
+    "sharding_constraint", "reshard",
+})
+
+#: the ONLY collectives allowed in the sharded decode hot path.  Every
+#: cross-shard combine in models/layers is an exact all-gather (fixed-order
+#: group sums, embed owner-select, logits concat are pure data movement +
+#: replicated arithmetic) — a psum/reduce_scatter here would reintroduce a
+#: TP-degree-dependent reduction order and break bit-identity; a
+#: sharding_constraint/reshard would mean a layout escaped the engine's
+#: precomputed specs.
+DECODE_COLLECTIVE_ALLOWLIST = frozenset({"all_gather"})
+
+
+def decode_collective_violations(eng, name: str = "decode",
+                                 allow=DECODE_COLLECTIVE_ALLOWLIST
+                                 ) -> List[Violation]:
+    """Walk the sharded engine's decode jaxpr; any communication primitive
+    outside ``allow`` is a violation (see DECODE_COLLECTIVE_ALLOWLIST)."""
+    import collections as _c
+
+    counts: _c.Counter = _c.Counter()
+    for eqn in iter_eqns(eng.decode_jaxpr()):
+        prim = getattr(eqn.primitive, "name", str(eqn.primitive))
+        if prim in _COLLECTIVE_PRIMS and prim not in allow:
+            counts[prim] += 1
+    return [Violation(
+        "decode-collective-lint", name,
+        f"decode hot path contains {n} {prim!r} op(s); only "
+        f"{sorted(allow)} are allowed — a reduction collective makes "
+        "token bits depend on the TP degree, a reshard means a layout "
+        "escaped the engine's precomputed specs")
+        for prim, n in sorted(counts.items())]
+
+
+# (probe name, kv_layout) — both cache layouts run the sharded decode path
+# through different executables, so both are probed.
+SHARDED_PROBES: Tuple[Tuple[str, str], ...] = (
+    ("sharded/dense-kv", "dense"),
+    ("sharded/paged-kv", "paged"),
+)
+
+
+def run_sharded_probes(
+        probes: Optional[Iterable[Tuple[str, str]]] = None,
+        fast: bool = False, tp: int = 2) -> List[Violation]:
+    """Sharded-engine extension of the steady-state probes (PR 10).
+
+    For each probe a TP-sharded engine (``tp`` devices, one replica) is
+    warmed up and then serves the heterogeneous stream; three invariants
+    are enforced per replica:
+
+      * ``sharded-steady-state``   — the post-warmup ``executable_counts``
+        census is UNCHANGED by serving (zero recompilation per replica);
+      * ``steady-layouts``         — every param/cache leaf still carries
+        the sharding precomputed at engine construction (no implicit
+        resharding entered the hot loop);
+      * ``decode-collective-lint`` — the decode jaxpr contains no
+        communication primitive outside the exact-all-gather allowlist.
+
+    Needs >= ``tp`` devices (the CI ``multi-device`` job forces 8 host
+    devices via XLA_FLAGS); returns [] — skipped, not failed — below that.
+    """
+    if jax.device_count() < tp:
+        return []
+    from repro.configs import get_config
+    from repro.launch.mesh import serve_meshes
+    from repro.models import transformer as T
+    from repro.serve import Request, ServeConfig, ServeEngine
+
+    probes = tuple(SHARDED_PROBES if probes is None else probes)
+    if fast:
+        probes = probes[:1]
+    out: List[Violation] = []
+    for name, layout in probes:
+        # smoke smollm has 3 heads; resize to a TP-divisible head layout
+        # (tp_groups pins the contraction order for bit-identity)
+        cfg = get_config("smollm-360m", smoke=True).replace(
+            n_heads=4, n_kv_heads=2, head_dim=32, tp_groups=tp)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        mesh = serve_meshes(tp, 1)[0]
+        # packed_prefill, like the packed-warmup probes: the paged SOLO
+        # path deliberately keys prefill on the raw (plen, t0) pair (see
+        # ServeEngine._plan) which no finite warmup can enumerate
+        eng = ServeEngine(cfg, params,
+                          ServeConfig(max_batch=2, max_seq=64,
+                                      kv_layout=layout,
+                                      packed_prefill=True), mesh=mesh)
+        before = eng.warmup()
+        eng.serve([Request(p, max_new=m) for p, m in _STREAM])
+        after = eng.executable_counts()
+        if before != after:
+            grew = {k: (before.get(k, 0), after[k])
+                    for k in after if after[k] != before.get(k, 0)}
+            out.append(Violation(
+                "sharded-steady-state", name,
+                f"post-warmup serve compiled new executables on the tp={tp} "
+                f"engine: {grew} — a sharded shape escaped warmup and every "
+                "replica will retrace in production"))
+        for v in eng.steady_layout_violations():
+            out.append(Violation("steady-layouts", name, v))
+        out.extend(decode_collective_violations(eng, name))
     return out

@@ -15,19 +15,86 @@ Sharding policy (see DESIGN.md §7):
 
 from __future__ import annotations
 
-from typing import Tuple
+import math
+from typing import List, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 from repro.models.sharding import make_rules
 
 
-def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+def derive_mesh_shape(n_devices: int, *, multi_pod: bool = False,
+                      max_model: int = 16) -> Tuple[Tuple[int, ...],
+                                                    Tuple[str, ...]]:
+    """Factor ``n_devices`` into a mesh shape instead of hardcoding one.
+
+    The model axis takes the largest power of two that divides the device
+    count (capped at ``max_model`` — TP beyond ~16 chips loses to exposed
+    collective latency on every arch here), the data axis absorbs the
+    rest, and ``multi_pod`` peels a leading pod axis of 2.  256 devices
+    therefore reproduce the historical ``(16, 16)`` / ``(2, 16, 16)``
+    defaults, while 1- and 8-device hosts get ``(1, 1)`` / ``(1, 8)``.
+    """
+    if n_devices < 1:
+        raise ValueError(f"need at least one device, got {n_devices}")
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    rem = n_devices
+    pod = ()
+    if multi_pod:
+        if rem % 2:
+            raise ValueError(
+                f"multi_pod mesh needs an even device count, got {rem}")
+        pod, rem = (2,), rem // 2
+    model = 1
+    while model * 2 <= max_model and rem % (model * 2) == 0:
+        model *= 2
+    return pod + (rem // model, model), axes
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         shape: Optional[Sequence[int]] = None) -> Mesh:
+    """Build the serving/training mesh over every visible device.
+
+    By default the shape is DERIVED from ``jax.device_count()`` (see
+    :func:`derive_mesh_shape`) so the same entry point works on 1, 8, or
+    512 devices; pass ``shape=`` to pin an explicit factorization (its
+    product must equal the device count).
+    """
+    n = jax.device_count()
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if shape is not None:
+        shape = tuple(int(s) for s in shape)
+        if len(shape) != len(axes):
+            raise ValueError(
+                f"shape {shape} must have one entry per axis {axes}")
+        if math.prod(shape) != n:
+            raise ValueError(
+                f"mesh shape {shape} needs {math.prod(shape)} devices "
+                f"but {n} are visible")
+    else:
+        shape, axes = derive_mesh_shape(n, multi_pod=multi_pod)
     return jax.make_mesh(shape, axes)
+
+
+def serve_meshes(tp: int, replicas: int, *, devices=None) -> List[Mesh]:
+    """Disjoint single-axis ``("model",)`` submeshes for engine replicas.
+
+    Replica ``r`` owns devices ``[r*tp, (r+1)*tp)`` — tensor parallelism
+    inside a replica, data parallelism (independent engines behind the
+    :class:`~repro.serve.router.ReplicaRouter`) across them.
+    """
+    if tp < 1 or replicas < 1:
+        raise ValueError(f"tp={tp} and replicas={replicas} must be >= 1")
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if len(devices) < tp * replicas:
+        raise ValueError(
+            f"tp={tp} x replicas={replicas} needs {tp * replicas} devices "
+            f"but only {len(devices)} are visible")
+    return [Mesh(np.asarray(devices[r * tp:(r + 1) * tp]), ("model",))
+            for r in range(replicas)]
 
 
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:

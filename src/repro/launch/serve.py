@@ -10,7 +10,14 @@ summary: TTFT / per-token latency percentiles and the finish-reason mix.
 ``--packed-prefill`` admits queue-head prompts as ONE segment-masked
 packed prefill per ``(bucket, pack-size)`` bin and ``--warmup``
 AOT-compiles every bin's executable up front — together the A/B side of
-per-request admission (outputs are bit-identical either way)."""
+per-request admission (outputs are bit-identical either way).
+
+``--tp N`` shards each engine over an N-device ``("model",)`` mesh
+(requires ``--tp-groups``, which also fixes the contraction-group
+numerics so TP degrees stay bit-identical); ``--replicas R`` runs R such
+engines on disjoint device subsets behind a :class:`ReplicaRouter`;
+``--emit-async`` drains the event stream through the detokenize-thread
+worker so printing never stalls decode."""
 
 from __future__ import annotations
 
@@ -22,8 +29,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serve import (FinishEvent, Request, ServeConfig, ServeEngine,
-                         TokenEvent)
+from repro.serve import (FinishEvent, ReplicaRouter, Request, ServeConfig,
+                         ServeEngine, TokenEvent, stream_async)
 
 
 def _pct(xs, q):
@@ -84,29 +91,66 @@ def main():
     ap.add_argument("--strict", action="store_true",
                     help="legacy raising behavior: invalid requests and "
                          "overflow raise instead of shedding")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree per engine: shard params "
+                         "and KV over a TP-device ('model',) mesh "
+                         "(decoded tokens stay bit-identical to --tp 1 "
+                         "for the same --tp-groups)")
+    ap.add_argument("--tp-groups", type=int, default=0,
+                    help="fixed contraction-group count for the sharded "
+                         "head/ffn reductions (default: --tp when --tp>1); "
+                         "set it to the LARGEST TP degree you compare "
+                         "across so every degree is bit-identical")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas on disjoint device "
+                         "subsets behind a least-loaded ReplicaRouter")
+    ap.add_argument("--emit-async", action="store_true",
+                    help="drain the event stream on a detokenize worker "
+                         "thread behind a bounded backlog queue (decode "
+                         "stepping decoupled from print/emit latency); "
+                         "implies --stream")
     args = ap.parse_args()
 
     # serving limits ride on the model config (get_config overrides), so no
     # ad hoc ServeConfig mutation here
+    if args.emit_async:
+        args.stream = True
+    if args.static and (args.tp > 1 or args.replicas > 1):
+        ap.error("--static serves one fixed-batch engine; use the "
+                 "continuous scheduler with --tp/--replicas")
     cfg = get_config(args.arch, smoke=args.smoke,
                      fused=args.attn_backend == "fused",
                      max_batch=args.batch, max_seq=args.max_seq)
     if args.posit_kv:
         cfg = cfg.with_numerics(kv_cache_format=args.posit_kv)
+    if args.tp > 1 or args.tp_groups:
+        cfg = cfg.replace(tp_groups=args.tp_groups or args.tp)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params,
-                      ServeConfig.from_model(
-                          cfg, temperature=args.temperature,
-                          kv_layout=args.kv_layout,
-                          block_size=args.block_size,
-                          max_queue=args.max_queue,
-                          max_queue_wait_ms=args.max_queue_wait_ms,
-                          packed_prefill=args.packed_prefill,
-                          strict=args.strict))
+    sc = ServeConfig.from_model(
+        cfg, temperature=args.temperature,
+        kv_layout=args.kv_layout,
+        block_size=args.block_size,
+        max_queue=args.max_queue,
+        max_queue_wait_ms=args.max_queue_wait_ms,
+        packed_prefill=args.packed_prefill,
+        strict=args.strict)
+    if args.tp > 1 or args.replicas > 1:
+        from repro.launch.mesh import serve_meshes
+        meshes = serve_meshes(args.tp, args.replicas)
+        engines = [ServeEngine(cfg, params, sc,
+                               mesh=m if args.tp > 1 else None)
+                   for m in meshes]
+        eng = ReplicaRouter(engines) if args.replicas > 1 else engines[0]
+        print(f"# topology: tp={args.tp} x replicas={args.replicas} over "
+              f"{args.tp * args.replicas}/{jax.device_count()} devices")
+    else:
+        eng = ServeEngine(cfg, params, sc)
     if args.warmup:
         t0 = time.perf_counter()
         census = eng.warmup(temperature=args.temperature or None)
-        print(f"# warmup: {sum(census.values())} executables compiled in "
+        n_exec = (sum(sum(c.values()) for c in census)
+                  if isinstance(census, list) else sum(census.values()))
+        print(f"# warmup: {n_exec} executables compiled in "
               f"{time.perf_counter() - t0:.2f}s")
 
     # a mixed-length request stream: more requests than slots, ragged
@@ -133,7 +177,9 @@ def main():
     if args.stream:
         for r in reqs:
             eng.submit(r)
-        for ev in eng.serve_stream():
+        stream = (stream_async(eng) if args.emit_async
+                  else eng.serve_stream())
+        for ev in stream:
             if isinstance(ev, TokenEvent):
                 print(f"req{ev.rid} += {ev.token}")
             elif isinstance(ev, FinishEvent):

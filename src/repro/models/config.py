@@ -63,6 +63,22 @@ class ModelConfig:
     tp_disable: bool = False     # replicate over the model axis (pure DP)
     attn_q_chunk: int = 1024
     attn_kv_chunk: int = 1024
+    # --- serving tensor parallelism (the sharded serve engine sets
+    #     tp_axis/tp_size on its private compute config; tp_groups is the
+    #     USER-facing knob and must match between a sharded engine and any
+    #     reference engine whose outputs are bit-compared against it) ---
+    tp_axis: Optional[str] = None   # shard_map mesh axis the decode/prefill
+    #                                 bodies run under (None = unsharded)
+    tp_size: int = 1                # static degree of that axis
+    tp_groups: int = 0              # fixed contraction-group count for the
+    #                                 attention-output (heads) and MLP (d_ff)
+    #                                 reductions: partials are combined in a
+    #                                 FIXED order independent of the TP
+    #                                 degree, so grouped results are
+    #                                 bit-identical at TP = 1, 2, ... as long
+    #                                 as tp_groups itself is unchanged.
+    #                                 0 = single-einsum contraction (the
+    #                                 historical numerics).
     # --- serving defaults (ServeConfig.from_model reads these; override
     #     via get_config(name, max_batch=..., max_seq=...) instead of
     #     mutating ServeConfig ad hoc in launchers) ---
@@ -103,6 +119,29 @@ class ModelConfig:
         if self.attn_bwd not in ("fused", "reference"):
             raise ValueError(f"unknown attn_bwd {self.attn_bwd!r}; "
                              "expected 'fused' or 'reference'")
+        if self.tp_groups and self.n_heads and (
+                self.n_heads % self.tp_groups or self.d_ff % self.tp_groups):
+            raise ValueError(
+                f"tp_groups={self.tp_groups} must divide both "
+                f"n_heads={self.n_heads} and d_ff={self.d_ff}")
+        if self.tp_axis is not None:
+            if not self.tp_groups:
+                raise ValueError(
+                    "tp_axis requires tp_groups > 0: sharded contractions "
+                    "combine in fixed group order so outputs stay "
+                    "bit-identical across TP degrees; set the SAME "
+                    "tp_groups on any reference config you compare against")
+            if self.tp_size < 1 or self.tp_groups % self.tp_size:
+                raise ValueError(
+                    f"tp_size={self.tp_size} must divide "
+                    f"tp_groups={self.tp_groups}")
+            for nm, v in (("n_heads", self.n_heads),
+                          ("n_kv_heads", self.n_kv_heads),
+                          ("d_ff", self.d_ff),
+                          ("padded_vocab", self.padded_vocab)):
+                if v % self.tp_size:
+                    raise ValueError(
+                        f"tp_size={self.tp_size} must divide {nm}={v}")
 
     @property
     def padded_vocab(self) -> int:

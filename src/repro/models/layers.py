@@ -270,12 +270,73 @@ def flash_attention(q, k, v, cfg: ModelConfig, *, causal: bool,
     return out
 
 
+# ------------------------------------------- TP-invariant contractions
+#
+# The sharded serve engine runs these layers inside ``shard_map`` over
+# ``cfg.tp_axis``.  Most of the datapath is TRIVIALLY bit-identical per
+# shard (projections are output-sharded: each shard computes a head/ffn
+# SLICE of the very same einsum, and softmax is per-head) — but the two
+# contractions that REDUCE over a sharded dimension (attention output
+# over heads, MLP down-projection over d_ff) are not associativity-safe:
+# a per-shard partial sum + psum would combine in a different order than
+# the single-device einsum and change low bits.  ``cfg.tp_groups`` fixes
+# this by splitting those reductions into a static number of groups
+# combined in a FIXED ascending order at every TP degree (the reference
+# engine computes the same grouped form at TP=1), which is what the
+# sharded-serving bit-identity gate rides on.
+
+
+def _tp_local_groups(cfg: ModelConfig) -> int:
+    return cfg.tp_groups // (cfg.tp_size if cfg.tp_axis is not None else 1)
+
+
+def tp_group_combine(partials, cfg: ModelConfig):
+    """Fixed-order combine of per-group partial sums (leading group axis).
+
+    Under ``cfg.tp_axis`` each shard holds ``tp_groups / tp_size`` group
+    partials; they are all-gathered (an EXACT concatenation — no
+    arithmetic) so every device sums ALL ``tp_groups`` partials locally
+    in ascending group order.  The summation tree is therefore identical
+    at every TP degree, making the result bit-identical across degrees.
+    A plain ``psum`` of per-shard sums would NOT have this property:
+    f32/bf16 addition is not associative.
+    """
+    if cfg.tp_axis is not None:
+        partials = jax.lax.all_gather(partials, cfg.tp_axis, axis=0,
+                                      tiled=True)
+    out = partials[0]
+    for g in range(1, partials.shape[0]):
+        out = out + partials[g]
+    return out
+
+
+def wo_project(o, wo, cfg: ModelConfig):
+    """Attention output projection ``einsum("bshk,hkd->bsd", o, wo)``.
+
+    With ``cfg.tp_groups`` set, the head contraction is split into fixed
+    head groups combined in ascending order (:func:`tp_group_combine`);
+    under ``cfg.tp_axis`` each shard contracts its local head slice —
+    that axis' share of the same global groups — so the sharded result
+    is bit-identical to the reference grouped one.  ``tp_groups == 0``
+    keeps the historical single-einsum numerics.
+    """
+    wo = wo.astype(o.dtype)
+    if not cfg.tp_groups:
+        return jnp.einsum("bshk,hkd->bsd", o, wo)
+    gl = _tp_local_groups(cfg)
+    B, S, H, hd = o.shape
+    og = o.reshape(B, S, gl, H // gl, hd)
+    wg = wo.reshape(gl, H // gl, hd, wo.shape[-1])
+    parts = jnp.einsum("bsghk,ghkd->gbsd", og, wg)
+    return tp_group_combine(parts, cfg)
+
+
 def attention_block(params, x, cfg: ModelConfig, positions, *, causal=True,
                     window=0, rope=True):
     q, k, v = _qkv(params, x, cfg, positions, rope=rope)
     o = flash_attention(q, k, v, cfg, causal=causal, window=window)
     o = constrain(o, "batch", "seq", "heads", "head_dim")
-    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+    return wo_project(o.astype(x.dtype), params["wo"], cfg)
 
 
 def cross_attention_block(params, x, mem_kv, cfg: ModelConfig):
@@ -284,7 +345,7 @@ def cross_attention_block(params, x, mem_kv, cfg: ModelConfig):
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
     k, v = mem_kv
     o = flash_attention(q, k.astype(dt), v.astype(dt), cfg, causal=False)
-    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    return wo_project(o.astype(dt), params["wo"], cfg)
 
 
 def _decode_project(params, x, pos, start, cfg: ModelConfig, rope: bool):
@@ -338,7 +399,9 @@ def _decode_attend_xla(q, ck, cv, pos, start, window: int, cfg: ModelConfig):
     scores over rows [start[b], pos[b]] and a posit-divided softmax."""
     dt = q.dtype
     B, S, KV, hd = ck.shape
-    H = cfg.n_heads
+    # head counts from the OPERANDS, not cfg: under shard_map both q and the
+    # cache carry the per-shard head slice, and cfg.n_heads is global
+    H = q.shape[2]
     G = H // KV
     qg = q.reshape(B, 1, KV, G, hd)
     s = jnp.einsum("bkgd,bskd->bkgs", qg[:, 0], ck.astype(dt))
@@ -393,7 +456,7 @@ def decode_attention(params, x, cache_k, cache_v, pos, cfg: ModelConfig,
         o = _decode_attend_fused(q, ck, cv, pos, start, cfg)
     else:
         o = _decode_attend_xla(q, ck, cv, pos, start, window, cfg)
-    out = jnp.einsum("bshk,hkd->bsd", o.astype(dt), params["wo"].astype(dt))
+    out = wo_project(o.astype(dt), params["wo"], cfg)
     return out, ck, cv
 
 
@@ -441,7 +504,7 @@ def decode_attention_paged(params, x, pool_k, pool_v, block_tables, pos,
         ck = pk[block_tables].reshape(B, S, KV, hd)
         cv = pv[block_tables].reshape(B, S, KV, hd)
         o = _decode_attend_xla(q, ck, cv, pos, start, 0, cfg)
-    out = jnp.einsum("bshk,hkd->bsd", o.astype(dt), params["wo"].astype(dt))
+    out = wo_project(o.astype(dt), params["wo"], cfg)
     return out, pk, pv
 
 
@@ -485,7 +548,7 @@ def prefill_attention(params, x, cache_k, cache_v, cfg: ModelConfig,
                                       (0, 0, 0, 0))
     o = flash_attention(q, k, v, cfg, causal=True, kv_start=start,
                         seg_q=seg_q, seg_kv=seg_kv, seg_len=seg_len)
-    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    out = wo_project(o.astype(dt), params["wo"], cfg)
     return out, ck, cv
 
 
@@ -533,7 +596,7 @@ def prefill_suffix_attention(params, x, cache_k, cache_v, cfg: ModelConfig,
         k_all, v_all = k, v
     o = flash_attention(q, k_all, v_all, cfg, causal=True, q_offset=t0,
                         kv_start=start)
-    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt))
+    out = wo_project(o.astype(dt), params["wo"], cfg)
     return out, ck, cv
 
 
@@ -556,7 +619,17 @@ def mlp_block(params, x, cfg: ModelConfig):
     g = jnp.einsum("bsd,df->bsf", x, params["w3"].astype(dt))
     h = jax.nn.silu(h) * g
     h = constrain(h, "batch", "seq", "ffn")
-    return jnp.einsum("bsf,fd->bsd", h, params["w2"].astype(dt))
+    w2 = params["w2"].astype(dt)
+    if not cfg.tp_groups:
+        return jnp.einsum("bsf,fd->bsd", h, w2)
+    # grouped fixed-order down-projection: the d_ff reduction is split into
+    # tp_groups slices combined in ascending order (TP-degree-invariant
+    # bits — see tp_group_combine)
+    gl = _tp_local_groups(cfg)
+    B, S, F = h.shape
+    parts = jnp.einsum("bsgf,gfd->gbsd", h.reshape(B, S, gl, F // gl),
+                       w2.reshape(gl, F // gl, w2.shape[-1]))
+    return tp_group_combine(parts, cfg)
 
 
 # ----------------------------------------------------------------- MoE
@@ -644,11 +717,31 @@ def embed(params, tokens, cfg: ModelConfig):
     # NOTE: no with_sharding_constraint here — re-sharding a gather output
     # from a model-sharded table inside a scan body trips an XLA SPMD
     # partitioner verifier bug (see DESIGN.md); GSPMD propagation handles it.
-    return params["tok"].astype(COMPUTE_DTYPE)[tokens]
+    tok = params["tok"].astype(COMPUTE_DTYPE)
+    if cfg.tp_axis is None:
+        return tok[tokens]
+    # vocab-sharded table under shard_map: every shard gathers its LOCAL
+    # rows, the per-shard gathers are all-gathered, and each token SELECTS
+    # its owner shard's row — pure data movement, no arithmetic, so the
+    # embedded activations are bit-identical to the unsharded gather.
+    vl = tok.shape[0]
+    owner = tokens // vl                       # shard that owns each token
+    rows = jax.lax.all_gather(tok[tokens % vl], cfg.tp_axis, axis=0,
+                              tiled=False)
+    x = rows[0]
+    for t in range(1, cfg.tp_size):
+        x = jnp.where((owner == t)[..., None], rows[t], x)
+    return x
 
 
 def logits(params, x, cfg: ModelConfig):
     w = params["tok"] if cfg.tie_embeddings else params["head"]
     w = w.T if cfg.tie_embeddings else w
     out = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    if cfg.tp_axis is not None:
+        # vocab-sharded head: each shard computes its logit slice and the
+        # concat (all-gather over the vocab axis) is exact, so the full
+        # logit vector is bit-identical to the unsharded einsum
+        out = jax.lax.all_gather(out, cfg.tp_axis, axis=out.ndim - 1,
+                                 tiled=True)
     return constrain(out, "batch", "seq", "vocab")

@@ -785,7 +785,7 @@ def _ring_decode_attention(p, x, c, pos, ring, cfg: ModelConfig, start=None):
     s = jnp.where(valid[:, None, None], s, -1e30)
     pr = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", pr.astype(dt), cv_o.astype(dt)).reshape(B, 1, H, hd)
-    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+    out = L.wo_project(o.astype(dt), p["wo"], cfg)
     return out, ck, cv
 
 

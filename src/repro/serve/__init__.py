@@ -8,3 +8,5 @@ from .engine import (  # noqa: F401
     ServeResult,
     TokenEvent,
 )
+from .emit import stream_async  # noqa: F401
+from .router import ReplicaRouter  # noqa: F401

@@ -1,0 +1,80 @@
+"""Detokenize/emit worker thread for serve streams.
+
+``stream_async`` drives an engine's (or router's) ``serve_stream()``
+generator on a dedicated worker thread and hands its events to the
+caller through a BOUNDED queue — MaxText's detokenize-thread pattern.
+The device-driving loop (prefill dispatch, decode steps, the one
+per-step host sync) runs on the worker, so a consumer that spends
+milliseconds per token on detokenization, formatting, or I/O no longer
+stretches the decode step interval: the worker keeps stepping ahead
+until ``backlog`` events are waiting, then blocks (bounded memory,
+decode throughput still decoupled from any emit hiccup shorter than
+the backlog drain time).
+
+Contract:
+
+  * Every event of the stream is delivered exactly once, in stream
+    order — the queue is a FIFO and the worker is the stream's single
+    consumer.
+  * An exception raised inside the stream (strict-mode shed, engine
+    fault) is re-raised in the CONSUMER's thread at the point in the
+    event order where it occurred.
+  * The engine's session state is mutated from the worker thread, so
+    while a ``stream_async`` iterator is live, do not call ``submit``
+    / ``snapshot`` / another stream on the same engine from other
+    threads — submit everything first, then drain (the CLI's
+    ``--emit-async`` does exactly this).  Abandoning the iterator
+    early stops the worker at its next yield boundary.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+_DONE = object()     # stream exhausted
+_ERROR = object()    # (sentinel, exception) pair follows in the tuple
+
+
+def stream_async(source, backlog: int = 64,
+                 strict: Optional[bool] = None) -> Iterator:
+    """Yield ``source.serve_stream(strict=...)`` events via a worker.
+
+    ``source`` is anything with a ``serve_stream`` method (a
+    :class:`ServeEngine` or a :class:`ReplicaRouter`); ``backlog``
+    bounds the number of not-yet-consumed events held in memory.
+    """
+    if backlog < 1:
+        raise ValueError(f"backlog must be >= 1, got {backlog}")
+    q: queue.Queue = queue.Queue(maxsize=backlog)
+    stop = threading.Event()
+
+    def worker():
+        try:
+            for ev in source.serve_stream(strict=strict):
+                while not stop.is_set():
+                    try:
+                        q.put((None, ev), timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                if stop.is_set():
+                    return
+            q.put((_DONE, None))
+        except BaseException as e:  # re-raised on the consumer side
+            q.put((_ERROR, e))
+
+    t = threading.Thread(target=worker, name="serve-emit", daemon=True)
+    t.start()
+    try:
+        while True:
+            tag, val = q.get()
+            if tag is _DONE:
+                break
+            if tag is _ERROR:
+                raise val
+            yield val
+    finally:
+        stop.set()
+        t.join(timeout=5.0)

@@ -248,6 +248,53 @@ restores the legacy raising behavior for tests and batch drivers that
 prefer exceptions: invalid requests, queue overflow, and unsatisfiable
 paged admissions raise ``ValueError`` instead of shedding.
 
+Mesh-sharded serving (tensor parallel x data parallel)
+======================================================
+Passing ``mesh=`` (a single-axis ``("model",)`` Mesh, e.g. one entry of
+:func:`repro.launch.mesh.serve_meshes`) turns the engine tensor-parallel:
+every jitted executable above — decode step, bucketed/packed prefill,
+slot scatter, the paged pool writers — is wrapped in ``shard_map`` over
+the SAME per-arch partition specs the launch layer derives
+(``param_pspecs`` / ``cache_pspecs``), so each TP shard runs the
+unchanged kernels on its head/d_ff/vocab slice and the sharded engine is
+the single-device engine times ``tp``, not a different program.
+
+  * **Exact collectives only.**  The TP model path communicates solely
+    through fixed-order ``all_gather`` combines (attention-out head
+    groups, MLP ``d_ff`` groups, vocab-sharded embed owner-select and
+    logits concat) — never ``psum``-style reductions whose ordering the
+    compiler picks.  With ``ModelConfig.tp_groups`` pinning the
+    contraction-group count, a TP engine's tokens are BIT-IDENTICAL to
+    the unsharded engine (and hence to solo runs) for every feature
+    above: dense/paged layouts, packed prefill, mid-flight admission,
+    faults, snapshot/restore (a snapshot taken on one topology restores
+    onto any other with the same ``tp_groups``).  The
+    ``decode-collective-lint`` analysis rule walks the decode jaxpr and
+    fails CI on any collective outside the ``all_gather`` allowlist.
+  * **Resharding stays out of the hot loop.**  ``__init__`` computes the
+    param/cache layouts ONCE (normalized so ``device_put`` placements
+    and executable outputs share jit cache keys), places params, and
+    every cache the session creates (:meth:`restore` included) through
+    them.  Steady state is therefore zero-transfer and zero-retrace:
+    :meth:`steady_layout_violations` asserts every live leaf still
+    carries its precomputed sharding, and the ``sharded-steady-state``
+    probe asserts a post-:meth:`warmup` serve compiles nothing new.
+  * **Data parallelism** is replica routing, not batch sharding: a
+    :class:`repro.serve.router.ReplicaRouter` owns N independent engines
+    on disjoint device subsets, routes ``submit()`` least-loaded, and
+    merges the per-replica streams behind the single-engine surface —
+    aggregate throughput scales with replicas while per-request
+    semantics (FinishReason, deadlines, quarantine, bit-identity) are
+    each replica's own.  :func:`repro.serve.emit.stream_async` (CLI
+    ``--emit-async``) moves consumer-side detokenize/emit cost off the
+    decode thread behind a bounded queue.
+
+Sharded serving currently requires the dense attention family,
+``head_mode == "heads"`` (q and kv heads divisible by ``tp``), and
+``tp_groups > 0``; ``tests/test_sharded_serve.py`` and the CI
+``multi-device`` job (8 forced host devices, ``BENCH_PR10.json``) gate
+the contract.
+
 Static guarantees (proved, not sampled)
 =======================================
 ``python -m repro.analysis`` (the CI ``static-analysis`` job) proves the
@@ -281,6 +328,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as PSpec
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
@@ -681,15 +730,16 @@ class _ServeState:
         self.last_tok_ms = np.zeros(B, np.float64)
         # caches
         if eng._paged:
-            self.cache = (T.init_paged_cache(eng.cfg, eng._num_blocks,
-                                             sc.block_size)
+            self.cache = (eng._place_cache(
+                T.init_paged_cache(eng.cfg, eng._num_blocks, sc.block_size))
                           if init_cache else None)
             self.alloc = BlockAllocator(eng._num_blocks, sc.block_size)
             self.bt_host = np.zeros((B, eng._max_blocks), np.int32)
             self.slot_blocks: List[List[int]] = [[] for _ in range(B)]
             self.mini_zeros: Dict[int, object] = {}
         else:
-            self.cache = (T.init_cache(eng.cfg, B, sc.max_seq)
+            self.cache = (eng._place_cache(T.init_cache(eng.cfg, B,
+                                                        sc.max_seq))
                           if init_cache else None)
             self.mini_zero = None     # built lazily (first admission)
         # packed-prefill zero mini templates, keyed (batch, rows): prefill
@@ -722,13 +772,100 @@ class _ServeState:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params,
                  sc: Optional[ServeConfig] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 mesh: Optional[Mesh] = None):
         self.cfg = cfg
-        self.params = params
         self.sc = sc if sc is not None else ServeConfig.from_model(cfg)
         # injectable wall clock (seconds) so deadline tests run
         # deterministically without sleeping
         self._clock = time.monotonic if clock is None else clock
+
+        # --------------------------------------- tensor-parallel serve mesh
+        # With ``mesh`` (a single-axis ("model",) Mesh, e.g. one entry of
+        # launch.mesh.serve_meshes), every model executable below is
+        # shard_map'd over it: weights and KV pools are partitioned on
+        # their head/vocab/ffn axes per launch.mesh's spec tables, each
+        # shard runs the SAME kernels on its head slice, and the only
+        # cross-shard ops are the fixed-order all-gathers in models/layers
+        # — so decoded tokens are bit-identical to an unsharded engine
+        # with the same ``cfg.tp_groups``.  Param and decode-state layouts
+        # are precomputed HERE, once: the hot loop never reshards (the
+        # analysis layout probe asserts this).
+        self._mesh = mesh
+        self._tp = 1
+        self._pspec = self._cspec = None
+        self._param_sharding = self._cache_sharding = None
+        mcfg = cfg
+        if mesh is not None:
+            # lazy: repro.launch imports repro.serve (launcher circularity)
+            from repro.launch import mesh as MX
+            if tuple(mesh.axis_names) != ("model",):
+                raise ValueError(
+                    f"serve mesh must be a single ('model',) axis mesh, got "
+                    f"axes {tuple(mesh.axis_names)}; data parallelism is "
+                    "expressed as ReplicaRouter replicas on disjoint "
+                    "device subsets (launch.mesh.serve_meshes)")
+            tp = int(mesh.shape["model"])
+            if cfg.family != "dense":
+                raise NotImplementedError(
+                    f"tensor-parallel serving supports family='dense' "
+                    f"(got {cfg.family!r}); run other families as "
+                    "unsharded replicas behind a ReplicaRouter")
+            if MX.head_mode(cfg, tp) != "heads":
+                raise ValueError(
+                    f"tp={tp} must divide n_heads={cfg.n_heads} and "
+                    f"n_kv_heads={cfg.n_kv_heads} (head-sharded serving; "
+                    "head_dim/repl-kv modes are training-only)")
+            if not cfg.tp_groups:
+                raise ValueError(
+                    "sharded serving needs cfg.tp_groups > 0: contractions "
+                    "over sharded dims combine in a fixed group order so "
+                    "outputs are bit-identical across TP degrees — set the "
+                    "SAME tp_groups on any reference engine you compare "
+                    "against (e.g. tp_groups equal to the largest TP "
+                    "degree you deploy)")
+            self._tp = tp
+            mcfg = cfg.replace(tp_axis="model", tp_size=tp)
+
+            def strip(spec):
+                # drop trailing Nones: executable outputs carry the elided
+                # form, and jit keys on sharding EQUALITY — a full-rank
+                # spec from device_put would retrace every executable once
+                # per (fresh-template vs step-output) input
+                parts = list(spec)
+                while parts and parts[-1] is None:
+                    parts.pop()
+                return PSpec(*parts)
+
+            def specs(tree):
+                return jax.tree.map(strip, tree,
+                                    is_leaf=lambda x: isinstance(x, PSpec))
+
+            self._pspec = specs(MX.param_pspecs(cfg, params, mesh))
+            # dense mini/full caches and paged pools share one tree
+            # structure AND one spec (KV heads at leaf index 3)
+            self._cspec = specs(MX.cache_pspecs(
+                cfg, jax.eval_shape(lambda: T.init_cache(cfg, 1, 16)), mesh,
+                batch_sharded=False))
+            self._param_sharding = MX.named(mesh, self._pspec)
+            self._cache_sharding = MX.named(mesh, self._cspec)
+            params = jax.device_put(params, self._param_sharding)
+        self.params = params
+        self._mcfg = mcfg
+
+        ps, cs, rr = self._pspec, self._cspec, PSpec()
+
+        def sm(fn, in_specs, out_specs):
+            # shard_map over the serve mesh; identity when unsharded.
+            # check_rep=False: the decode body's collectives are the
+            # fixed-order all-gathers in models/layers, whose replication
+            # the rep checker cannot prove through lax.scan
+            if mesh is None:
+                return fn
+            return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False)
+
+        self._sm = sm
         # the persistent cache is donated (argument 1 / 0): it is rebound on
         # every step, and donation keeps a compiled backend from copying the
         # whole B x max_seq multi-layer cache per decode step / admission.
@@ -737,13 +874,16 @@ class ServeEngine:
         # (with_health=True): it rides the same jitted call and the same
         # host transfer, so fault detection costs no extra sync.
         self._decode = jax.jit(
-            lambda p, c, t, i, s: T.decode_step(p, cfg, c, t, i, s,
-                                                with_health=True),
+            sm(lambda p, c, t, i, s: T.decode_step(p, mcfg, c, t, i, s,
+                                                   with_health=True),
+               (ps, cs, rr, rr, rr), (rr, cs, rr)),
             donate_argnums=1)
         self._prefill = jax.jit(
-            lambda p, c, t, s: T.prefill(p, cfg, {"tokens": t}, c, s))
+            sm(lambda p, c, t, s: T.prefill(p, mcfg, {"tokens": t}, c, s),
+               (ps, cs, rr, rr), (rr, cs)))
         self._write_slot = jax.jit(
-            lambda c, m, b: T.write_cache_slot(cfg, c, m, b),
+            sm(lambda c, m, b: T.write_cache_slot(mcfg, c, m, b),
+               (cs, cs, rr), cs),
             donate_argnums=0)
         self._sample_full = jax.jit(self._sample_impl)
         self._sample_greedy = jax.jit(self._greedy_impl)
@@ -788,23 +928,34 @@ class ServeEngine:
             # prefill does not attend, so sharing is disabled there
             self._share = not cfg.numerics.kv_cache_format
             self._decode_paged = jax.jit(
-                lambda p, c, bt, t, i, s: T.decode_step(
-                    p, cfg, c, t, i, s, block_tables=bt, with_health=True),
+                sm(lambda p, c, bt, t, i, s: T.decode_step(
+                       p, mcfg, c, t, i, s, block_tables=bt,
+                       with_health=True),
+                   (ps, cs, rr, rr, rr, rr), (rr, cs, rr)),
                 donate_argnums=1)
+            # static args cannot pass through shard_map: close over them
+            # inside the jit trace (one shard_map per static value, cached
+            # by the jit signature exactly as before)
             self._prefill_t0 = jax.jit(
-                lambda p, c, t, s, t0: T.prefill(p, cfg, {"tokens": t}, c,
-                                                 s, t0),
+                lambda p, c, t, s, t0: sm(
+                    lambda p_, c_, t_, s_: T.prefill(
+                        p_, mcfg, {"tokens": t_}, c_, s_, t0),
+                    (ps, cs, rr, rr), (rr, cs))(p, c, t, s),
                 static_argnums=4)
             self._write_blocks = jax.jit(
-                lambda c, m, bids, first: T.write_cache_blocks(
-                    cfg, c, m, bids, first),
+                sm(lambda c, m, bids, first: T.write_cache_blocks(
+                       mcfg, c, m, bids, first),
+                   (cs, cs, rr, rr), cs),
                 donate_argnums=0)
             self._mini_prefix = jax.jit(
-                lambda c, bids, rows: T.mini_cache_with_prefix(
-                    cfg, c, bids, rows),
+                lambda c, bids, rows: sm(
+                    lambda c_, b_: T.mini_cache_with_prefix(mcfg, c_, b_,
+                                                            rows),
+                    (cs, rr), cs)(c, bids),
                 static_argnums=2)
             self._scatter_pool = jax.jit(
-                lambda c, d, bt: T.scatter_dense_to_pool(cfg, c, d, bt),
+                sm(lambda c, d, bt: T.scatter_dense_to_pool(mcfg, c, d, bt),
+                   (cs, cs, rr), cs),
                 donate_argnums=0)
 
         # -------------------------------------------- packed admission path
@@ -818,32 +969,41 @@ class ServeEngine:
             # sequence, block-diagonal via segment ids; seg_len is static
             # (chunk/tile geometry derives from it)
             self._prefill_packed = jax.jit(
-                lambda p, c, t, pos, seg, last, P: T.prefill_packed(
-                    p, cfg, t, c, pos, seg, last, P),
+                lambda p, c, t, pos, seg, last, P: sm(
+                    lambda p_, c_, t_, pos_, seg_, last_: T.prefill_packed(
+                        p_, mcfg, t_, c_, pos_, seg_, last_, P),
+                    (ps, cs, rr, rr, rr, rr), (rr, cs))(p, c, t, pos, seg,
+                                                        last),
                 static_argnums=6)
             if self._paged:
                 # segment rows -> per-segment pool blocks in one scatter
                 self._scatter_segments = jax.jit(
-                    lambda c, m, bids, P: T.scatter_segments_to_pool(
-                        cfg, c, m, bids, P),
+                    lambda c, m, bids, P: sm(
+                        lambda c_, m_, b_: T.scatter_segments_to_pool(
+                            mcfg, c_, m_, b_, P),
+                        (cs, cs, rr), cs)(c, m, bids),
                     donate_argnums=0, static_argnums=3)
                 # scanned families (moe): batch-axis pack, right-padded
                 # rows at start 0 with per-row last-logit capture
                 self._prefill_ragged = jax.jit(
-                    lambda p, c, t, s, last: T.prefill_batch_ragged(
-                        p, cfg, t, c, s, last))
+                    sm(lambda p, c, t, s, last: T.prefill_batch_ragged(
+                           p, mcfg, t, c, s, last),
+                       (ps, cs, rr, rr, rr), (rr, cs)))
             else:
                 # one fused write of every segment into its slot (rows
                 # beyond the segment zero-fill, matching the solo mini)
                 self._write_slot_segments = jax.jit(
-                    lambda c, m, slots, P: T.write_cache_slot_segments(
-                        cfg, c, m, slots, P),
+                    lambda c, m, slots, P: sm(
+                        lambda c_, m_, s_: T.write_cache_slot_segments(
+                            mcfg, c_, m_, s_, P),
+                        (cs, cs, rr), cs)(c, m, slots),
                     donate_argnums=0, static_argnums=3)
                 # scanned families: (N, P) rows through the existing
                 # batch-capable _prefill, scattered row-per-slot
                 self._write_slots = jax.jit(
-                    lambda c, m, slots: T.write_cache_slots(cfg, c, m,
-                                                            slots),
+                    sm(lambda c, m, slots: T.write_cache_slots(mcfg, c, m,
+                                                               slots),
+                       (cs, cs, rr), cs),
                     donate_argnums=0)
 
     # ------------------------------------------------------------- sampling
@@ -912,6 +1072,72 @@ class ServeEngine:
 
     def _request_key(self, rid: int):
         return jax.random.fold_in(self._base_key, rid)
+
+    # ------------------------------------------------ sharded-layout helpers
+
+    def _place_cache(self, cache):
+        """Commit a cache tree (full, mini, pool — same structure) to the
+        engine's precomputed KV sharding; identity on unsharded engines.
+        Every cache template passes through here at CREATION, so the hot
+        loop's donated executables see exactly the layout they were
+        compiled for and never reshard implicitly."""
+        if self._mesh is None:
+            return cache
+        return jax.device_put(cache, self._cache_sharding)
+
+    def load(self) -> int:
+        """Routing load for the ReplicaRouter: active slots + queued
+        requests of the live session (0 for an idle engine)."""
+        st = self._st
+        if st is None or st.drained:
+            return 0
+        return int(st.sched.active.sum()) + len(st.queue)
+
+    def steady_layout_violations(self) -> List[str]:
+        """Layout probe (sharded engines): every live param/cache leaf must
+        still carry the sharding precomputed at construction — a non-empty
+        return means some step introduced an implicit reshard into the hot
+        loop.  Unsharded engines trivially report []."""
+        if self._mesh is None:
+            return []
+        out: List[str] = []
+
+        def chk(what, tree, shardings):
+            def leaf(path, a, ns):
+                # is_equivalent_to, not ==: a committed array may carry a
+                # spec with trailing Nones elided, which partitions
+                # identically
+                if not a.sharding.is_equivalent_to(ns, a.ndim):
+                    out.append(f"{what}{jax.tree_util.keystr(path)}: "
+                               f"{a.sharding} != {ns}")
+            jax.tree_util.tree_map_with_path(leaf, tree, shardings)
+
+        chk("params", self.params, self._param_sharding)
+        if self._st is not None and self._st.cache is not None:
+            chk("cache", self._st.cache, self._cache_sharding)
+        return out
+
+    def decode_jaxpr(self):
+        """The decode-step jaxpr (paged or dense, whichever this engine
+        serves with), traced at the live signature — the analysis
+        collective lint walks this to assert the sharded hot path contains
+        ONLY the planned exact all-gathers (attention/MLP group combines,
+        embed row exchange, logits concat) and no reduction collectives."""
+        sc = self.sc
+        B = sc.max_batch
+        sds = jax.ShapeDtypeStruct
+        p = jax.tree.map(lambda a: sds(a.shape, a.dtype), self.params)
+        tok = sds((B, 1), jnp.int32)
+        vec = sds((B,), jnp.int32)
+        if self._paged:
+            cache = jax.eval_shape(lambda: T.init_paged_cache(
+                self.cfg, self._num_blocks, sc.block_size))
+            bt = sds((B, self._max_blocks), jnp.int32)
+            return self._decode_paged.trace(p, cache, bt, tok, vec,
+                                            vec).jaxpr
+        cache = jax.eval_shape(lambda: T.init_cache(self.cfg, B,
+                                                    sc.max_seq))
+        return self._decode.trace(p, cache, tok, vec, vec).jaxpr
 
     def _now_ms(self) -> float:
         return self._clock() * 1e3
@@ -1051,7 +1277,7 @@ class ServeEngine:
             starts[i] = plen - len(p)
         start = jnp.asarray(starts)
 
-        cache = T.init_cache(self.cfg, Bw, sc.max_seq)
+        cache = self._place_cache(T.init_cache(self.cfg, Bw, sc.max_seq))
 
         # whole-prompt prefill in one jitted call (chunked attention for
         # dense, scanned decode for the rest) — not plen dispatches
@@ -1067,7 +1293,8 @@ class ServeEngine:
             mb = self._max_blocks
             bt = jnp.asarray(
                 1 + np.arange(Bw * mb, dtype=np.int32).reshape(Bw, mb))
-            pool = T.init_paged_cache(self.cfg, Bw * mb + 1, sc.block_size)
+            pool = self._place_cache(
+                T.init_paged_cache(self.cfg, Bw * mb + 1, sc.block_size))
             cache = self._scatter_pool(pool, cache, bt)
 
         steps = jnp.zeros((Bw,), jnp.int32)
@@ -1319,7 +1546,8 @@ class ServeEngine:
         if st.mini_zero is None:
             # zero batch=1 cache reused by every admission (prefill is
             # pure, so the template never holds a previous request's rows)
-            st.mini_zero = T.init_cache(self.cfg, 1, sc.max_seq)
+            st.mini_zero = self._place_cache(
+                T.init_cache(self.cfg, 1, sc.max_seq))
         toks = np.zeros((1, P), np.int32)
         toks[0, s0:] = r.tokens
         # prefill into a fresh (zero) batch=1 cache, then scatter it
@@ -1388,7 +1616,8 @@ class ServeEngine:
                                      rows)
         else:
             if rows not in st.mini_zeros:
-                st.mini_zeros[rows] = T.init_cache(self.cfg, 1, rows)
+                st.mini_zeros[rows] = self._place_cache(
+                    T.init_cache(self.cfg, 1, rows))
             mini = st.mini_zeros[rows]
         lg, mini = self._prefill_t0(
             self.params, mini,
@@ -1492,7 +1721,8 @@ class ServeEngine:
         each bin shape's template is built once per session and reused)."""
         key = (batch, rows)
         if key not in st.packed_zeros:
-            st.packed_zeros[key] = T.init_cache(self.cfg, batch, rows)
+            st.packed_zeros[key] = self._place_cache(
+                T.init_cache(self.cfg, batch, rows))
         return st.packed_zeros[key]
 
     def _admit_packed_sweep(self, st: _ServeState) -> List:
@@ -2212,7 +2442,7 @@ class ServeEngine:
         st.token_lats = list(snap["token_lats"])
         # jnp.array COPIES the host leaves: the donated decode step may not
         # alias a buffer the snapshot dict still references
-        st.cache = jax.tree.map(jnp.array, snap["cache"])
+        st.cache = self._place_cache(jax.tree.map(jnp.array, snap["cache"]))
         if self._paged:
             st.bt_host = snap["bt_host"].copy()
             st.slot_blocks = [list(b) for b in snap["slot_blocks"]]

@@ -1,0 +1,193 @@
+"""Data-parallel replica routing over independent serve engines.
+
+A :class:`ReplicaRouter` owns N :class:`~repro.serve.engine.ServeEngine`
+replicas — typically one per disjoint device subset from
+``launch.mesh.serve_meshes(tp, replicas)``, each engine tensor-parallel
+inside its own single-axis ``("model",)`` mesh — and presents the same
+``submit()`` / ``serve_stream()`` / ``serve()`` surface as one engine:
+
+  * **Routing** — ``submit()`` picks a replica per request:
+    ``least_loaded`` (default) routes to the engine with the fewest
+    active slots + queued requests (ties to the lowest index, so routing
+    is deterministic for a given traffic history), ``round_robin``
+    cycles.  The router never splits one request across replicas.
+  * **Global rids** — each submit returns a router-scoped rid; events
+    from the per-replica streams are re-numbered before they are yielded
+    so consumers see one coherent id space (per-replica rids remain the
+    engines' own session-local ids).
+  * **Merged stream** — ``serve_stream()`` drains every replica's stream
+    concurrently from the caller's thread, interleaving events
+    round-robin across replicas.  Per-request semantics (FinishReason,
+    deadlines, NaR quarantine, backpressure) are untouched: each replica
+    enforces its own contract and the router only relabels rids.  A
+    replica fault therefore never perturbs requests on other replicas.
+
+The replicas are fully independent — no collective ties them together —
+so this is serving data parallelism in the MaxText/vLLM sense: aggregate
+throughput scales with replica count while each request's tokens stay
+bit-identical to a single-engine (or single-device) run of the same
+config, which the sharded-serving tests assert.
+
+One reproducibility caveat: a request's default sampling-key id is its
+session-LOCAL rid, and routing changes which local rid a request gets.
+Greedy requests are unaffected; for sampled decoding that must be
+bit-reproducible across topologies (1 engine vs N replicas), pin
+``Request.seed`` explicitly — the tests do.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.engine import FinishEvent, ServeEngine, ServeResult
+
+_POLICIES = ("least_loaded", "round_robin")
+
+
+class ReplicaRouter:
+    def __init__(self, engines: Sequence[ServeEngine],
+                 policy: str = "least_loaded"):
+        if not engines:
+            raise ValueError("ReplicaRouter needs at least one engine")
+        if policy not in _POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"expected one of {_POLICIES}")
+        self.engines: List[ServeEngine] = list(engines)
+        self.policy = policy
+        self._rr_next = 0                       # round_robin cursor
+        self._next_gid = 0
+        # gid -> (replica index, replica-local rid), and the inverse
+        self._map: Dict[int, Tuple[int, int]] = {}
+        self._rev: Dict[Tuple[int, int], int] = {}
+        self.last_results: Optional[List[ServeResult]] = None
+        self.last_serve_stats: Optional[dict] = None
+
+    # ------------------------------------------------------------- routing
+
+    def loads(self) -> List[int]:
+        """Per-replica routing load (active slots + queue depth)."""
+        return [eng.load() for eng in self.engines]
+
+    def _pick(self) -> int:
+        if self.policy == "round_robin":
+            i = self._rr_next % len(self.engines)
+            self._rr_next += 1
+            return i
+        loads = self.loads()
+        return int(np.argmin(loads))    # ties -> lowest index: deterministic
+
+    def submit(self, request, max_new: int = 32,
+               strict: Optional[bool] = None) -> int:
+        """Route one request to a replica; returns the GLOBAL rid."""
+        i = self._pick()
+        # a fresh router session starts when every replica has drained
+        # (mirrors the engines' own rid restart on a drained session)
+        if not self._pending():
+            self._map.clear()
+            self._rev.clear()
+            self._next_gid = 0
+        lrid = self.engines[i].submit(request, max_new=max_new,
+                                      strict=strict)
+        gid = self._next_gid
+        self._next_gid += 1
+        self._map[gid] = (i, lrid)
+        self._rev[(i, lrid)] = gid
+        return gid
+
+    # -------------------------------------------------------------- stream
+
+    def _pending(self) -> bool:
+        return any(e._st is not None and not e._st.drained
+                   for e in self.engines)
+
+    def _remap(self, i: int, ev):
+        gid = self._rev[(i, ev.rid)]
+        if isinstance(ev, FinishEvent):
+            return FinishEvent(gid, dataclasses.replace(ev.result, rid=gid))
+        return ev._replace(rid=gid)
+
+    def serve_stream(self, strict: Optional[bool] = None) -> Iterator:
+        """Merged event stream over every replica with live work.
+
+        Single-threaded deterministic merge: each round visits replicas
+        in index order and takes at most one event from each live
+        stream, so no replica can starve another and the interleaving is
+        reproducible for a fixed traffic history.  Submissions made
+        between iterations are routed into (possibly new) replica
+        sessions and picked up on the next round.  When every replica
+        drains, per-replica ``last_serve_stats`` are merged (counters
+        summed, latency lists concatenated) into the router's."""
+        iters: List[Optional[Iterator]] = [None] * len(self.engines)
+        while True:
+            progressed = False
+            for i, eng in enumerate(self.engines):
+                if iters[i] is None:
+                    if eng._st is not None and not eng._st.drained:
+                        iters[i] = eng.serve_stream(strict=strict)
+                    else:
+                        continue
+                try:
+                    ev = next(iters[i])
+                except StopIteration:
+                    iters[i] = None
+                    continue
+                progressed = True
+                yield self._remap(i, ev)
+            if not progressed and not self._pending():
+                break
+        self._merge_stats()
+
+    def serve(self, requests: Sequence, max_new: int = 32,
+              strict: Optional[bool] = None) -> List[np.ndarray]:
+        """Route + drain a whole batch; outputs in submission order.
+
+        The single-engine contract, preserved: partial outputs for shed /
+        faulted / expired requests, ``last_results`` per-request records
+        (rids are router-global), ``last_serve_stats`` merged counters."""
+        gids = [self.submit(r, max_new=max_new, strict=strict)
+                for r in requests]
+        results: Dict[int, ServeResult] = {}
+        for ev in self.serve_stream(strict=strict):
+            if isinstance(ev, FinishEvent):
+                results[ev.rid] = ev.result
+        self.last_results = [results[g] for g in gids]
+        return [np.asarray(results[g].tokens, np.int32) for g in gids]
+
+    # --------------------------------------------------------------- misc
+
+    def warmup(self, **kw) -> List[Dict[str, int]]:
+        """AOT-warm every replica (see :meth:`ServeEngine.warmup`)."""
+        return [eng.warmup(**kw) for eng in self.engines]
+
+    def executable_counts(self) -> List[Dict[str, int]]:
+        return [eng.executable_counts() for eng in self.engines]
+
+    def steady_layout_violations(self) -> List[str]:
+        out: List[str] = []
+        for i, eng in enumerate(self.engines):
+            out += [f"replica{i}:{v}"
+                    for v in eng.steady_layout_violations()]
+        return out
+
+    def _merge_stats(self) -> None:
+        per = [e.last_serve_stats for e in self.engines
+               if e.last_serve_stats is not None]
+        if not per:
+            return
+        merged: dict = {"replicas": len(self.engines),
+                        "per_replica": per}
+        for st in per:
+            for k, v in st.items():
+                if isinstance(v, collections.Counter):
+                    merged[k] = merged.get(k, collections.Counter()) + v
+                elif isinstance(v, (int, float)) and not isinstance(v, bool):
+                    merged[k] = merged.get(k, 0) + v
+                elif isinstance(v, list):
+                    merged[k] = merged.get(k, []) + v
+                else:          # strings / bools (kv_layout, packed_prefill)
+                    merged.setdefault(k, v)
+        self.last_serve_stats = merged
